@@ -1,0 +1,55 @@
+//! Fig 15 (scaled): ResNet accuracy — SEQ vs HF-MP(2) vs HF-MP(8).
+//! The paper trains ResNet-110-v1 for 150 epochs on CIFAR-10 and shows
+//! every variant peaking at the same 92.5%; the claim being verified is
+//! that model-parallel training *is* sequential training. This scaled run
+//! uses ResNet-56-v1 (same architecture family, same code path) on the
+//! synthetic set and asserts the three variants' loss histories are
+//! IDENTICAL, then reports the shared accuracy trajectory.
+//!
+//!     cargo run --release --example fig15_resnet_accuracy [steps]
+
+use hyparflow::api::{fit, Strategy, TrainConfig};
+use hyparflow::graph::zoo;
+
+fn main() -> anyhow::Result<()> {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+
+    let cfg = |s: Strategy, p: usize| {
+        TrainConfig::new(zoo::resnet56_v1(), s)
+            .partitions(p)
+            .microbatch(8)
+            .steps(steps)
+            .lr(0.02)
+            .seed(15)
+            .eval_batches(8)
+    };
+
+    println!("fig15 (scaled): ResNet-56-v1, BS=32-equivalent, {steps} steps");
+    println!("running SEQ...");
+    let seq = fit(&cfg(Strategy::Sequential, 1))?;
+    println!("running HF-MP(2)...");
+    let mp2 = fit(&cfg(Strategy::Model, 2))?;
+    println!("running HF-MP(8)...");
+    let mp8 = fit(&cfg(Strategy::Model, 8))?;
+
+    println!("\n step | SEQ loss | MP2 loss | MP8 loss | acc");
+    for i in 0..steps {
+        let (a, b, c) = (&seq.history[i], &mp2.history[i], &mp8.history[i]);
+        if i % 5 == 0 || i + 1 == steps {
+            println!(
+                "{:>5} | {:>8.4} | {:>8.4} | {:>8.4} | {:.3}",
+                i + 1, a.loss, b.loss, c.loss, a.accuracy
+            );
+        }
+        assert_eq!(a.loss, b.loss, "MP(2) diverged from SEQ at step {}", i + 1);
+        assert_eq!(a.loss, c.loss, "MP(8) diverged from SEQ at step {}", i + 1);
+    }
+    let e = seq.eval.unwrap();
+    println!("\ntest: loss={:.4} acc={:.3} (chance = 0.100)", e.loss, e.accuracy);
+    println!("OK: all variants produced identical training trajectories (paper Fig 15's 'all peak at the same accuracy', made exact)");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: the paper's Listing 2 in Rust — train a Keras-style model
+//! with a one-line strategy switch and zero model changes.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires artifacts: `make artifacts`.
+
+use hyparflow::api::{fit, Strategy, TrainConfig};
+use hyparflow::graph::zoo;
+
+fn main() -> anyhow::Result<()> {
+    std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+
+    // 1. Define (or pick) a model — no parallelism anywhere in it.
+    let model = zoo::resnet20_v1();
+    println!("{:?}", &model.name);
+    println!(
+        "model: {} weight layers, {} params",
+        model.num_weight_layers(),
+        model.num_params()
+    );
+
+    // 2. Train it hybrid-parallel: 2 model-partitions x 2 replicas.
+    //    (the paper's four inputs: model, partitions, replicas, strategy)
+    let cfg = TrainConfig::new(model, Strategy::Hybrid)
+        .partitions(2)
+        .replicas(2)
+        .microbatch(8)
+        .steps(12)
+        .lr(0.02)
+        .log_every(3)
+        .eval_batches(4);
+    let result = fit(&cfg)?;
+
+    println!(
+        "\nfinal loss {:.4}, eval acc {:.3}, {:.1} img/s across 4 ranks",
+        result.final_loss(),
+        result.eval.as_ref().map(|e| e.accuracy).unwrap_or(0.0),
+        result.img_per_sec
+    );
+
+    // 3. Same model, different strategy — nothing else changes.
+    let seq = fit(&TrainConfig::new(zoo::resnet20_v1(), Strategy::Sequential)
+        .microbatch(8)
+        .steps(3)
+        .lr(0.02))?;
+    println!("sequential sanity: loss {:.4}", seq.final_loss());
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""L1 — the Pallas hot-spot kernel: tiled matmul + bias + activation.
+
+Every FLOP-heavy primitive in the L2 layer library (dense layers and im2col
+convolutions, forward *and* backward) funnels through this kernel, so the
+DNN hot path lowers through Pallas into the exported HLO.
+
+Design (TPU-shaped, run under interpret=True for CPU-PJRT):
+  - Grid over (M/bm, N/bn) output tiles; the full K dimension is resident in
+    VMEM per tile. For this workload K = C*kh*kw <= 4608 (ResNet/VGG im2col)
+    or the MLP hidden width, so the working set per tile
+      bm*K + K*bn + bm*bn floats
+    stays well under a TPU core's ~16 MiB VMEM (see DESIGN.md §Perf for the
+    footprint table). This trades a K-loop + accumulator scratch for a single
+    fused multiply, which keeps the MXU pipeline busy with one
+    (bm x K) @ (K x bn) contraction per grid step.
+  - Block sizes default to (bm, bn) = (128, 128): multiples of the (8, 128)
+    f32 lane tile and the 128x128 MXU systolic array.
+  - Inputs are zero-padded up to block multiples by the wrapper; the output
+    is sliced back. This keeps the kernel branch-free (no masking).
+  - fp32 accumulate; `act` fuses the epilogue (none / relu) so conv+relu and
+    dense+relu never materialize the pre-activation in HBM.
+
+Interpret mode note: real-TPU lowering emits a Mosaic custom-call that the
+CPU PJRT plugin cannot execute, so pallas_call(..., interpret=True) is
+mandatory here (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output-tile block sizes: MXU-aligned.
+BLOCK_M = 128
+BLOCK_N = 128
+
+VALID_ACTS = ("none", "relu")
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    """One (bm, bn) output tile: y = act(x @ w + b)."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn"))
+def matmul_bias_act(x, w, b, *, act="none", bm=BLOCK_M, bn=BLOCK_N):
+    """y = act(x @ w + b) with x:[M,K], w:[K,N], b:[N] -> y:[M,N] (f32).
+
+    The Pallas grid covers the padded output; padding is sliced off before
+    returning, so arbitrary M/K/N are accepted.
+    """
+    assert act in VALID_ACTS, f"act must be one of {VALID_ACTS}, got {act!r}"
+    assert x.ndim == 2 and w.ndim == 2 and b.ndim == 1
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    assert b.shape[0] == n, f"bias {b.shape} vs N={n}"
+
+    # Shrink blocks for small problems so tiny shapes don't pad 128x.
+    bm_eff = min(bm, max(8, 1 << (max(m - 1, 1)).bit_length()))
+    bn_eff = min(bn, max(8, 1 << (max(n - 1, 1)).bit_length()))
+
+    xp = _pad_to(x.astype(jnp.float32), 0, bm_eff)
+    wp = _pad_to(w.astype(jnp.float32), 1, bn_eff)
+    bp = _pad_to(b.astype(jnp.float32), 0, bn_eff)
+    mp, np_ = xp.shape[0], wp.shape[1]
+
+    grid = (mp // bm_eff, np_ // bn_eff)
+    out = pl.pallas_call(
+        functools.partial(_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_eff, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn_eff), lambda i, j: (0, j)),
+            pl.BlockSpec((bn_eff,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_eff, bn_eff), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def matmul(x, w, *, bm=BLOCK_M, bn=BLOCK_N):
+    """Plain x @ w through the fused kernel (zero bias, no activation)."""
+    b = jnp.zeros((w.shape[1],), jnp.float32)
+    return matmul_bias_act(x, w, b, act="none", bm=bm, bn=bn)
+
+
+def vmem_footprint_bytes(m, k, n, *, bm=BLOCK_M, bn=BLOCK_N):
+    """Estimated VMEM bytes for one grid step (f32): x-tile + w-tile + out.
+
+    Used by DESIGN.md §Perf / the block-shape sweep to pick (bm, bn) that fit
+    a TPU core's ~16 MiB VMEM with double buffering (2x on the input tiles).
+    """
+    bm = min(bm, m)
+    bn = min(bn, n)
+    x_tile = bm * k * 4
+    w_tile = k * bn * 4
+    o_tile = bm * bn * 4
+    b_tile = bn * 4
+    return 2 * (x_tile + w_tile + b_tile) + o_tile
+
+
+def mxu_utilization_estimate(m, k, n, *, bm=BLOCK_M, bn=BLOCK_N):
+    """Fraction of MXU issue slots doing useful work for the padded problem.
+
+    The padded grid does ceil(M/bm)*ceil(N/bn)*bm*bn*K MACs; the useful work
+    is M*N*K. Padding waste is the only inefficiency modeled (interpret mode
+    gives no real timing).
+    """
+    gm = -(-m // bm) * bm
+    gn = -(-n // bn) * bn
+    return (m * n) / (gm * gn)

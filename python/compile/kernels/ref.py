@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernel and every L2 primitive.
+
+These are the correctness ground truth: pytest asserts the Pallas kernel and
+the exported primitives against these implementations (which never touch
+Pallas), and the Rust integration tests re-check a frozen subset of the same
+numbers end-to-end through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act(x, w, b, act="none"):
+    y = x @ w + b[None, :]
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def conv2d(x, w, stride=1):
+    """NCHW conv, SAME padding (odd kernels). x:[N,C,H,W], w:[K,C,kh,kw]."""
+    kh, kw = w.shape[2], w.shape[3]
+    pad = ((kh // 2, kh // 2), (kw // 2, kw // 2))
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=pad,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def batchnorm(x, gamma, beta, eps=1e-5):
+    """Train-mode BN over (N, H, W) per channel. x:[N,C,H,W]."""
+    mean = jnp.mean(x, axis=(0, 2, 3), keepdims=True)
+    var = jnp.var(x, axis=(0, 2, 3), keepdims=True)
+    xhat = (x - mean) / jnp.sqrt(var + eps)
+    return xhat * gamma[None, :, None, None] + beta[None, :, None, None]
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def maxpool2(x):
+    """2x2 max pool, stride 2. x:[N,C,H,W] with even H, W."""
+    n, c, h, w = x.shape
+    x = x.reshape(n, c, h // 2, 2, w // 2, 2)
+    return x.max(axis=(3, 5))
+
+
+def gap(x):
+    """Global average pool: [N,C,H,W] -> [N,C]."""
+    return jnp.mean(x, axis=(2, 3))
+
+
+def dense(x, w, b):
+    return x @ w + b[None, :]
+
+
+def softmax_xent(logits, y_onehot):
+    """Mean softmax cross-entropy. Returns (scalar loss, dloss/dlogits)."""
+    lse = jax.scipy.special.logsumexp(logits, axis=1, keepdims=True)
+    logp = logits - lse
+    loss = -jnp.mean(jnp.sum(y_onehot * logp, axis=1))
+    probs = jnp.exp(logp)
+    glogits = (probs - y_onehot) / logits.shape[0]
+    return loss, glogits

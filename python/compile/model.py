@@ -1,0 +1,356 @@
+"""L2 — the layer-primitive library: JAX forward and explicit-VJP backward
+functions for every DNN layer type the Rust coordinator composes at runtime.
+
+Each primitive `p` exports two pure functions:
+
+    p_fwd(params..., x)      -> y (or a tuple)
+    p_bwd(params..., x, gy)  -> (gx, gparams...)
+
+The backward functions implement the paper's *partial error* contract
+(HyPar-Flow §6.2, Eq. 5-6): they take the upstream partial error `gy` —
+exactly what `tape.gradient(..., output_gradients=errors)` consumed in the
+TF implementation — and return the partial error `gx` to forward to the
+preceding model-partition plus the local parameter gradients.
+
+All FLOP-heavy contractions (dense, im2col conv, and their backward
+matmuls) route through the L1 Pallas kernel
+(`kernels.matmul_fused.matmul_bias_act`), so the hot path lowers through
+Pallas into the exported HLO. Cheap elementwise/reduction ops (BN, ReLU,
+pooling, loss) are plain jnp; their backward passes either use `jax.vjp`
+(legal: no Pallas inside) or closed forms.
+
+Residual policy: backward recomputes what it needs from (params, x) instead
+of shipping residual tensors across the Rust<->HLO boundary. This keeps every
+artifact's signature uniform and the Rust-side state machine trivial; the
+recompute cost is one BN-normalize or one patch-extraction, never a full
+conv.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_fused as mk
+from .kernels import ref
+
+BN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# im2col helpers
+# ---------------------------------------------------------------------------
+
+def _same_pad(kh, kw):
+    return [(kh // 2, kh // 2), (kw // 2, kw // 2)]
+
+
+def _patches(x, kh, kw, stride):
+    """x:[N,C,H,W] -> patches [N, C*kh*kw, H', W'] (OIHW-flatten ordering)."""
+    return jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), _same_pad(kh, kw),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def _nchw_to_mat(t):
+    """[N,F,H,W] -> [N*H*W, F]."""
+    n, f, h, w = t.shape
+    return t.transpose(0, 2, 3, 1).reshape(n * h * w, f)
+
+
+def _mat_to_nchw(m, n, h, w):
+    """[N*H*W, F] -> [N,F,H,W]."""
+    f = m.shape[1]
+    return m.reshape(n, h, w, f).transpose(0, 3, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# conv2d (SAME padding, square odd kernel) — the hot spot
+# ---------------------------------------------------------------------------
+
+def conv2d_fwd(x, w, *, stride=1):
+    """x:[N,C,H,W], w:[K,C,kh,kw] -> y:[N,K,H/s,W/s] via im2col + Pallas."""
+    k, c, kh, kw = w.shape
+    p = _patches(x, kh, kw, stride)            # [N, F, H', W']
+    n, f, ho, wo = p.shape
+    pmat = _nchw_to_mat(p)                     # [N*H'*W', F]
+    wmat = w.reshape(k, f).T                   # [F, K]
+    ymat = mk.matmul(pmat, wmat)               # Pallas
+    return _mat_to_nchw(ymat, n, ho, wo)
+
+
+def conv2d_bwd(x, w, gy, *, stride=1):
+    """Returns (gx, gw). Both backward contractions go through Pallas."""
+    k, c, kh, kw = w.shape
+    n = x.shape[0]
+    _, _, ho, wo = gy.shape
+    f = c * kh * kw
+
+    def extract(xx):
+        return _patches(xx, kh, kw, stride)
+
+    p, vjp_p = jax.vjp(extract, x)             # patch extraction is pure XLA
+    pmat = _nchw_to_mat(p)                     # [M, F], M = N*H'*W'
+    gymat = _nchw_to_mat(gy)                   # [M, K]
+
+    # gw = pmat^T @ gymat : [F, K] -> reshape to [K, C, kh, kw]
+    gwmat = mk.matmul(pmat.T, gymat)           # Pallas
+    gw = gwmat.T.reshape(k, c, kh, kw)
+
+    # gpatches = gymat @ wmat^T : [M, F] -> col2im via vjp of extraction
+    wmat = w.reshape(k, f)                     # [K, F]
+    gpmat = mk.matmul(gymat, wmat)             # Pallas: [M,K]@[K,F]
+    gp = _mat_to_nchw(gpmat, n, ho, wo)
+    (gx,) = vjp_p(gp)
+    return gx, gw
+
+
+# ---------------------------------------------------------------------------
+# batchnorm (train mode, batch statistics)
+# ---------------------------------------------------------------------------
+
+def bn_fwd(x, gamma, beta):
+    return ref.batchnorm(x, gamma, beta, eps=BN_EPS)
+
+
+def bn_bwd(x, gamma, gy):
+    """(gx, ggamma, gbeta) via jax.vjp of the pure-jnp forward."""
+    def f(xx, g, b):
+        return ref.batchnorm(xx, g, b, eps=BN_EPS)
+
+    beta = jnp.zeros_like(gamma)               # beta does not affect gx/ggamma
+    _, vjp = jax.vjp(f, x, gamma, beta)
+    gx, ggamma, gbeta = vjp(gy)
+    return gx, ggamma, gbeta
+
+
+# ---------------------------------------------------------------------------
+# relu
+# ---------------------------------------------------------------------------
+
+def relu_fwd(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu_bwd(x, gy):
+    return jnp.where(x > 0, gy, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# 2x2 max pooling (VGG)
+# ---------------------------------------------------------------------------
+
+def maxpool2_fwd(x):
+    return ref.maxpool2(x)
+
+
+def maxpool2_bwd(x, gy):
+    _, vjp = jax.vjp(ref.maxpool2, x)
+    (gx,) = vjp(gy)
+    return gx
+
+
+# ---------------------------------------------------------------------------
+# global average pool
+# ---------------------------------------------------------------------------
+
+def gap_fwd(x):
+    return ref.gap(x)
+
+
+def gap_bwd(gy, h, w):
+    """gx from gy alone — the input is only needed for its (static) shape,
+    so the artifact takes just gy (JAX lowering DCEs unused args, which
+    would desync the manifest; aot.py asserts against that)."""
+    n, c = gy.shape
+    return jnp.broadcast_to(gy[:, :, None, None], (n, c, h, w)) / (h * w)
+
+
+# ---------------------------------------------------------------------------
+# dense (+bias)
+# ---------------------------------------------------------------------------
+
+def dense_fwd(x, w, b):
+    return mk.matmul_bias_act(x, w, b, act="none")
+
+
+def dense_relu_fwd(x, w, b):
+    """Fused dense+ReLU (single Pallas launch with relu epilogue)."""
+    return mk.matmul_bias_act(x, w, b, act="relu")
+
+
+def dense_bwd(x, w, gy):
+    gw = mk.matmul(x.T, gy)                    # [D,N]@[N,M]
+    gx = mk.matmul(gy, w.T)                    # [N,M]@[M,D]
+    gb = jnp.sum(gy, axis=0)
+    return gx, gw, gb
+
+
+def dense_relu_bwd(x, w, b, gy):
+    """Backward of fused dense+ReLU (recomputes the pre-activation mask)."""
+    y = mk.matmul_bias_act(x, w, b, act="none")
+    g = jnp.where(y > 0, gy, 0.0)
+    return dense_bwd(x, w, g)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy: loss and glogits in one artifact
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, y_onehot):
+    return ref.softmax_xent(logits, y_onehot)
+
+
+# ---------------------------------------------------------------------------
+# fused conv3x3 + BN + ReLU (perf variant; used by the optimized engine path)
+# ---------------------------------------------------------------------------
+
+def conv_bn_relu_fwd(x, w, gamma, beta, *, stride=1):
+    y = conv2d_fwd(x, w, stride=stride)
+    z = bn_fwd(y, gamma, beta)
+    return jnp.maximum(z, 0.0)
+
+
+def conv_bn_relu_bwd(x, w, gamma, beta, gy, *, stride=1):
+    """(gx, gw, ggamma, gbeta) — recomputes y and z, chains explicit bwds."""
+    y = conv2d_fwd(x, w, stride=stride)
+    z = bn_fwd(y, gamma, beta)
+    gz = jnp.where(z > 0, gy, 0.0)
+    gyy, ggamma, gbeta = bn_bwd(y, gamma, gz)
+    gx, gw = conv2d_bwd(x, w, gyy, stride=stride)
+    return gx, gw, ggamma, gbeta
+
+
+# ---------------------------------------------------------------------------
+# Primitive catalog: name -> (builder of (fn, arg_specs)).
+#
+# Instance grammar (one per line in the registry):
+#   conv3x3   n c k h w s     conv1x1   n c k h w s
+#   convbnrelu n c k h w s    bn        n c h w
+#   relu4     n c h w         relu2     n d
+#   maxpool2  n c h w         gap       n c h w
+#   dense     n d m           denserelu n d m
+#   softmaxxent n c
+# Each instance expands to <name>.fwd and <name>.bwd artifacts
+# (softmaxxent has only fwd: it already returns (loss, glogits)).
+# ---------------------------------------------------------------------------
+
+F32 = jnp.float32
+
+
+def _s(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), F32)
+
+
+def _conv_specs(p, kk):
+    n, c, k, h, w, s = p["n"], p["c"], p["k"], p["h"], p["w"], p["s"]
+    ho, wo = -(-h // s), -(-w // s)
+    x, wt, gy = _s(n, c, h, w), _s(k, c, kk, kk), _s(n, k, ho, wo)
+    return x, wt, gy
+
+
+def instance(prim, p):
+    """Return list of (suffix, fn, arg_specs) for one registry instance."""
+    if prim in ("conv3x3", "conv1x1"):
+        kk = 3 if prim == "conv3x3" else 1
+        x, w, gy = _conv_specs(p, kk)
+        s = p["s"]
+        return [
+            ("fwd", lambda x, w: (conv2d_fwd(x, w, stride=s),), [x, w]),
+            ("bwd", lambda x, w, gy: conv2d_bwd(x, w, gy, stride=s), [x, w, gy]),
+        ]
+    if prim == "convbnrelu":
+        x, w, gy = _conv_specs(p, 3)
+        s = p["s"]
+        g = _s(p["k"])
+        return [
+            ("fwd", lambda x, w, ga, be: (conv_bn_relu_fwd(x, w, ga, be, stride=s),),
+             [x, w, g, g]),
+            ("bwd", lambda x, w, ga, be, gy: conv_bn_relu_bwd(x, w, ga, be, gy, stride=s),
+             [x, w, g, g, gy]),
+        ]
+    if prim == "bn":
+        n, c, h, w = p["n"], p["c"], p["h"], p["w"]
+        x, g = _s(n, c, h, w), _s(c)
+        return [
+            ("fwd", lambda x, ga, be: (bn_fwd(x, ga, be),), [x, g, g]),
+            ("bwd", lambda x, ga, gy: bn_bwd(x, ga, gy), [x, g, x]),
+        ]
+    if prim == "relu4":
+        x = _s(p["n"], p["c"], p["h"], p["w"])
+        return [
+            ("fwd", lambda x: (relu_fwd(x),), [x]),
+            ("bwd", lambda x, gy: (relu_bwd(x, gy),), [x, x]),
+        ]
+    if prim == "relu2":
+        x = _s(p["n"], p["d"])
+        return [
+            ("fwd", lambda x: (relu_fwd(x),), [x]),
+            ("bwd", lambda x, gy: (relu_bwd(x, gy),), [x, x]),
+        ]
+    if prim == "maxpool2":
+        n, c, h, w = p["n"], p["c"], p["h"], p["w"]
+        x, gy = _s(n, c, h, w), _s(n, c, h // 2, w // 2)
+        return [
+            ("fwd", lambda x: (maxpool2_fwd(x),), [x]),
+            ("bwd", lambda x, gy: (maxpool2_bwd(x, gy),), [x, gy]),
+        ]
+    if prim == "gap":
+        n, c, h, w = p["n"], p["c"], p["h"], p["w"]
+        x, gy = _s(n, c, h, w), _s(n, c)
+        return [
+            ("fwd", lambda x: (gap_fwd(x),), [x]),
+            ("bwd", lambda gy: (gap_bwd(gy, h, w),), [gy]),
+        ]
+    if prim in ("dense", "denserelu"):
+        n, d, m = p["n"], p["d"], p["m"]
+        x, w, b, gy = _s(n, d), _s(d, m), _s(m), _s(n, m)
+        if prim == "dense":
+            return [
+                ("fwd", lambda x, w, b: (dense_fwd(x, w, b),), [x, w, b]),
+                ("bwd", lambda x, w, gy: dense_bwd(x, w, gy), [x, w, gy]),
+            ]
+        return [
+            ("fwd", lambda x, w, b: (dense_relu_fwd(x, w, b),), [x, w, b]),
+            ("bwd", lambda x, w, b, gy: dense_relu_bwd(x, w, b, gy), [x, w, b, gy]),
+        ]
+    if prim == "softmaxxent":
+        n, c = p["n"], p["c"]
+        x, y = _s(n, c), _s(n, c)
+        return [("fwd", lambda l, y: softmax_xent(l, y), [x, y])]
+    raise ValueError(f"unknown primitive {prim!r}")
+
+
+#: parameter-name order per primitive (registry line format).
+PARAM_ORDER = {
+    "conv3x3": ["n", "c", "k", "h", "w", "s"],
+    "conv1x1": ["n", "c", "k", "h", "w", "s"],
+    "convbnrelu": ["n", "c", "k", "h", "w", "s"],
+    "bn": ["n", "c", "h", "w"],
+    "relu4": ["n", "c", "h", "w"],
+    "relu2": ["n", "d"],
+    "maxpool2": ["n", "c", "h", "w"],
+    "gap": ["n", "c", "h", "w"],
+    "dense": ["n", "d", "m"],
+    "denserelu": ["n", "d", "m"],
+    "softmaxxent": ["n", "c"],
+}
+
+
+def parse_registry_line(line):
+    """'conv3x3 8 16 16 32 32 1' -> ('conv3x3', {...}) or None for blanks."""
+    line = line.split("#", 1)[0].strip()
+    if not line:
+        return None
+    parts = line.split()
+    prim = parts[0]
+    if prim not in PARAM_ORDER:
+        raise ValueError(f"unknown primitive {prim!r} in registry line {line!r}")
+    names = PARAM_ORDER[prim]
+    if len(parts) - 1 != len(names):
+        raise ValueError(
+            f"{prim} expects {len(names)} params {names}, got {parts[1:]} in {line!r}")
+    return prim, dict(zip(names, map(int, parts[1:])))
+
+
+def instance_name(prim, p):
+    """Canonical artifact base name, e.g. conv3x3_n8_c16_k16_h32_w32_s1."""
+    return prim + "".join(f"_{k}{p[k]}" for k in PARAM_ORDER[prim])

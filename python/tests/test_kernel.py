@@ -1,0 +1,108 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+#
+# The Pallas kernel (interpret=True) is swept against the pure-jnp oracle
+# over shapes, including non-block-multiple ragged edges, plus a
+# hypothesis sweep over random (M, K, N, act).
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import matmul_fused as mk
+from compile.kernels import ref
+
+
+def _rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype("float32"))
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1),
+    (2, 3, 4),
+    (8, 8, 8),
+    (128, 64, 128),          # exact block multiple
+    (129, 64, 127),          # ragged both dims
+    (5, 600, 7),             # K larger than any block
+    (256, 27, 16),           # im2col-conv shaped (3x3x3 patches)
+    (1024, 64, 10),          # classifier head shaped
+])
+@pytest.mark.parametrize("act", ["none", "relu"])
+def test_matmul_bias_act_vs_ref(m, k, n, act):
+    x, w, b = _rand((m, k), 0), _rand((k, n), 1), _rand((n,), 2)
+    got = mk.matmul_bias_act(x, w, b, act=act)
+    want = ref.matmul_bias_act(x, w, b, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (32, 16), (128, 128), (256, 64)])
+def test_block_shape_independence(bm, bn):
+    """Result must not depend on the tiling choice."""
+    x, w, b = _rand((70, 33), 3), _rand((33, 50), 4), _rand((50,), 5)
+    got = mk.matmul_bias_act(x, w, b, act="relu", bm=bm, bn=bn)
+    want = ref.matmul_bias_act(x, w, b, act="relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_zero_bias_helper():
+    x, w = _rand((9, 17), 6), _rand((17, 11), 7)
+    np.testing.assert_allclose(np.asarray(mk.matmul(x, w)),
+                               np.asarray(x @ w), rtol=1e-5, atol=1e-5)
+
+
+def test_rejects_bad_act():
+    x, w, b = _rand((2, 2), 0), _rand((2, 2), 1), _rand((2,), 2)
+    with pytest.raises(AssertionError):
+        mk.matmul_bias_act(x, w, b, act="gelu")
+
+
+def test_rejects_shape_mismatch():
+    with pytest.raises(AssertionError):
+        mk.matmul_bias_act(_rand((2, 3), 0), _rand((4, 2), 1), _rand((2,), 2))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_sweep(m, k, n, act, seed):
+    x = _rand((m, k), seed)
+    w = _rand((k, n), seed + 1)
+    b = _rand((n,), seed + 2)
+    got = mk.matmul_bias_act(x, w, b, act=act)
+    want = ref.matmul_bias_act(x, w, b, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_footprint_monotone_in_blocks():
+    small = mk.vmem_footprint_bytes(1024, 576, 64, bm=64, bn=64)
+    big = mk.vmem_footprint_bytes(1024, 576, 64, bm=256, bn=64)
+    assert big > small
+
+
+def test_vmem_footprint_under_budget_for_model_shapes():
+    """Every matmul shape the CIFAR models produce must fit 16 MiB VMEM
+    with the default blocks (documented in DESIGN.md §Perf)."""
+    VMEM = 16 * 1024 * 1024
+    shapes = [
+        (8 * 32 * 32, 27, 16),    # first conv
+        (8 * 32 * 32, 144, 16),   # 16-ch stage
+        (8 * 16 * 16, 288, 32),   # 32-ch stage
+        (8 * 8 * 8, 576, 64),     # 64-ch stage
+        (8, 64, 10),              # head
+        (16, 4096, 4096),         # e2e wide MLP
+    ]
+    for m, k, n in shapes:
+        assert mk.vmem_footprint_bytes(m, k, n) < VMEM, (m, k, n)
+
+
+def test_mxu_utilization_estimate():
+    assert mk.mxu_utilization_estimate(128, 64, 128) == 1.0
+    assert mk.mxu_utilization_estimate(129, 64, 128) < 0.6

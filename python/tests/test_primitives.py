@@ -1,0 +1,212 @@
+# pytest: every L2 primitive's explicit backward vs jax.grad of the pure-jnp
+# reference composition. This is what guarantees the Rust coordinator's
+# distributed back-propagation (which chains these artifacts) computes the
+# same gradients TensorFlow's GradientTape would have.
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype("float32"))
+
+
+def _close(a, b, tol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,c,k,h,w,kk,s", [
+    (2, 3, 4, 8, 8, 3, 1),
+    (2, 3, 4, 8, 8, 3, 2),
+    (1, 16, 32, 16, 16, 3, 2),
+    (2, 4, 8, 8, 8, 1, 1),
+    (2, 4, 8, 8, 8, 1, 2),
+    (3, 5, 7, 6, 6, 3, 1),   # odd sizes
+])
+def test_conv2d_fwd_vs_ref(n, c, k, h, w, kk, s):
+    x, wt = _rand((n, c, h, w), 0), _rand((k, c, kk, kk), 1)
+    _close(model.conv2d_fwd(x, wt, stride=s), ref.conv2d(x, wt, stride=s))
+
+
+@pytest.mark.parametrize("n,c,k,h,w,kk,s", [
+    (2, 3, 4, 8, 8, 3, 1),
+    (2, 3, 4, 8, 8, 3, 2),
+    (2, 4, 8, 8, 8, 1, 2),
+])
+def test_conv2d_bwd_vs_autodiff(n, c, k, h, w, kk, s):
+    x, wt = _rand((n, c, h, w), 2), _rand((k, c, kk, kk), 3)
+    gy = _rand(model.conv2d_fwd(x, wt, stride=s).shape, 4)
+
+    def f(xx, ww):
+        return jnp.sum(ref.conv2d(xx, ww, stride=s) * gy)
+
+    want_gx, want_gw = jax.grad(f, argnums=(0, 1))(x, wt)
+    got_gx, got_gw = model.conv2d_bwd(x, wt, gy, stride=s)
+    _close(got_gx, want_gx)
+    _close(got_gw, want_gw)
+
+
+# ---------------------------------------------------------------------------
+# batchnorm
+# ---------------------------------------------------------------------------
+
+def test_bn_fwd_normalizes():
+    x = _rand((4, 3, 8, 8), 5) * 3.0 + 2.0
+    y = model.bn_fwd(x, jnp.ones(3), jnp.zeros(3))
+    m = np.asarray(y).mean(axis=(0, 2, 3))
+    v = np.asarray(y).var(axis=(0, 2, 3))
+    assert np.abs(m).max() < 1e-5
+    assert np.abs(v - 1.0).max() < 1e-2
+
+
+def test_bn_bwd_vs_autodiff():
+    x, gamma = _rand((4, 3, 8, 8), 6), _rand((3,), 7)
+    beta = _rand((3,), 8)
+    gy = _rand((4, 3, 8, 8), 9)
+
+    def f(xx, g, b):
+        return jnp.sum(ref.batchnorm(xx, g, b) * gy)
+
+    want = jax.grad(f, argnums=(0, 1, 2))(x, gamma, beta)
+    got = model.bn_bwd(x, gamma, gy)
+    for g, w in zip(got, want):
+        _close(g, w)
+
+
+# ---------------------------------------------------------------------------
+# relu / pooling / gap
+# ---------------------------------------------------------------------------
+
+def test_relu_bwd_masks():
+    x = jnp.asarray([[-1.0, 2.0], [0.0, -3.0]])
+    gy = jnp.ones((2, 2))
+    got = model.relu_bwd(x, gy)
+    assert np.array_equal(np.asarray(got), [[0, 1], [0, 0]])
+
+
+def test_maxpool2_fwd_bwd_vs_autodiff():
+    x = _rand((2, 3, 8, 8), 10)
+    gy = _rand((2, 3, 4, 4), 11)
+    _close(model.maxpool2_fwd(x), ref.maxpool2(x))
+    want = jax.grad(lambda xx: jnp.sum(ref.maxpool2(xx) * gy))(x)
+    _close(model.maxpool2_bwd(x, gy), want)
+
+
+def test_gap_fwd_bwd_vs_autodiff():
+    x = _rand((2, 5, 4, 4), 12)
+    gy = _rand((2, 5), 13)
+    _close(model.gap_fwd(x), ref.gap(x))
+    want = jax.grad(lambda xx: jnp.sum(ref.gap(xx) * gy))(x)
+    _close(model.gap_bwd(gy, 4, 4), want)
+
+
+# ---------------------------------------------------------------------------
+# dense (+fused relu)
+# ---------------------------------------------------------------------------
+
+def test_dense_fwd_bwd_vs_autodiff():
+    x, w, b = _rand((4, 7), 14), _rand((7, 5), 15), _rand((5,), 16)
+    gy = _rand((4, 5), 17)
+    _close(model.dense_fwd(x, w, b), ref.dense(x, w, b))
+    want = jax.grad(lambda xx, ww, bb: jnp.sum(ref.dense(xx, ww, bb) * gy),
+                    argnums=(0, 1, 2))(x, w, b)
+    got = model.dense_bwd(x, w, gy)
+    _close(got[0], want[0])
+    _close(got[1], want[1])
+    _close(got[2], want[2])
+
+
+def test_dense_relu_fused_vs_composition():
+    x, w, b = _rand((4, 7), 18), _rand((7, 5), 19), _rand((5,), 20)
+    gy = _rand((4, 5), 21)
+    _close(model.dense_relu_fwd(x, w, b), ref.relu(ref.dense(x, w, b)))
+    want = jax.grad(
+        lambda xx, ww, bb: jnp.sum(ref.relu(ref.dense(xx, ww, bb)) * gy),
+        argnums=(0, 1, 2))(x, w, b)
+    got = model.dense_relu_bwd(x, w, b, gy)
+    for g, wv in zip(got, want):
+        _close(g, wv)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+def test_softmax_xent_loss_and_grad():
+    logits = _rand((6, 10), 22)
+    labels = np.zeros((6, 10), dtype="float32")
+    labels[np.arange(6), np.arange(6) % 10] = 1.0
+    y = jnp.asarray(labels)
+    loss, glogits = model.softmax_xent(logits, y)
+    want_loss = -np.mean(
+        np.sum(np.asarray(y) * np.log(jax.nn.softmax(logits, axis=1)), axis=1))
+    _close(loss, want_loss)
+    want_g = jax.grad(
+        lambda l: -jnp.mean(jnp.sum(y * jax.nn.log_softmax(l, axis=1), axis=1))
+    )(logits)
+    _close(glogits, want_g)
+
+
+def test_softmax_xent_uniform_is_log_c():
+    logits = jnp.zeros((4, 10))
+    y = jnp.eye(10)[:4]
+    loss, _ = model.softmax_xent(logits, y)
+    _close(loss, np.log(10.0), tol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused conv+bn+relu (perf path) vs the three-op composition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", [1, 2])
+def test_conv_bn_relu_fused_fwd(s):
+    x, w = _rand((2, 3, 8, 8), 23), _rand((4, 3, 3, 3), 24)
+    gamma, beta = _rand((4,), 25), _rand((4,), 26)
+    got = model.conv_bn_relu_fwd(x, w, gamma, beta, stride=s)
+    want = ref.relu(ref.batchnorm(ref.conv2d(x, w, stride=s), gamma, beta))
+    _close(got, want)
+
+
+@pytest.mark.parametrize("s", [1, 2])
+def test_conv_bn_relu_fused_bwd(s):
+    x, w = _rand((2, 3, 8, 8), 27), _rand((4, 3, 3, 3), 28)
+    gamma, beta = _rand((4,), 29), _rand((4,), 30)
+    gy = _rand(model.conv_bn_relu_fwd(x, w, gamma, beta, stride=s).shape, 31)
+
+    def f(xx, ww, g, b):
+        return jnp.sum(ref.relu(ref.batchnorm(ref.conv2d(xx, ww, stride=s), g, b)) * gy)
+
+    want = jax.grad(f, argnums=(0, 1, 2, 3))(x, w, gamma, beta)
+    got = model.conv_bn_relu_bwd(x, w, gamma, beta, gy, stride=s)
+    for g, wv in zip(got, want):
+        _close(g, wv)
+
+
+# ---------------------------------------------------------------------------
+# registry grammar
+# ---------------------------------------------------------------------------
+
+def test_parse_registry_line():
+    prim, p = model.parse_registry_line("conv3x3 8 16 16 32 32 1 # comment")
+    assert prim == "conv3x3"
+    assert p == dict(n=8, c=16, k=16, h=32, w=32, s=1)
+    assert model.parse_registry_line("   # only comment") is None
+    assert model.parse_registry_line("") is None
+    with pytest.raises(ValueError):
+        model.parse_registry_line("frobnicate 1 2")
+    with pytest.raises(ValueError):
+        model.parse_registry_line("dense 1 2")  # arity
+
+
+def test_instance_name_roundtrip():
+    name = model.instance_name("dense", dict(n=8, d=64, m=10))
+    assert name == "dense_n8_d64_m10"

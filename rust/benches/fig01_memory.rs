@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig01_memory` — regenerates the paper's Fig 1.
+//! Thin wrapper over `hyparflow::figures::fig01_memory` (see that module for the
+//! methodology and EXPERIMENTS.md for paper-vs-measured discussion).
+fn main() {
+    println!("=== Fig 1 — memory vs model/image size (trainability) ===");
+    hyparflow::figures::fig01_memory().print();
+}

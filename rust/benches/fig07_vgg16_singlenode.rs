@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig07_vgg16_singlenode` — regenerates the paper's Fig 7.
+//! Thin wrapper over `hyparflow::figures::fig07_vgg16` (see that module for the
+//! methodology and EXPERIMENTS.md for paper-vs-measured discussion).
+fn main() {
+    println!("=== Fig 7 — VGG-16, single Skylake node, seq vs MP(8) vs DP ===");
+    hyparflow::figures::fig07_vgg16().print();
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig08_resnet110_singlenode` — regenerates the paper's Fig 8.
+//! Thin wrapper over `hyparflow::figures::fig08_resnet110` (see that module for the
+//! methodology and EXPERIMENTS.md for paper-vs-measured discussion).
+fn main() {
+    println!("=== Fig 8 — ResNet-110-v1, single Skylake node, up to 48 partitions ===");
+    hyparflow::figures::fig08_resnet110().print();
+}

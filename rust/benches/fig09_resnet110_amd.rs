@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig09_resnet110_amd` — regenerates the paper's Fig 9.
+//! Thin wrapper over `hyparflow::figures::fig09_resnet110_amd` (see that module for the
+//! methodology and EXPERIMENTS.md for paper-vs-measured discussion).
+fn main() {
+    println!("=== Fig 9 — ResNet-110-v1 on AMD EPYC, up to 64 partitions ===");
+    hyparflow::figures::fig09_resnet110_amd().print();
+}

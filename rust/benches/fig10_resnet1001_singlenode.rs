@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig10_resnet1001_singlenode` — regenerates the paper's Fig 10.
+//! Thin wrapper over `hyparflow::figures::fig10_resnet1001` (see that module for the
+//! methodology and EXPERIMENTS.md for paper-vs-measured discussion).
+fn main() {
+    println!("=== Fig 10 — ResNet-1001-v2, single Skylake node ===");
+    hyparflow::figures::fig10_resnet1001().print();
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig11_vgg16_twonode` — regenerates the paper's Fig 11.
+//! Thin wrapper over `hyparflow::figures::fig11_vgg16_twonode` (see that module for the
+//! methodology and EXPERIMENTS.md for paper-vs-measured discussion).
+fn main() {
+    println!("=== Fig 11 — VGG-16 across two nodes, 8 partitions ===");
+    hyparflow::figures::fig11_vgg16_twonode().print();
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig12_resnet1001_twonode` — regenerates the paper's Fig 12.
+//! Thin wrapper over `hyparflow::figures::fig12_resnet1001_twonode` (see that module for the
+//! methodology and EXPERIMENTS.md for paper-vs-measured discussion).
+fn main() {
+    println!("=== Fig 12 — ResNet-1001-v2 across two nodes, up to 96 partitions ===");
+    hyparflow::figures::fig12_resnet1001_twonode().print();
+}

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig13_hybrid_128nodes` — regenerates the paper's Fig 13.
+//! Thin wrapper over `hyparflow::figures::fig13_hybrid_128nodes` (see that module for the
+//! methodology and EXPERIMENTS.md for paper-vs-measured discussion).
+fn main() {
+    println!("=== Fig 13 — hybrid ResNet-1001 on up to 128 nodes ===");
+    hyparflow::figures::fig13_hybrid_128nodes().print();
+}

@@ -1,0 +1,156 @@
+//! `cargo bench --bench microbench` — real (not simulated) measurements of
+//! the hot-path components: PJRT executable dispatch, per-primitive
+//! execution, hfmpi collectives (by algorithm and size), tensor fusion
+//! on/off, and one real end-to-end training step per strategy.
+//!
+//! These are the numbers the §Perf pass in EXPERIMENTS.md tracks.
+
+use hyparflow::api::{default_artifacts_dir, fit, Strategy, TrainConfig};
+use hyparflow::graph::zoo;
+use hyparflow::hfmpi::{AllreduceAlgo, FusionBuffer, World};
+use hyparflow::runtime::Runtime;
+use hyparflow::tensor::Tensor;
+use hyparflow::util::{fmt_secs, Table};
+use std::time::Instant;
+
+fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    // Warmup once, then best-of-3 batches.
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for _ in 0..n {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / n as f64);
+    }
+    best
+}
+
+fn bench_runtime() {
+    println!("--- PJRT runtime (real measurements) ---");
+    let rt = Runtime::open(default_artifacts_dir()).unwrap();
+    let mut t = Table::new(&["artifact", "time/call", "GFLOP/s"]);
+
+    let x = Tensor::zeros(&[2, 4]);
+    let dt = time_n(200, || {
+        rt.exec("relu2_n2_d4.fwd", &[&x]).unwrap();
+    });
+    t.row(&["relu2 (dispatch floor)".into(), fmt_secs(dt), "-".into()]);
+
+    // conv3x3 8x16x16 @32x32 stride 1: the ResNet-110 workhorse shape.
+    let cx = Tensor::zeros(&[8, 16, 32, 32]);
+    let cw = Tensor::zeros(&[16, 16, 3, 3]);
+    let flops = 2.0 * 16.0 * 16.0 * 9.0 * 32.0 * 32.0 * 8.0;
+    let dt = time_n(30, || {
+        rt.exec("conv3x3_n8_c16_k16_h32_w32_s1.fwd", &[&cx, &cw]).unwrap();
+    });
+    t.row(&["conv3x3 16ch fwd (mb=8)".into(), fmt_secs(dt), format!("{:.1}", flops / dt / 1e9)]);
+
+    let gy = Tensor::zeros(&[8, 16, 32, 32]);
+    let dt = time_n(15, || {
+        rt.exec("conv3x3_n8_c16_k16_h32_w32_s1.bwd", &[&cx, &cw, &gy]).unwrap();
+    });
+    t.row(&["conv3x3 16ch bwd (mb=8)".into(), fmt_secs(dt), format!("{:.1}", 2.0 * flops / dt / 1e9)]);
+
+    // The e2e MLP's big matmul.
+    let mx = Tensor::zeros(&[16, 4096]);
+    let mw = Tensor::zeros(&[4096, 4096]);
+    let mb = Tensor::zeros(&[4096]);
+    let mflops = 2.0 * 16.0 * 4096.0 * 4096.0;
+    let dt = time_n(20, || {
+        rt.exec("denserelu_n16_d4096_m4096.fwd", &[&mx, &mw, &mb]).unwrap();
+    });
+    t.row(&["denserelu 4096x4096 fwd".into(), fmt_secs(dt), format!("{:.1}", mflops / dt / 1e9)]);
+    t.print();
+}
+
+fn bench_collectives() {
+    println!("--- hfmpi collectives (4 ranks, real threads) ---");
+    let mut t = Table::new(&["op", "size", "time"]);
+    for (len, label) in [(1usize << 10, "4 KiB"), (1 << 18, "1 MiB"), (1 << 22, "16 MiB")] {
+        for algo in [AllreduceAlgo::Naive, AllreduceAlgo::Ring, AllreduceAlgo::RecursiveDoubling] {
+            let secs = World::run(4, |c| {
+                let mut x = Tensor::zeros(&[len]);
+                c.barrier();
+                let n = 10;
+                let t0 = Instant::now();
+                for _ in 0..n {
+                    c.allreduce_sum_with(&mut x, algo).unwrap();
+                }
+                t0.elapsed().as_secs_f64() / n as f64
+            })
+            .into_iter()
+            .fold(0.0f64, f64::max);
+            t.row(&[format!("allreduce {algo:?}"), label.into(), fmt_secs(secs)]);
+        }
+    }
+    t.print();
+}
+
+fn bench_fusion() {
+    println!("--- tensor fusion (ResNet-110-shaped gradient set, 4 ranks) ---");
+    // 220 small tensors like ResNet-110's per-layer grads.
+    let mut t = Table::new(&["mode", "allreduce calls", "time/step"]);
+    for (name, threshold) in
+        [("unfused (1 per tensor)", 1usize), ("fused (64 MiB buckets)", 64 << 20)]
+    {
+        let (secs, calls) = World::run(4, |c| {
+            let mut grads: Vec<Tensor> = (0..220)
+                .map(|i| Tensor::zeros(&[if i % 2 == 0 { 2304 } else { 16 }]))
+                .collect();
+            let fb = FusionBuffer::new(threshold, AllreduceAlgo::Ring);
+            c.barrier();
+            let n = 5;
+            let t0 = Instant::now();
+            let mut calls = 0;
+            for _ in 0..n {
+                let mut refs: Vec<&mut Tensor> = grads.iter_mut().collect();
+                calls = fb.allreduce_mean(c, &mut refs).unwrap();
+            }
+            (t0.elapsed().as_secs_f64() / n as f64, calls)
+        })
+        .into_iter()
+        .fold((0.0f64, 0usize), |a, b| (a.0.max(b.0), a.1.max(b.1)));
+        t.row(&[name.into(), calls.to_string(), fmt_secs(secs)]);
+    }
+    t.print();
+}
+
+fn bench_e2e_step() {
+    println!("--- real end-to-end training steps (ResNet-20, synthetic CIFAR) ---");
+    let mut t = Table::new(&["strategy", "ranks", "img/s", "step"]);
+    let cases: Vec<(&str, Strategy, usize, usize)> = vec![
+        ("sequential", Strategy::Sequential, 1, 1),
+        ("model (P=2)", Strategy::Model, 2, 1),
+        ("model (P=4)", Strategy::Model, 4, 1),
+        ("data (R=2)", Strategy::Data, 1, 2),
+        ("hybrid (2x2)", Strategy::Hybrid, 2, 2),
+    ];
+    for (name, s, p, r) in cases {
+        let cfg = TrainConfig::new(zoo::resnet20_v1(), s)
+            .partitions(p)
+            .replicas(r)
+            .microbatch(8)
+            .steps(4)
+            .seed(1);
+        let res = fit(&cfg).unwrap();
+        let secs: f64 =
+            res.history.iter().skip(1).map(|m| m.step_secs).sum::<f64>() / 3.0;
+        t.row(&[
+            name.into(),
+            (p * r).to_string(),
+            format!("{:.1}", (8 * r) as f64 / secs),
+            fmt_secs(secs),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    println!("=== microbench — real hot-path measurements ===");
+    bench_runtime();
+    bench_collectives();
+    bench_fusion();
+    bench_e2e_step();
+}

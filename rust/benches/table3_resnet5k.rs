@@ -1,0 +1,7 @@
+//! `cargo bench --bench table3_resnet5k` — regenerates the paper's Table 3.
+//! Thin wrapper over `hyparflow::figures::table3_resnet5k` (see that module for the
+//! methodology and EXPERIMENTS.md for paper-vs-measured discussion).
+fn main() {
+    println!("=== Table 3 — ResNet-5000 trainability at 331x331 ===");
+    hyparflow::figures::table3_resnet5k().print();
+}

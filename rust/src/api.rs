@@ -1,0 +1,309 @@
+//! The user-facing API — the Rust equivalent of the paper's Listing 2:
+//!
+//! ```python
+//! model = ...  # any Keras model
+//! hf.fit(model, num_partitions, num_replicas, strategy)
+//! ```
+//!
+//! becomes
+//!
+//! ```ignore
+//! let cfg = TrainConfig::new(zoo::resnet20_v1(), Strategy::Hybrid)
+//!     .partitions(4).replicas(2).steps(50);
+//! let result = fit(&cfg)?;
+//! ```
+//!
+//! `fit` is fully user-transparent: no change to the model definition, no
+//! manual communication — the Model Generator, Load Balancer, Trainer and
+//! Communication Engine do the rest (paper Fig 4).
+
+use crate::comm::CommEngine;
+use crate::data::SyntheticDataset;
+use crate::engine::{EngineConfig, StepMetrics, Trainer};
+use crate::graph::{ModelGraph, NodeId};
+use crate::hfmpi::{AllreduceAlgo, World};
+use crate::partition::Partitioning;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use std::path::PathBuf;
+
+/// Parallelization strategy (the paper's 4th user input).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Single process, whole model (the paper's "Sequential" baseline).
+    Sequential,
+    /// Model-parallel only: `partitions` ranks, one replica.
+    Model,
+    /// Data-parallel only: one partition, `replicas` ranks.
+    Data,
+    /// Model + data parallel: `partitions * replicas` ranks.
+    Hybrid,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> anyhow::Result<Strategy> {
+        Ok(match s {
+            "seq" | "sequential" => Strategy::Sequential,
+            "model" | "mp" => Strategy::Model,
+            "data" | "dp" => Strategy::Data,
+            "hybrid" => Strategy::Hybrid,
+            _ => anyhow::bail!("unknown strategy '{s}' (seq|model|data|hybrid)"),
+        })
+    }
+}
+
+/// Everything `fit` needs. Builder-style setters keep call sites compact.
+#[derive(Clone)]
+pub struct TrainConfig {
+    pub model: ModelGraph,
+    pub strategy: Strategy,
+    pub partitions: usize,
+    pub replicas: usize,
+    /// Expert knob (paper §5.1): explicit nodes-per-partition.
+    pub lpp: Option<Vec<usize>>,
+    pub engine: EngineConfig,
+    pub steps: usize,
+    /// Test microbatches for the final evaluation (0 = skip).
+    pub eval_batches: usize,
+    pub artifacts_dir: PathBuf,
+    pub fusion_threshold: usize,
+    pub allreduce_algo: AllreduceAlgo,
+    /// Print a progress line every N steps (0 = silent).
+    pub log_every: usize,
+    /// Dataset override (defaults to a synthetic set matching the model's
+    /// input shape and class count).
+    pub dataset: Option<SyntheticDataset>,
+}
+
+impl TrainConfig {
+    pub fn new(model: ModelGraph, strategy: Strategy) -> Self {
+        TrainConfig {
+            model,
+            strategy,
+            partitions: 1,
+            replicas: 1,
+            lpp: None,
+            engine: EngineConfig::default(),
+            steps: 10,
+            eval_batches: 0,
+            artifacts_dir: default_artifacts_dir(),
+            fusion_threshold: crate::hfmpi::DEFAULT_THRESHOLD_BYTES,
+            allreduce_algo: AllreduceAlgo::Auto,
+            log_every: 0,
+            dataset: None,
+        }
+    }
+
+    pub fn partitions(mut self, p: usize) -> Self {
+        self.partitions = p;
+        self
+    }
+
+    pub fn replicas(mut self, r: usize) -> Self {
+        self.replicas = r;
+        self
+    }
+
+    pub fn steps(mut self, s: usize) -> Self {
+        self.steps = s;
+        self
+    }
+
+    pub fn lpp(mut self, lpp: Vec<usize>) -> Self {
+        self.lpp = Some(lpp);
+        self
+    }
+
+    pub fn microbatch(mut self, mb: usize) -> Self {
+        self.engine.microbatch = mb;
+        self
+    }
+
+    pub fn num_microbatches(mut self, m: usize) -> Self {
+        self.engine.num_microbatches = m;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.engine.lr = lr;
+        self
+    }
+
+    /// Per-step learning-rate schedule (overrides `lr`).
+    pub fn lr_schedule(mut self, s: crate::engine::LrSchedule) -> Self {
+        self.engine.lr_schedule = Some(s);
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.engine.seed = s;
+        self
+    }
+
+    pub fn log_every(mut self, n: usize) -> Self {
+        self.log_every = n;
+        self
+    }
+
+    pub fn eval_batches(mut self, n: usize) -> Self {
+        self.eval_batches = n;
+        self
+    }
+
+    pub fn dataset(mut self, d: SyntheticDataset) -> Self {
+        self.dataset = Some(d);
+        self
+    }
+
+    /// Effective (partitions, replicas) after strategy normalization.
+    pub fn effective_topology(&self) -> (usize, usize) {
+        match self.strategy {
+            Strategy::Sequential => (1, 1),
+            Strategy::Model => (self.partitions, 1),
+            Strategy::Data => (1, self.replicas),
+            Strategy::Hybrid => (self.partitions, self.replicas),
+        }
+    }
+}
+
+/// Default artifacts directory: $HYPARFLOW_ARTIFACTS or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("HYPARFLOW_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The outcome of a training run.
+pub struct FitResult {
+    /// Per-step metrics (replica-averaged, reported by the last partition).
+    pub history: Vec<StepMetrics>,
+    /// Final held-out evaluation, if requested.
+    pub eval: Option<StepMetrics>,
+    /// Full model parameters from replica 0 (merged across partitions),
+    /// keyed by (node, slot).
+    pub params: Vec<((NodeId, usize), Tensor)>,
+    pub wall_secs: f64,
+    /// Throughput in the paper's metric.
+    pub img_per_sec: f64,
+}
+
+impl FitResult {
+    pub fn final_loss(&self) -> f32 {
+        self.history.last().map(|m| m.loss).unwrap_or(f32::NAN)
+    }
+
+    pub fn param(&self, node: NodeId, slot: usize) -> Option<&Tensor> {
+        self.params
+            .iter()
+            .find(|((n, s), _)| *n == node && *s == slot)
+            .map(|(_, t)| t)
+    }
+}
+
+struct RankOutput {
+    history: Vec<StepMetrics>,
+    eval: Option<StepMetrics>,
+    params: Vec<((NodeId, usize), Tensor)>,
+}
+
+/// Train. Spawns `partitions x replicas` ranks on the hfmpi fabric, each
+/// loading the AOT artifacts through its own PJRT client, and runs
+/// `cfg.steps` synchronous steps.
+pub fn fit(cfg: &TrainConfig) -> anyhow::Result<FitResult> {
+    cfg.model.validate()?;
+    let (p, r) = cfg.effective_topology();
+    anyhow::ensure!(p >= 1 && r >= 1, "need at least 1 partition and 1 replica");
+    let pt = match &cfg.lpp {
+        Some(lpp) => Partitioning::from_lpp(&cfg.model, lpp)?,
+        None => Partitioning::auto(&cfg.model, p)?,
+    };
+    let dataset = cfg.dataset.clone().unwrap_or_else(|| {
+        SyntheticDataset::new(
+            cfg.engine.seed,
+            num_classes(&cfg.model),
+            &cfg.model.input_shape,
+            1.0,
+        )
+    });
+    anyhow::ensure!(
+        dataset.sample_shape == cfg.model.input_shape,
+        "dataset sample shape {:?} != model input {:?}",
+        dataset.sample_shape,
+        cfg.model.input_shape
+    );
+
+    let t0 = std::time::Instant::now();
+    let world_n = p * r;
+    let outputs: Vec<anyhow::Result<RankOutput>> =
+        World::run(world_n, |world| run_rank(cfg, &pt, world, p, &dataset));
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Merge rank outputs.
+    let mut history = vec![];
+    let mut eval = None;
+    let mut params = vec![];
+    for (rank, out) in outputs.into_iter().enumerate() {
+        let out = out.map_err(|e| anyhow::anyhow!("rank {rank}: {e}"))?;
+        let partition = rank % p;
+        let replica = rank / p;
+        if partition == p - 1 && replica == 0 {
+            history = out.history;
+            eval = out.eval;
+        }
+        if replica == 0 {
+            params.extend(out.params);
+        }
+    }
+    params.sort_by_key(|((n, s), _)| (*n, *s));
+    let total_samples = cfg.steps * cfg.engine.microbatch * cfg.engine.num_microbatches * r;
+    Ok(FitResult {
+        history,
+        eval,
+        params,
+        wall_secs: wall,
+        img_per_sec: total_samples as f64 / wall,
+    })
+}
+
+fn run_rank(
+    cfg: &TrainConfig,
+    pt: &Partitioning,
+    world: &crate::hfmpi::Comm,
+    partitions: usize,
+    dataset: &SyntheticDataset,
+) -> anyhow::Result<RankOutput> {
+    let ce = CommEngine::new(world, partitions, cfg.fusion_threshold, cfg.allreduce_algo);
+    let rt = Runtime::open(&cfg.artifacts_dir)?;
+    let mut trainer =
+        Trainer::new(&cfg.model, pt, cfg.engine.clone(), &ce, &rt, dataset.clone())?;
+    let names = trainer.artifact_names();
+    rt.warmup(names.iter().map(|s| s.as_str()))?;
+
+    let is_reporter = ce.partition == partitions - 1 && ce.replica_id == 0;
+    let mut history = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        let m = trainer.train_step(step as u64)?;
+        if is_reporter && cfg.log_every > 0 && (step + 1) % cfg.log_every == 0 {
+            println!(
+                "step {:>5}/{}: loss={:.4} acc={:.3} ({:.1} img/s)",
+                step + 1,
+                cfg.steps,
+                m.loss,
+                m.accuracy,
+                m.samples as f64 / m.step_secs
+            );
+        }
+        history.push(m);
+    }
+    let eval = if cfg.eval_batches > 0 {
+        Some(trainer.evaluate(cfg.eval_batches)?)
+    } else {
+        None
+    };
+    Ok(RankOutput { history, eval, params: trainer.export_params() })
+}
+
+fn num_classes(g: &ModelGraph) -> usize {
+    g.loss_node().map(|l| g.nodes[l].out_shape[0]).unwrap_or(10)
+}

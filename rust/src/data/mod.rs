@@ -1,0 +1,197 @@
+//! Synthetic dataset substrate.
+//!
+//! The paper trains on CIFAR-10; this repo substitutes a deterministic
+//! class-conditional generator (DESIGN.md substitution #4). Two properties
+//! matter and are preserved:
+//!
+//! 1. **Learnability** — each class has a fixed random pattern; samples are
+//!    pattern + Gaussian noise, so accuracy climbs with training and the
+//!    Fig 14-16 correctness experiments are meaningful.
+//! 2. **Determinism by index** — a sample is a pure function of
+//!    (seed, index). Every rank of a model-parallel replica can materialize
+//!    the same batch locally (the first partition needs `x`, the last needs
+//!    the labels) without shipping data, and data-parallel shards are
+//!    disjoint index ranges, exactly like a sharded CIFAR loader.
+
+use crate::rng::Rng;
+use crate::tensor::{Shape, Tensor};
+
+/// Deterministic synthetic classification dataset.
+#[derive(Clone)]
+pub struct SyntheticDataset {
+    pub classes: usize,
+    /// Per-sample shape, e.g. [3, 32, 32] or [3072].
+    pub sample_shape: Vec<usize>,
+    /// Noise std relative to unit-norm patterns: higher = harder task.
+    pub noise: f32,
+    seed: u64,
+    /// Class patterns, classes x numel.
+    patterns: Vec<Vec<f32>>,
+}
+
+/// Offset separating the virtual train and test index spaces.
+const TEST_OFFSET: u64 = 1 << 40;
+
+impl SyntheticDataset {
+    pub fn new(seed: u64, classes: usize, sample_shape: &[usize], noise: f32) -> Self {
+        let numel: usize = sample_shape.iter().product();
+        let patterns = (0..classes)
+            .map(|c| {
+                let mut rng = Rng::new(seed.wrapping_mul(0x9E37).wrapping_add(c as u64));
+                (0..numel).map(|_| rng.normal()).collect()
+            })
+            .collect();
+        SyntheticDataset {
+            classes,
+            sample_shape: sample_shape.to_vec(),
+            noise,
+            seed,
+            patterns,
+        }
+    }
+
+    /// CIFAR-10-like default: 10 classes of [3,32,32], moderate noise.
+    pub fn cifar_like(seed: u64) -> Self {
+        Self::new(seed, 10, &[3, 32, 32], 1.0)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.sample_shape.iter().product()
+    }
+
+    /// The label of sample `idx` (pure function).
+    pub fn label_of(&self, idx: u64) -> usize {
+        // Mix so labels aren't simply periodic in idx.
+        let mut r = Rng::new(self.seed ^ idx.wrapping_mul(0xD1B54A32D192ED03));
+        r.below(self.classes)
+    }
+
+    /// Materialize sample `idx` into `out`.
+    fn fill_sample(&self, idx: u64, out: &mut [f32]) {
+        let label = self.label_of(idx);
+        let mut r = Rng::new(self.seed ^ idx.wrapping_mul(0x2545F4914F6CDD1D) ^ 0xABCD);
+        let pat = &self.patterns[label];
+        for (o, p) in out.iter_mut().zip(pat.iter()) {
+            *o = p + self.noise * r.normal();
+        }
+    }
+
+    /// A training batch: (x [bs, sample_shape...], y_onehot [bs, classes],
+    /// labels). Indices are `start..start+bs` in the train index space.
+    pub fn batch(&self, start: u64, bs: usize) -> (Tensor, Tensor, Vec<usize>) {
+        self.batch_at(start, bs, 0)
+    }
+
+    /// A held-out test batch (disjoint index space from training).
+    pub fn test_batch(&self, start: u64, bs: usize) -> (Tensor, Tensor, Vec<usize>) {
+        self.batch_at(start, bs, TEST_OFFSET)
+    }
+
+    fn batch_at(&self, start: u64, bs: usize, offset: u64) -> (Tensor, Tensor, Vec<usize>) {
+        let numel = self.numel();
+        let mut x = vec![0.0f32; bs * numel];
+        let mut y = vec![0.0f32; bs * self.classes];
+        let mut labels = Vec::with_capacity(bs);
+        for i in 0..bs {
+            let idx = offset + start + i as u64;
+            self.fill_sample(idx, &mut x[i * numel..(i + 1) * numel]);
+            let l = self.label_of(idx);
+            labels.push(l);
+            y[i * self.classes + l] = 1.0;
+        }
+        let mut xdims = vec![bs];
+        xdims.extend_from_slice(&self.sample_shape);
+        (
+            Tensor::new(Shape(xdims), x),
+            Tensor::new(Shape::new(&[bs, self.classes]), y),
+            labels,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a = SyntheticDataset::cifar_like(7);
+        let b = SyntheticDataset::cifar_like(7);
+        let (xa, ya, la) = a.batch(100, 4);
+        let (xb, yb, lb) = b.batch(100, 4);
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn seeds_change_data() {
+        let a = SyntheticDataset::cifar_like(1);
+        let b = SyntheticDataset::cifar_like(2);
+        assert_ne!(a.batch(0, 2).0, b.batch(0, 2).0);
+    }
+
+    #[test]
+    fn onehot_matches_labels() {
+        let d = SyntheticDataset::new(3, 5, &[8], 0.5);
+        let (_, y, labels) = d.batch(0, 6);
+        for (i, &l) in labels.iter().enumerate() {
+            for c in 0..5 {
+                let want = if c == l { 1.0 } else { 0.0 };
+                assert_eq!(y.data[i * 5 + c], want);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        let d = SyntheticDataset::cifar_like(0);
+        let mut counts = [0usize; 10];
+        for i in 0..10_000u64 {
+            counts[d.label_of(i)] += 1;
+        }
+        for c in counts {
+            assert!(c > 700 && c < 1300, "unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn train_and_test_spaces_disjoint() {
+        let d = SyntheticDataset::cifar_like(0);
+        let (xtr, _, _) = d.batch(0, 2);
+        let (xte, _, _) = d.test_batch(0, 2);
+        assert_ne!(xtr, xte);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // Nearest-pattern classification of noisy samples should beat 90%
+        // at this noise level — the dataset is learnable by construction.
+        let d = SyntheticDataset::new(0, 10, &[64], 0.7);
+        let mut correct = 0;
+        let n = 500;
+        for i in 0..n {
+            let (x, _, labels) = d.batch(i, 1);
+            let best = (0..10)
+                .max_by(|&a, &b| {
+                    let da: f32 = d.patterns[a].iter().zip(&x.data).map(|(p, v)| p * v).sum();
+                    let db: f32 = d.patterns[b].iter().zip(&x.data).map(|(p, v)| p * v).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == labels[0] {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / n as f64 > 0.9, "separability {correct}/{n}");
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = SyntheticDataset::cifar_like(0);
+        let (x, y, l) = d.batch(0, 8);
+        assert_eq!(x.shape.dims(), &[8, 3, 32, 32]);
+        assert_eq!(y.shape.dims(), &[8, 10]);
+        assert_eq!(l.len(), 8);
+    }
+}

@@ -1,0 +1,134 @@
+//! Checkpointing: save/restore the full model parameter set.
+//!
+//! Simple self-describing binary format (no serde in the offline build):
+//!
+//! ```text
+//! magic "HFCKPT1\n"
+//! u64 count
+//! repeat count times:
+//!   u64 node, u64 slot, u64 rank, u64 dims[rank], f32 data[numel]
+//! ```
+//!
+//! Model-parallel ranks write/read only their own partition's entries,
+//! matching the paper's claim that HyPar-Flow shards all model state.
+
+use crate::graph::NodeId;
+use crate::tensor::{Shape, Tensor};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"HFCKPT1\n";
+
+pub type ParamSet = Vec<((NodeId, usize), Tensor)>;
+
+/// Write a parameter set (e.g. `FitResult::params` or a trainer's
+/// `export_params`) to `path`.
+pub fn save(path: &Path, params: &ParamSet) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    for ((node, slot), t) in params {
+        f.write_all(&(*node as u64).to_le_bytes())?;
+        f.write_all(&(*slot as u64).to_le_bytes())?;
+        f.write_all(&(t.shape.rank() as u64).to_le_bytes())?;
+        for &d in t.shape.dims() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // f32 little-endian payload.
+        let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read a parameter set from `path`.
+pub fn load(path: &Path) -> anyhow::Result<ParamSet> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "{path:?}: not a HyPar-Flow checkpoint");
+    let count = read_u64(&mut f)?;
+    let mut out = Vec::with_capacity(count as usize);
+    for _ in 0..count {
+        let node = read_u64(&mut f)? as usize;
+        let slot = read_u64(&mut f)? as usize;
+        let rank = read_u64(&mut f)? as usize;
+        anyhow::ensure!(rank <= 8, "implausible tensor rank {rank}");
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(read_u64(&mut f)? as usize);
+        }
+        let shape = Shape::new(&dims);
+        let mut bytes = vec![0u8; shape.numel() * 4];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(((node, slot), Tensor::new(shape, data)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("hfckpt_test_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Rng::new(1);
+        let params: ParamSet = vec![
+            ((1, 0), Tensor::randn(&[4, 3, 3, 3], 1.0, &mut rng)),
+            ((2, 0), Tensor::randn(&[4], 1.0, &mut rng)),
+            ((2, 1), Tensor::zeros(&[4])),
+            ((7, 0), Tensor::scalar(3.25)),
+        ];
+        let p = tmp("roundtrip");
+        save(&p, &params).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(params.len(), back.len());
+        for ((ka, ta), (kb, tb)) in params.iter().zip(back.iter()) {
+            assert_eq!(ka, kb);
+            assert_eq!(ta, tb, "bitwise roundtrip");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage");
+        std::fs::write(&p, b"definitely not a checkpoint").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn trained_model_roundtrips_through_checkpoint() {
+        use crate::api::{fit, Strategy, TrainConfig};
+        use crate::graph::zoo;
+        let cfg = TrainConfig::new(zoo::mlp(4, &[4], 3), Strategy::Sequential)
+            .microbatch(2)
+            .steps(3)
+            .seed(9);
+        let r = fit(&cfg).unwrap();
+        let p = tmp("trained");
+        save(&p, &r.params).unwrap();
+        let back = load(&p).unwrap();
+        for ((ka, ta), (kb, tb)) in r.params.iter().zip(back.iter()) {
+            assert_eq!(ka, kb);
+            assert_eq!(ta.max_abs_diff(tb), 0.0);
+        }
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,596 @@
+//! The **Trainer** (paper §6.2 / Listing 3): per-rank distributed training
+//! loop implementing forward and backward passes over one model-partition,
+//! with microbatch pipelining, grad-layer partial-error exchange, and
+//! data-parallel gradient averaging.
+//!
+//! Execution model per training step (GPipe-style fill/drain, the paper's
+//! "pipelining via batch splitting"):
+//!
+//! 1. **Forward**: for each microbatch, run this partition's nodes in
+//!    topological order. Cross-partition inputs are received (tag =
+//!    edge x microbatch); produced outputs that feed remote partitions are
+//!    sent eagerly. The first partition materializes `x` from the dataset,
+//!    the last one runs the loss head (labels materialized locally — the
+//!    dataset is index-deterministic).
+//! 2. **Backward**: reverse order. A node's output-gradient is the sum of
+//!    its local consumers' input-gradients and the partial errors received
+//!    from remote consumers (the paper's *grad layer* per recv, Eq. 5-6).
+//!    Parameter gradients accumulate across microbatches; input gradients
+//!    propagate locally or are sent as partial errors.
+//! 3. **Update**: average gradients over microbatches, allreduce across
+//!    replicas (per-partition communicator, fused), SGD+momentum step.
+//!
+//! Because every rank runs the same node-level math as sequential execution
+//! (partitioning only moves ops, never changes them), model-parallel
+//! training is *bitwise* equivalent to sequential — asserted by
+//! `rust/tests/equivalence.rs`, the machine check of the paper's §6.1
+//! "sequential semantics" guarantee.
+
+pub mod checkpoint;
+mod optimizer;
+mod schedule;
+
+pub use optimizer::SgdMomentum;
+pub use schedule::LrSchedule;
+
+use crate::comm::CommEngine;
+use crate::data::SyntheticDataset;
+use crate::graph::{LayerKind, ModelGraph, NodeId};
+use crate::partition::Partitioning;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::{Shape, Tensor};
+use std::collections::HashMap;
+
+/// Engine configuration (per run).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Microbatch size — must match the `n` the artifacts were compiled for.
+    pub microbatch: usize,
+    /// Microbatches per step (pipeline depth). Per-replica batch =
+    /// microbatch * num_microbatches.
+    pub num_microbatches: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub seed: u64,
+    /// Optional schedule; overrides `lr` per step when set (the paper's
+    /// accuracy runs use `LrSchedule::keras_cifar`).
+    pub lr_schedule: Option<LrSchedule>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            microbatch: 8,
+            num_microbatches: 1,
+            lr: 0.01,
+            momentum: 0.9,
+            seed: 42,
+            lr_schedule: None,
+        }
+    }
+}
+
+/// Metrics of one training (or eval) step, reported by the last partition.
+#[derive(Clone, Debug, Default)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub accuracy: f32,
+    /// Samples processed this step on this replica.
+    pub samples: usize,
+    pub step_secs: f64,
+}
+
+/// Per-rank trainer state.
+pub struct Trainer<'a> {
+    pub g: &'a ModelGraph,
+    pub pt: &'a Partitioning,
+    pub cfg: EngineConfig,
+    pub ce: &'a CommEngine,
+    rt: &'a Runtime,
+    data: SyntheticDataset,
+    /// node -> parameter tensors (only for nodes on this partition).
+    pub params: HashMap<NodeId, Vec<Tensor>>,
+    opt: SgdMomentum,
+    /// Nodes of this partition in topological order.
+    my_nodes: Vec<NodeId>,
+    /// Deterministic order of (node, slot) for fused allreduce packing.
+    param_order: Vec<(NodeId, usize)>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(
+        g: &'a ModelGraph,
+        pt: &'a Partitioning,
+        cfg: EngineConfig,
+        ce: &'a CommEngine,
+        rt: &'a Runtime,
+        data: SyntheticDataset,
+    ) -> anyhow::Result<Trainer<'a>> {
+        let my_nodes = pt.parts[ce.partition].clone();
+        // Global parameter ordinal per node: number of parameter slots in
+        // all earlier nodes. Seeding init by ordinal (not node id) makes
+        // initialization invariant under graph rewrites that preserve the
+        // parameter sequence — e.g. conv+bn+relu fusion — so a fused model
+        // trains from the same weights as its unfused original.
+        let mut ordinal_base = vec![0usize; g.num_nodes()];
+        let mut acc = 0usize;
+        for (i, node) in g.nodes.iter().enumerate() {
+            ordinal_base[i] = acc;
+            acc += node.params.len();
+        }
+        let mut params = HashMap::new();
+        let mut param_order = vec![];
+        for &n in &my_nodes {
+            let node = &g.nodes[n];
+            if node.params.is_empty() {
+                continue;
+            }
+            let mut slots = vec![];
+            for (si, spec) in node.params.iter().enumerate() {
+                // Deterministic init from (seed, param ordinal): every
+                // replica computes identical weights, and so does the
+                // sequential baseline — the foundation of the equivalence
+                // tests.
+                let t = if spec.fan_in > 0 {
+                    let mut rng = Rng::new(
+                        cfg.seed
+                            .wrapping_mul(0x1000193)
+                            .wrapping_add(((ordinal_base[n] + si) as u64) << 8),
+                    );
+                    Tensor::he_normal(&spec.dims, spec.fan_in, &mut rng)
+                } else if spec.role == "gamma" {
+                    Tensor::ones(&spec.dims)
+                } else {
+                    Tensor::zeros(&spec.dims)
+                };
+                slots.push(t);
+                param_order.push((n, si));
+            }
+            params.insert(n, slots);
+        }
+        // Paper-faithful init sync: broadcast from replica 0 (a no-op on the
+        // values here since init is deterministic, but exercises the CE path
+        // the paper requires).
+        let mut bc: Vec<(NodeId, usize)> = param_order.clone();
+        bc.sort();
+        for (i, (n, si)) in bc.iter().enumerate() {
+            let t = &mut params.get_mut(n).unwrap()[*si];
+            ce.bcast_param(t, i);
+        }
+        let opt = SgdMomentum::new(cfg.lr, cfg.momentum, &param_order, &params);
+        Ok(Trainer { g, pt, cfg, ce, rt, data, params, opt, my_nodes, param_order })
+    }
+
+    /// Batch size processed per step per replica.
+    pub fn replica_batch(&self) -> usize {
+        self.cfg.microbatch * self.cfg.num_microbatches
+    }
+
+    /// Global sample index base for (step, replica, microbatch).
+    fn sample_base(&self, step: u64, mb: usize) -> u64 {
+        let ebs = (self.replica_batch() * self.ce.replica.size()) as u64;
+        step * ebs
+            + (self.ce.replica_id * self.replica_batch()) as u64
+            + (mb * self.cfg.microbatch) as u64
+    }
+
+    fn is_first_partition(&self) -> bool {
+        self.ce.partition == 0
+    }
+
+    fn is_last_partition(&self) -> bool {
+        self.ce.partition == self.pt.num_partitions - 1
+    }
+
+    /// Forward one microbatch; fills `acts` (node -> output) and returns
+    /// (loss, glogits, labels) on the last partition.
+    fn forward_microbatch(
+        &self,
+        step: u64,
+        mb: usize,
+        test: bool,
+        acts: &mut HashMap<NodeId, Tensor>,
+    ) -> anyhow::Result<Option<(f32, Tensor, Vec<usize>)>> {
+        let n_mb = self.cfg.microbatch;
+        let base = self.sample_base(step, mb);
+        let mut head = None;
+        for &nid in &self.my_nodes {
+            let node = &self.g.nodes[nid];
+            // Phase 1 — satisfy remote inputs: receive and stash under the
+            // *producer* id (the backward pass recomputes from these — the
+            // state the paper's grad layers close over).
+            for (slot, &src) in node.inputs.iter().enumerate() {
+                if self.pt.assign[src] != self.ce.partition {
+                    let e = self
+                        .pt
+                        .edges
+                        .iter()
+                        .find(|e| e.src_node == src && e.dst_node == nid)
+                        .unwrap_or_else(|| panic!("missing edge {src}->{nid} slot {slot}"));
+                    // Always consume the message (the producer sends one
+                    // per edge); duplicates of an already-stashed producer
+                    // are identical payloads.
+                    let t = self.ce.recv_activation(e.src_part, e.id, mb);
+                    acts.insert(src, t);
+                }
+            }
+            // Phase 2 — borrow inputs from the stash (no clones on the hot
+            // path; every producer, local or received, is in `acts` now).
+            let inputs: Vec<&Tensor> = node.inputs.iter().map(|src| &acts[src]).collect();
+            let out = match &node.kind {
+                LayerKind::Input => {
+                    debug_assert!(self.is_first_partition() || !node.inputs.is_empty());
+                    let (x, _, _) = if test {
+                        self.data.test_batch(base, n_mb)
+                    } else {
+                        self.data.batch(base, n_mb)
+                    };
+                    x
+                }
+                LayerKind::Add => {
+                    let mut s = inputs[0].clone();
+                    s.add_assign(&inputs[1]);
+                    s
+                }
+                LayerKind::Flatten => {
+                    let t = inputs[0];
+                    let flat: usize = t.shape.dims()[1..].iter().product();
+                    Tensor::new(Shape::new(&[t.batch(), flat]), t.data.clone())
+                }
+                LayerKind::SoftmaxXent => {
+                    let (_, y, labels) = if test {
+                        self.data.test_batch(base, n_mb)
+                    } else {
+                        self.data.batch(base, n_mb)
+                    };
+                    let art = crate::graph::artifact::node_artifact(self.g, nid, n_mb)
+                        .expect("loss artifact");
+                    let outs = self.rt.exec(&art.fwd, &[inputs[0], &y])?;
+                    let loss = outs[0].data[0];
+                    head = Some((loss, outs[1].clone(), labels));
+                    // The loss node's "activation" is its glogits (only used
+                    // locally in backward).
+                    outs[1].clone()
+                }
+                _ => {
+                    let art = crate::graph::artifact::node_artifact(self.g, nid, n_mb)
+                        .expect("artifact for compute node");
+                    // Python signature: fwd(x, params...).
+                    let mut args: Vec<&Tensor> = vec![inputs[0]];
+                    let slots = self.params.get(&nid);
+                    if let Some(slots) = slots {
+                        args.extend(slots.iter());
+                    }
+                    let outs = self.rt.exec(&art.fwd, &args)?;
+                    outs.into_iter().next().unwrap()
+                }
+            };
+            // Eager sends on all out-edges (consumer-node order — matches
+            // the deadlock-free schedule; hfmpi buffers, so never blocks).
+            let mut out_edges = self.pt.out_edges_of_node(nid);
+            out_edges.sort_by_key(|e| (e.dst_node, e.src_node));
+            for e in out_edges {
+                self.ce.send_activation(&out, e.dst_part, e.id, mb);
+            }
+            acts.insert(nid, out);
+        }
+        Ok(head)
+    }
+
+    /// Backward one microbatch given the forward stash; accumulates
+    /// parameter gradients into `grads`.
+    fn backward_microbatch(
+        &self,
+        mb: usize,
+        acts: &HashMap<NodeId, Tensor>,
+        glogits: Option<&Tensor>,
+        grads: &mut HashMap<NodeId, Vec<Tensor>>,
+    ) -> anyhow::Result<()> {
+        let n_mb = self.cfg.microbatch;
+        // Output-gradient accumulator per node.
+        let mut gout: HashMap<NodeId, Tensor> = HashMap::new();
+        for &nid in self.my_nodes.iter().rev() {
+            let node = &self.g.nodes[nid];
+            if matches!(node.kind, LayerKind::Input) {
+                continue; // data has no gradient
+            }
+            // 1) Assemble dL/d(out of nid).
+            let mut gy = match &node.kind {
+                LayerKind::SoftmaxXent => {
+                    // Loss root: gradient w.r.t. logits was computed in fwd.
+                    // Handled below as the gradient *to its input*; gy unused.
+                    None
+                }
+                _ => gout.remove(&nid),
+            };
+            // Remote consumers' partial errors (grad-layer recv), in the
+            // mirror of the forward send order.
+            let mut out_edges = self.pt.out_edges_of_node(nid);
+            out_edges.sort_by_key(|e| (std::cmp::Reverse(e.dst_node), e.src_node));
+            for e in out_edges {
+                let err = self.ce.recv_error(e.dst_part, e.id, mb);
+                match &mut gy {
+                    Some(t) => t.add_assign(&err),
+                    None => gy = Some(err),
+                }
+            }
+            if !matches!(node.kind, LayerKind::SoftmaxXent) && gy.is_none() {
+                // Dead-end node (shouldn't happen in validated graphs).
+                continue;
+            }
+            // 2) Compute input gradients (+ parameter gradients).
+            let gins: Vec<(NodeId, Tensor)> = match &node.kind {
+                LayerKind::SoftmaxXent => {
+                    let g = glogits.expect("loss backward needs fwd glogits").clone();
+                    vec![(node.inputs[0], g)]
+                }
+                LayerKind::Add => {
+                    let gy = gy.unwrap();
+                    vec![(node.inputs[0], gy.clone()), (node.inputs[1], gy)]
+                }
+                LayerKind::Flatten => {
+                    let gy = gy.unwrap();
+                    let src = node.inputs[0];
+                    let mut dims = vec![gy.batch()];
+                    dims.extend_from_slice(&self.g.nodes[src].out_shape);
+                    vec![(src, Tensor::new(Shape(dims), gy.data))]
+                }
+                kind => {
+                    let gy = gy.unwrap();
+                    let art = crate::graph::artifact::node_artifact(self.g, nid, n_mb)
+                        .expect("artifact for compute node");
+                    let bwd = art.bwd.as_ref().expect("non-loss node has bwd");
+                    // Python signatures (model.instance):
+                    //   conv/bn/dense: bwd(x, <param subset>, gy)
+                    //   relu/pool:     bwd(x, gy)
+                    //   gap:           bwd(gy)        (x only matters for shape)
+                    let slots = self.params.get(&nid);
+                    let mut args: Vec<&Tensor> = vec![];
+                    if !matches!(kind, LayerKind::GlobalAvgPool) {
+                        args.push(self.node_input_act(nid, acts));
+                    }
+                    match kind {
+                        LayerKind::Conv3x3 { .. } | LayerKind::Conv1x1 { .. } => {
+                            args.push(&slots.unwrap()[0]); // w
+                        }
+                        LayerKind::ConvBnRelu { .. } => {
+                            let s = slots.unwrap();
+                            args.extend([&s[0], &s[1], &s[2]]); // w, gamma, beta
+                        }
+                        LayerKind::BatchNorm => {
+                            args.push(&slots.unwrap()[0]); // gamma
+                        }
+                        LayerKind::Dense { .. } => {
+                            args.push(&slots.unwrap()[0]); // w
+                        }
+                        LayerKind::DenseRelu { .. } => {
+                            let s = slots.unwrap();
+                            args.extend([&s[0], &s[1]]); // w, b
+                        }
+                        _ => {}
+                    }
+                    args.push(&gy);
+                    let mut outs = self.rt.exec(bwd, &args)?;
+                    // outs[0] = gx; outs[1..] = parameter gradients in the
+                    // same slot order as node.params.
+                    let gx = outs.remove(0);
+                    if !outs.is_empty() {
+                        let slot_grads = grads.entry(nid).or_insert_with(|| {
+                            outs.iter()
+                                .map(|t| Tensor::zeros(t.shape.dims()))
+                                .collect()
+                        });
+                        for (acc, g) in slot_grads.iter_mut().zip(outs.iter()) {
+                            acc.add_assign(g);
+                        }
+                    }
+                    vec![(node.inputs[0], gx)]
+                }
+            };
+            // 3) Route input gradients: local accumulate or remote send.
+            for (src, gin) in gins {
+                if self.pt.assign[src] == self.ce.partition {
+                    match gout.get_mut(&src) {
+                        Some(t) => t.add_assign(&gin),
+                        None => {
+                            gout.insert(src, gin);
+                        }
+                    }
+                } else {
+                    let e = self
+                        .pt
+                        .edges
+                        .iter()
+                        .find(|e| e.src_node == src && e.dst_node == nid)
+                        .expect("cross edge for backward send");
+                    self.ce.send_error(&gin, e.src_part, e.id, mb);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The stashed input activation of node `nid` (its first input's
+    /// output). For cross-partition inputs the forward pass stashed the
+    /// received tensor under the producer id.
+    fn node_input_act<'b>(
+        &self,
+        nid: NodeId,
+        acts: &'b HashMap<NodeId, Tensor>,
+    ) -> &'b Tensor {
+        let src = self.g.nodes[nid].inputs[0];
+        acts.get(&src).expect("input activation stashed")
+    }
+
+    /// One full training step (all microbatches + update). Returns the
+    /// replica-local metrics (meaningful on the last partition).
+    pub fn train_step(&mut self, step: u64) -> anyhow::Result<StepMetrics> {
+        let t0 = std::time::Instant::now();
+        if let Some(s) = &self.cfg.lr_schedule {
+            self.opt.lr = s.at(step);
+        }
+        let m = self.cfg.num_microbatches;
+        let mut stashes: Vec<HashMap<NodeId, Tensor>> = Vec::with_capacity(m);
+        let mut heads: Vec<Option<(f32, Tensor, Vec<usize>)>> = Vec::with_capacity(m);
+
+        // ---- forward fill ----
+        for mb in 0..m {
+            let mut acts = HashMap::new();
+            heads.push(self.forward_microbatch(step, mb, false, &mut acts)?);
+            stashes.push(acts);
+        }
+
+        // ---- backward drain (reverse microbatch order) ----
+        let mut grads: HashMap<NodeId, Vec<Tensor>> = HashMap::new();
+        for mb in (0..m).rev() {
+            let glogits = heads[mb].as_ref().map(|(_, g, _)| g);
+            // Forward-received activations for cross inputs are needed in
+            // backward too: restash them (they live in stashes[mb] already
+            // because forward inserted received tensors under producer ids
+            // only when consumed... see forward_microbatch note).
+            self.backward_microbatch(mb, &stashes[mb], glogits, &mut grads)?;
+        }
+
+        // ---- average over microbatches ----
+        let inv_m = 1.0 / m as f32;
+        for slots in grads.values_mut() {
+            for t in slots.iter_mut() {
+                t.scale(inv_m);
+            }
+        }
+
+        // ---- data-parallel allreduce (per-partition communicator) ----
+        let mut flat: Vec<&mut Tensor> = vec![];
+        let order = self.param_order.clone();
+        {
+            // Deterministic packing order across replicas.
+            let mut by_node: HashMap<NodeId, &mut Vec<Tensor>> =
+                grads.iter_mut().map(|(k, v)| (*k, v)).collect();
+            let mut staged: Vec<(usize, &mut Tensor)> = vec![];
+            for (i, (n, si)) in order.iter().enumerate() {
+                if let Some(slots) = by_node.remove(n) {
+                    for (j, t) in slots.iter_mut().enumerate() {
+                        staged.push((i * 16 + j, t));
+                    }
+                    let _ = si;
+                }
+            }
+            staged.sort_by_key(|(k, _)| *k);
+            flat = staged.into_iter().map(|(_, t)| t).collect();
+        }
+        self.ce.allreduce_grads(&mut flat)?;
+        drop(flat);
+
+        // ---- optimizer ----
+        self.opt.step(&order, &mut self.params, &grads);
+
+        // ---- metrics (last partition) ----
+        let mut metrics = StepMetrics {
+            samples: self.replica_batch() * self.ce.replica.size(),
+            ..Default::default()
+        };
+        if self.is_last_partition() {
+            let (mut loss_sum, mut correct, mut total) = (0.0f32, 0usize, 0usize);
+            for h in heads.iter().flatten() {
+                let (loss, glogits, labels) = h;
+                loss_sum += loss;
+                let (c, t) = accuracy_from_glogits(glogits, labels, self.cfg.microbatch);
+                correct += c;
+                total += t;
+            }
+            let mut mtr = Tensor::new(
+                Shape::new(&[2]),
+                vec![loss_sum / m as f32, correct as f32 / total.max(1) as f32],
+            );
+            self.ce.allreduce_metrics(&mut mtr)?;
+            metrics.loss = mtr.data[0];
+            metrics.accuracy = mtr.data[1];
+        }
+        metrics.step_secs = t0.elapsed().as_secs_f64();
+        Ok(metrics)
+    }
+
+    /// Forward-only evaluation over `batches` test microbatches.
+    /// Returns (loss, accuracy) on the last partition.
+    pub fn evaluate(&mut self, batches: usize) -> anyhow::Result<StepMetrics> {
+        let mut loss_sum = 0.0f32;
+        let (mut correct, mut total) = (0usize, 0usize);
+        for b in 0..batches {
+            let mut acts = HashMap::new();
+            // Use the test index space; spread replicas across it.
+            let head = self.forward_microbatch(b as u64, 0, true, &mut acts)?;
+            if let Some((loss, glogits, labels)) = head {
+                loss_sum += loss;
+                let (c, t) = accuracy_from_glogits(&glogits, &labels, self.cfg.microbatch);
+                correct += c;
+                total += t;
+            }
+        }
+        let mut metrics = StepMetrics::default();
+        if self.is_last_partition() {
+            let mut mtr = Tensor::new(
+                Shape::new(&[2]),
+                vec![
+                    loss_sum / batches.max(1) as f32,
+                    correct as f32 / total.max(1) as f32,
+                ],
+            );
+            self.ce.allreduce_metrics(&mut mtr)?;
+            metrics.loss = mtr.data[0];
+            metrics.accuracy = mtr.data[1];
+            metrics.samples = total;
+        }
+        Ok(metrics)
+    }
+
+    /// Snapshot of this rank's parameters keyed by (node, slot) — used by
+    /// the equivalence tests and checkpoint-style export.
+    pub fn export_params(&self) -> Vec<((NodeId, usize), Tensor)> {
+        let mut out = vec![];
+        for &(n, si) in &self.param_order {
+            out.push(((n, si), self.params[&n][si].clone()));
+        }
+        out
+    }
+
+    /// Names of the artifacts this partition executes (for warmup).
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v = vec![];
+        for &n in &self.my_nodes {
+            if let Some(a) =
+                crate::graph::artifact::node_artifact(self.g, n, self.cfg.microbatch)
+            {
+                v.push(a.fwd.clone());
+                if let Some(b) = a.bwd {
+                    v.push(b);
+                }
+            }
+        }
+        v
+    }
+}
+
+/// Recover predictions from the loss node's glogits:
+/// glogits = (softmax(logits) - y) / n  =>  probs = glogits * n + y.
+/// Since y is one-hot and softmax is monotone, argmax(probs) works directly.
+fn accuracy_from_glogits(glogits: &Tensor, labels: &[usize], n_mb: usize) -> (usize, usize) {
+    let classes = glogits.shape.dims()[1];
+    let mut correct = 0;
+    for (i, &l) in labels.iter().enumerate() {
+        let row = &glogits.data[i * classes..(i + 1) * classes];
+        let mut best = 0;
+        let mut best_v = f32::NEG_INFINITY;
+        for (c, &g) in row.iter().enumerate() {
+            let p = g * n_mb as f32 + if c == l { 1.0 } else { 0.0 };
+            if p > best_v {
+                best_v = p;
+                best = c;
+            }
+        }
+        if best == l {
+            correct += 1;
+        }
+    }
+    (correct, labels.len())
+}

@@ -1,0 +1,99 @@
+//! SGD with momentum — the optimizer the paper's Keras baselines use
+//! (`optimizer.apply_gradients()` in Listing 3). Keras semantics:
+//!
+//! ```text
+//! v <- momentum * v - lr * g
+//! w <- w + v
+//! ```
+//!
+//! State (one velocity tensor per parameter) lives on the partition that
+//! owns the parameter — the model-parallel sharding of optimizer state falls
+//! out of the layer partitioning for free, one of the memory wins §8 counts.
+
+use crate::graph::NodeId;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+pub struct SgdMomentum {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: HashMap<(NodeId, usize), Tensor>,
+}
+
+impl SgdMomentum {
+    pub fn new(
+        lr: f32,
+        momentum: f32,
+        param_order: &[(NodeId, usize)],
+        params: &HashMap<NodeId, Vec<Tensor>>,
+    ) -> Self {
+        let velocity = param_order
+            .iter()
+            .map(|&(n, si)| ((n, si), Tensor::zeros(params[&n][si].shape.dims())))
+            .collect();
+        SgdMomentum { lr, momentum, velocity }
+    }
+
+    /// Apply one update. Missing gradient entries (nodes without params)
+    /// are skipped.
+    pub fn step(
+        &mut self,
+        param_order: &[(NodeId, usize)],
+        params: &mut HashMap<NodeId, Vec<Tensor>>,
+        grads: &HashMap<NodeId, Vec<Tensor>>,
+    ) {
+        for &(n, si) in param_order {
+            let Some(gslots) = grads.get(&n) else { continue };
+            let g = &gslots[si];
+            let v = self.velocity.get_mut(&(n, si)).expect("velocity slot");
+            let w = &mut params.get_mut(&n).expect("param slot")[si];
+            for ((vi, gi), wi) in v.data.iter_mut().zip(g.data.iter()).zip(w.data.iter_mut()) {
+                *vi = self.momentum * *vi - self.lr * *gi;
+                *wi += *vi;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(lr: f32, mom: f32) -> (SgdMomentum, Vec<(NodeId, usize)>, HashMap<NodeId, Vec<Tensor>>) {
+        let order = vec![(1usize, 0usize)];
+        let mut params = HashMap::new();
+        params.insert(1usize, vec![Tensor::full(&[2], 1.0)]);
+        let opt = SgdMomentum::new(lr, mom, &order, &params);
+        (opt, order, params)
+    }
+
+    #[test]
+    fn plain_sgd_without_momentum() {
+        let (mut opt, order, mut params) = setup(0.1, 0.0);
+        let mut grads = HashMap::new();
+        grads.insert(1usize, vec![Tensor::full(&[2], 2.0)]);
+        opt.step(&order, &mut params, &grads);
+        assert_eq!(params[&1][0].data, vec![0.8; 2]); // 1 - 0.1*2
+    }
+
+    #[test]
+    fn momentum_accumulates_keras_style() {
+        let (mut opt, order, mut params) = setup(0.1, 0.9);
+        let mut grads = HashMap::new();
+        grads.insert(1usize, vec![Tensor::full(&[2], 1.0)]);
+        opt.step(&order, &mut params, &grads);
+        // v1 = -0.1, w = 0.9
+        assert!((params[&1][0].data[0] - 0.9).abs() < 1e-6);
+        opt.step(&order, &mut params, &grads);
+        // v2 = 0.9*(-0.1) - 0.1 = -0.19, w = 0.71
+        assert!((params[&1][0].data[0] - 0.71).abs() < 1e-6);
+    }
+
+    #[test]
+    fn missing_grads_leave_params_untouched() {
+        let (mut opt, order, mut params) = setup(0.1, 0.9);
+        let grads = HashMap::new();
+        opt.step(&order, &mut params, &grads);
+        assert_eq!(params[&1][0].data, vec![1.0; 2]);
+    }
+}

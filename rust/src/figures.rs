@@ -1,0 +1,380 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (§7, §8). Each `figNN_*` function returns a printable [`Table`] whose
+//! rows mirror what the paper plots; the `rust/benches/` harnesses and the
+//! `hyparflow bench` CLI subcommand are thin wrappers around these.
+//!
+//! Conventions (documented in EXPERIMENTS.md):
+//! - Throughput comparisons are at **equal effective batch size** (the
+//!   scientifically comparable accounting). Where the paper's own
+//!   per-replica-batch accounting changes the picture, the figure notes it.
+//! - "best MP" sweeps partitions and microbatch size and reports the best
+//!   configuration, matching the paper's "we observed the best performance
+//!   when split across k partitions" methodology.
+//! - DP baselines sweep replicas-per-node over socket/NUMA granularities
+//!   {2, 4, 8}, Horovod-CPU practice (the paper's own runs use 2ppn).
+
+use crate::graph::{zoo, ModelGraph};
+use crate::mem;
+use crate::partition::Partitioning;
+use crate::sim::{simulate, simulate_sequential, Platform, SimConfig, SimResult};
+use crate::util::Table;
+
+/// Best model-parallel configuration for a (model, platform, batch) within
+/// one node-set: sweeps partitions and microbatch size.
+pub fn best_mp(
+    g: &ModelGraph,
+    platform: &Platform,
+    nodes: usize,
+    parts_options: &[usize],
+    batch: usize,
+) -> (SimResult, usize, usize) {
+    let mut best: Option<(SimResult, usize, usize)> = None;
+    for &p in parts_options {
+        let Ok(pt) = Partitioning::auto(g, p) else { continue };
+        for mb in [1usize, 2, 4, 8] {
+            if batch % mb != 0 {
+                continue;
+            }
+            let m = batch / mb;
+            let mut cfg = SimConfig::new(platform.clone(), p, 1);
+            cfg.nodes = nodes;
+            cfg.ppn = p.div_ceil(nodes);
+            cfg.microbatch = mb;
+            cfg.num_microbatches = m;
+            let r = simulate(g, &pt, &cfg);
+            if best.as_ref().map_or(true, |(b, _, _)| r.img_per_sec > b.img_per_sec) {
+                best = Some((r, p, mb));
+            }
+        }
+    }
+    best.expect("at least one MP config")
+}
+
+/// Best data-parallel configuration at equal effective batch: sweeps
+/// replicas over socket/NUMA granularities.
+pub fn best_dp(
+    g: &ModelGraph,
+    platform: &Platform,
+    nodes: usize,
+    batch: usize,
+) -> (SimResult, usize) {
+    let pt = Partitioning::auto(g, 1).expect("P=1");
+    let mut best: Option<(SimResult, usize)> = None;
+    for ppn in [2usize, 4, 8] {
+        let r_total = nodes * ppn;
+        if batch % r_total != 0 || batch / r_total == 0 {
+            continue;
+        }
+        let mut cfg = SimConfig::new(platform.clone(), 1, r_total);
+        cfg.nodes = nodes;
+        cfg.ppn = ppn;
+        cfg.microbatch = batch / r_total;
+        cfg.num_microbatches = 1;
+        cfg.overlap_allreduce = false; // plain Horovod baseline
+        let r = simulate(g, &pt, &cfg);
+        if best.as_ref().map_or(true, |(b, _)| r.img_per_sec > b.img_per_sec) {
+            best = Some((r, r_total));
+        }
+    }
+    best.expect("at least one DP config")
+}
+
+fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1 — the need for model/hybrid parallelism (memory vs image size)
+// ---------------------------------------------------------------------------
+
+pub fn fig01_memory() -> Table {
+    let mut t = Table::new(&[
+        "model", "image", "mem (GB)", "P100-16G", "V100-32G", "SKX-192G",
+    ]);
+    let cases: Vec<(&str, usize)> = vec![
+        ("resnet110", 224),
+        ("resnet110", 720),
+        ("resnet1001", 224),
+        ("resnet1001", 336),
+        ("resnet1001", 720),
+        ("resnet5000", 224),
+        ("resnet5000", 331),
+    ];
+    for (name, img) in cases {
+        let g = match name {
+            "resnet110" => zoo::resnet_v1(110, &[3, img, img], 1000),
+            "resnet1001" => zoo::resnet_v2(1001, &[3, img, img], 1000),
+            _ => zoo::resnet_v2(4997, &[3, img, img], 1000),
+        };
+        let e = mem::sequential_memory(&g, 1);
+        let mark = |b: f64| if mem::trainable(&e, b) { "yes" } else { "NO" };
+        t.row(&[
+            name.into(),
+            format!("{img}x{img}"),
+            format!("{:.1}", e.total_gb()),
+            mark(mem::budgets::PASCAL_GB).into(),
+            mark(mem::budgets::VOLTA_GB).into(),
+            mark(mem::budgets::SKYLAKE_GB).into(),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Figs 7-10 — single-node seq vs MP vs DP across batch sizes
+// ---------------------------------------------------------------------------
+
+fn single_node_sweep(
+    g: &ModelGraph,
+    platform: &Platform,
+    parts_options: &[usize],
+    batches: &[usize],
+) -> Table {
+    let mut t = Table::new(&[
+        "BS", "seq img/s", "MP img/s", "(P,mb)", "DP img/s", "(R)", "MP/seq", "MP/DP",
+    ]);
+    for &bs in batches {
+        let seq = simulate_sequential(g, platform, bs);
+        let (mp, p, mb) = best_mp(g, platform, 1, parts_options, bs);
+        let (dp, r) = best_dp(g, platform, 1, bs);
+        t.row(&[
+            bs.to_string(),
+            f1(seq.img_per_sec),
+            f1(mp.img_per_sec),
+            format!("({p},{mb})"),
+            f1(dp.img_per_sec),
+            format!("({r})"),
+            format!("{:.2}x", mp.img_per_sec / seq.img_per_sec),
+            format!("{:.2}x", mp.img_per_sec / dp.img_per_sec),
+        ]);
+    }
+    t
+}
+
+/// Fig 7: VGG-16, one Skylake node, MP up to 8 partitions.
+pub fn fig07_vgg16() -> Table {
+    let g = zoo::vgg16(&[3, 32, 32], 10);
+    single_node_sweep(&g, &Platform::skylake48(), &[4, 8], &[16, 64, 128, 256, 512, 1024])
+}
+
+/// Fig 8: ResNet-110-v1, one Skylake node, MP up to 48 partitions.
+pub fn fig08_resnet110() -> Table {
+    let g = zoo::resnet110_v1();
+    single_node_sweep(
+        &g,
+        &Platform::skylake48(),
+        &[16, 32, 48],
+        &[32, 64, 128, 256, 512, 1024],
+    )
+}
+
+/// Fig 9: ResNet-110-v1 on the AMD platform, MP up to 64 partitions.
+pub fn fig09_resnet110_amd() -> Table {
+    let g = zoo::resnet110_v1();
+    single_node_sweep(
+        &g,
+        &Platform::epyc64(),
+        &[16, 32, 64],
+        &[32, 64, 128, 256, 512, 1024],
+    )
+}
+
+/// Fig 10: ResNet-1001-v2, one Skylake node, MP up to 48 partitions.
+pub fn fig10_resnet1001() -> Table {
+    let g = zoo::resnet1001_v2();
+    single_node_sweep(&g, &Platform::skylake48(), &[24, 48], &[32, 64, 128, 256])
+}
+
+// ---------------------------------------------------------------------------
+// Figs 11-12 — two-node model-parallel vs data-parallel
+// ---------------------------------------------------------------------------
+
+/// Fig 11: VGG-16 across two nodes with 8 model-partitions.
+pub fn fig11_vgg16_twonode() -> Table {
+    let g = zoo::vgg16(&[3, 32, 32], 10);
+    let p = Platform::skylake48();
+    let mut t = Table::new(&["BS", "MP-8 img/s", "DP img/s", "(R)", "MP/DP"]);
+    for bs in [16usize, 64, 128, 256, 512, 1024] {
+        let (mp, _, _) = best_mp(&g, &p, 2, &[8], bs);
+        let (dp, r) = best_dp(&g, &p, 2, bs);
+        t.row(&[
+            bs.to_string(),
+            f1(mp.img_per_sec),
+            f1(dp.img_per_sec),
+            format!("({r})"),
+            format!("{:.2}x", mp.img_per_sec / dp.img_per_sec),
+        ]);
+    }
+    t
+}
+
+/// Fig 12: ResNet-1001-v2 across two nodes with up to 96 partitions.
+pub fn fig12_resnet1001_twonode() -> Table {
+    let g = zoo::resnet1001_v2();
+    let p = Platform::skylake48();
+    let mut t = Table::new(&["BS", "MP img/s", "(P,mb)", "DP img/s", "(R)", "MP/DP"]);
+    for bs in [64usize, 128, 256] {
+        let (mp, parts, mb) = best_mp(&g, &p, 2, &[48, 96], bs);
+        let (dp, r) = best_dp(&g, &p, 2, bs);
+        t.row(&[
+            bs.to_string(),
+            f1(mp.img_per_sec),
+            format!("({parts},{mb})"),
+            f1(dp.img_per_sec),
+            format!("({r})"),
+            format!("{:.2}x", mp.img_per_sec / dp.img_per_sec),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig 13 — hybrid parallelism at scale (128 nodes)
+// ---------------------------------------------------------------------------
+
+/// Fig 13: ResNet-1001-v2 hybrid configurations on up to 128 nodes.
+/// Rows: (nodes, replicas, partitions, per-replica batch) -> EBS, img/s,
+/// speedup over single-node sequential.
+pub fn fig13_hybrid_128nodes() -> Table {
+    let g = zoo::resnet1001_v2();
+    let p = Platform::skylake48();
+    let seq1 = simulate_sequential(&g, &p, 256).img_per_sec;
+    let mut t = Table::new(&[
+        "nodes", "replicas", "parts", "BS/rep", "EBS", "img/s", "vs 1-node seq",
+    ]);
+    // (nodes, replicas, partitions, per-replica batch)
+    let configs: Vec<(usize, usize, usize, usize)> = vec![
+        (1, 1, 48, 256),      // single-node MP
+        (2, 2, 48, 256),      // 2 nodes hybrid
+        (8, 8, 48, 256),
+        (32, 32, 48, 256),
+        (128, 128, 48, 256),  // the paper's hybrid flagship: EBS 32768
+        (128, 256, 24, 128),  // more replicas, fewer partitions
+        (128, 256, 1, 256),   // pure DP at 128 nodes (2ppn)
+    ];
+    for (nodes, reps, parts, bs) in configs {
+        let pt = Partitioning::auto(&g, parts).unwrap();
+        let mut cfg = SimConfig::new(p.clone(), parts, reps);
+        cfg.nodes = nodes;
+        cfg.ppn = (parts * reps).div_ceil(nodes);
+        cfg.microbatch = if parts == 1 { bs } else { 1 };
+        cfg.num_microbatches = if parts == 1 { 1 } else { bs };
+        cfg.overlap_allreduce = parts > 1; // paper §5.3 vs plain Horovod
+        let r = simulate(&g, &pt, &cfg);
+        t.row(&[
+            nodes.to_string(),
+            reps.to_string(),
+            parts.to_string(),
+            bs.to_string(),
+            cfg.effective_batch().to_string(),
+            f1(r.img_per_sec),
+            format!("{:.1}x", r.img_per_sec / seq1),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — ResNet-5000 trainability at 331x331
+// ---------------------------------------------------------------------------
+
+pub fn table3_resnet5k() -> Table {
+    let g = zoo::resnet5000();
+    let budget = mem::budgets::SKYLAKE_GB;
+    let mut t = Table::new(&["batch", "Sequential", "HF-MP(2)", "HF-MP(4)", "(GB seq/2/4)"]);
+    for bs in [1usize, 2, 4] {
+        let seq = mem::sequential_memory(&g, bs);
+        let mp2 = mem::mp_memory(&g, 2, bs).unwrap();
+        let mp4 = mem::mp_memory(&g, 4, bs).unwrap();
+        let mark = |e: &mem::MemEstimate| if mem::trainable(e, budget) { "yes" } else { "NO" };
+        t.row(&[
+            bs.to_string(),
+            mark(&seq).into(),
+            mark(&mp2).into(),
+            mark(&mp4).into(),
+            format!("{:.0}/{:.0}/{:.0}", seq.total_gb(), mp2.total_gb(), mp4.total_gb()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig01_shape() {
+        let t = fig01_memory();
+        let s = t.to_string();
+        assert!(s.contains("resnet1001"));
+        // The paper's flagship fact: ResNet-1k @224 doesn't fit a P100.
+        let line = s.lines().find(|l| l.contains("resnet1001") && l.contains("224")).unwrap();
+        assert!(line.contains("NO"), "{line}");
+        assert!(line.contains("yes"), "{line}");
+    }
+
+    #[test]
+    fn fig08_mp_beats_seq_everywhere() {
+        let t = fig08_resnet110();
+        let s = t.to_string();
+        for line in s.lines().skip(2) {
+            // "MP/seq" column: must be > 1 for all batch sizes.
+            let cols: Vec<&str> = line.split('|').map(str::trim).collect();
+            let ratio: f64 = cols[7].trim_end_matches('x').parse().unwrap();
+            assert!(ratio > 1.0, "MP should beat seq: {line}");
+        }
+    }
+
+    #[test]
+    fn fig10_resnet1001_mp_beats_dp() {
+        // Paper's quoted points are at BS=128 (1.75x over DP) and BS=256
+        // (2.4x over seq); at the smallest batch our model has MP~DP.
+        let t = fig10_resnet1001();
+        let s = t.to_string();
+        for line in s.lines().skip(2) {
+            let cols: Vec<&str> = line.split('|').map(str::trim).collect();
+            let bs: usize = cols[1].parse().unwrap();
+            let ratio: f64 = cols[8].trim_end_matches('x').parse().unwrap();
+            if bs >= 64 {
+                assert!(ratio > 1.0, "1001: MP should beat DP at BS>=64: {line}");
+            } else {
+                assert!(ratio > 0.85, "1001: MP should be near DP at BS=32: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn table3_mp_enables_larger_batches() {
+        let t = table3_resnet5k();
+        let s = t.to_string();
+        let rows: Vec<&str> = s.lines().skip(2).collect();
+        // bs=4: sequential NO, MP(4) yes (paper's Table 3 diagonal).
+        assert!(rows[2].contains("NO"), "{}", rows[2]);
+        assert!(rows[2].matches("yes").count() >= 1, "{}", rows[2]);
+    }
+
+    #[test]
+    fn fig13_hybrid_scales_past_100x() {
+        let t = fig13_hybrid_128nodes();
+        let s = t.to_string();
+        let flagship = s
+            .lines()
+            .find(|l| {
+                let c: Vec<&str> = l.split('|').map(str::trim).collect();
+                c.len() > 3 && c[1] == "128" && c[3] == "48"
+            })
+            .unwrap_or_else(|| panic!("no 128-node 48-part row in:\n{s}"));
+        let speedup: f64 = flagship
+            .split('|')
+            .map(str::trim)
+            .nth(7)
+            .unwrap()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!(
+            speedup > 60.0 && speedup < 200.0,
+            "hybrid flagship should land near the paper's 110x: {speedup} \n{s}"
+        );
+    }
+}

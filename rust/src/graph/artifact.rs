@@ -1,0 +1,161 @@
+//! Mapping from graph nodes to AOT artifact names + registry lines.
+//!
+//! This is the single source of truth for the node -> primitive-instance
+//! naming contract shared with `python/compile/model.py` (`instance_name` /
+//! `PARAM_ORDER`): `hyparflow inspect --emit-registry` uses it to generate
+//! the registry the Python AOT step compiles, and the engine uses it to look
+//! up executables at run time. A mismatch shows up as a missing-artifact
+//! error naming both sides.
+
+use super::{LayerKind, ModelGraph, NodeId};
+
+/// Artifact names for one node at a given microbatch size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeArtifact {
+    /// `<base>.fwd` artifact name.
+    pub fwd: String,
+    /// `<base>.bwd` artifact name (None for softmaxxent: its fwd already
+    /// returns (loss, glogits)).
+    pub bwd: Option<String>,
+    /// The registry line that makes the Python side export this instance.
+    pub registry_line: String,
+}
+
+/// Returns `None` for nodes executed natively by the engine
+/// (Input / Add / Flatten).
+pub fn node_artifact(g: &ModelGraph, id: NodeId, mb: usize) -> Option<NodeArtifact> {
+    let node = &g.nodes[id];
+    let in_shape = node.inputs.first().map(|&i| g.nodes[i].out_shape.clone());
+    let (prim, params): (&str, Vec<(char, usize)>) = match &node.kind {
+        LayerKind::Input | LayerKind::Add | LayerKind::Flatten => return None,
+        LayerKind::Conv3x3 { cout, stride } => {
+            let s = in_shape.unwrap();
+            ("conv3x3", vec![('n', mb), ('c', s[0]), ('k', *cout),
+                             ('h', s[1]), ('w', s[2]), ('s', *stride)])
+        }
+        LayerKind::Conv1x1 { cout, stride } => {
+            let s = in_shape.unwrap();
+            ("conv1x1", vec![('n', mb), ('c', s[0]), ('k', *cout),
+                             ('h', s[1]), ('w', s[2]), ('s', *stride)])
+        }
+        LayerKind::ConvBnRelu { cout, stride } => {
+            let s = in_shape.unwrap();
+            ("convbnrelu", vec![('n', mb), ('c', s[0]), ('k', *cout),
+                                ('h', s[1]), ('w', s[2]), ('s', *stride)])
+        }
+        LayerKind::BatchNorm => {
+            let s = in_shape.unwrap();
+            ("bn", vec![('n', mb), ('c', s[0]), ('h', s[1]), ('w', s[2])])
+        }
+        LayerKind::Relu => {
+            let s = in_shape.unwrap();
+            match s.len() {
+                3 => ("relu4", vec![('n', mb), ('c', s[0]), ('h', s[1]), ('w', s[2])]),
+                1 => ("relu2", vec![('n', mb), ('d', s[0])]),
+                _ => panic!("relu on rank-{} input", s.len()),
+            }
+        }
+        LayerKind::MaxPool2 => {
+            let s = in_shape.unwrap();
+            ("maxpool2", vec![('n', mb), ('c', s[0]), ('h', s[1]), ('w', s[2])])
+        }
+        LayerKind::GlobalAvgPool => {
+            let s = in_shape.unwrap();
+            ("gap", vec![('n', mb), ('c', s[0]), ('h', s[1]), ('w', s[2])])
+        }
+        LayerKind::Dense { units } => {
+            let s = in_shape.unwrap();
+            ("dense", vec![('n', mb), ('d', s[0]), ('m', *units)])
+        }
+        LayerKind::DenseRelu { units } => {
+            let s = in_shape.unwrap();
+            ("denserelu", vec![('n', mb), ('d', s[0]), ('m', *units)])
+        }
+        LayerKind::SoftmaxXent => {
+            let s = in_shape.unwrap();
+            ("softmaxxent", vec![('n', mb), ('c', s[0])])
+        }
+    };
+    let base = format!(
+        "{prim}{}",
+        params.iter().map(|(k, v)| format!("_{k}{v}")).collect::<String>()
+    );
+    let registry_line = format!(
+        "{prim} {}",
+        params.iter().map(|(_, v)| v.to_string()).collect::<Vec<_>>().join(" ")
+    );
+    let bwd = if prim == "softmaxxent" { None } else { Some(format!("{base}.bwd")) };
+    Some(NodeArtifact { fwd: format!("{base}.fwd"), bwd, registry_line })
+}
+
+/// All registry lines needed to run `g` at microbatch `mb` (deduplicated,
+/// deterministic order).
+pub fn registry_lines(g: &ModelGraph, mb: usize) -> Vec<String> {
+    let mut seen = std::collections::BTreeSet::new();
+    for id in 0..g.num_nodes() {
+        if let Some(a) = node_artifact(g, id, mb) {
+            seen.insert(a.registry_line);
+        }
+    }
+    seen.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    #[test]
+    fn conv_names_match_python_instance_name() {
+        let mut g = ModelGraph::new("t", &[16, 32, 32]);
+        let x = g.input();
+        let c = g.conv3x3(x, 32, 2);
+        let a = node_artifact(&g, c, 8).unwrap();
+        assert_eq!(a.fwd, "conv3x3_n8_c16_k32_h32_w32_s2.fwd");
+        assert_eq!(a.bwd.as_deref(), Some("conv3x3_n8_c16_k32_h32_w32_s2.bwd"));
+        assert_eq!(a.registry_line, "conv3x3 8 16 32 32 32 2");
+    }
+
+    #[test]
+    fn native_nodes_have_no_artifact() {
+        let mut g = ModelGraph::new("t", &[4, 8, 8]);
+        let x = g.input();
+        let a = g.conv3x3(x, 4, 1);
+        let b = g.conv3x3(x, 4, 1);
+        let s = g.add(a, b);
+        let f = g.flatten(s);
+        assert!(node_artifact(&g, x, 2).is_none());
+        assert!(node_artifact(&g, s, 2).is_none());
+        assert!(node_artifact(&g, f, 2).is_none());
+    }
+
+    #[test]
+    fn loss_has_no_bwd() {
+        let g = zoo::mlp(4, &[], 3);
+        let loss = g.loss_node().unwrap();
+        let a = node_artifact(&g, loss, 2).unwrap();
+        assert_eq!(a.fwd, "softmaxxent_n2_c3.fwd");
+        assert!(a.bwd.is_none());
+    }
+
+    #[test]
+    fn registry_lines_dedupe() {
+        // resnet20 has many identical 16-ch conv3x3 blocks -> few lines.
+        let g = zoo::resnet20_v1();
+        let lines = registry_lines(&g, 8);
+        assert!(lines.len() < 30, "got {} lines", lines.len());
+        assert!(lines.iter().any(|l| l == "conv3x3 8 16 16 32 32 1"));
+        assert!(lines.iter().any(|l| l == "softmaxxent 8 10"));
+    }
+
+    #[test]
+    fn relu_rank_dispatch() {
+        let mut g = ModelGraph::new("t", &[4, 8, 8]);
+        let x = g.input();
+        let r4 = g.relu(x);
+        let f = g.flatten(r4);
+        let r2 = g.relu(f);
+        assert!(node_artifact(&g, r4, 2).unwrap().fwd.starts_with("relu4"));
+        assert!(node_artifact(&g, r2, 2).unwrap().fwd.starts_with("relu2"));
+    }
+}

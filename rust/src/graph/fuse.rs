@@ -1,0 +1,147 @@
+//! Graph rewrite: fuse `Conv3x3 -> BatchNorm -> Relu` chains into single
+//! [`LayerKind::ConvBnRelu`] nodes.
+//!
+//! This is the L2/L3 fusion lever of the performance pass (DESIGN.md
+//! §Perf): the fused primitive is one AOT artifact — one PJRT launch and
+//! one HBM round trip instead of three — and XLA fuses the BN/ReLU
+//! epilogue into the conv's im2col matmul consumer. Semantically identical
+//! to the unfused chain (same math, same parameters), so the equivalence
+//! suite can compare fused vs unfused training directly.
+//!
+//! Only chains where the conv and bn outputs have no other consumers are
+//! fused (skip connections tapping the intermediate keep it unfused).
+
+use super::{LayerKind, LayerNode, ModelGraph, NodeId};
+
+/// Returns a rewritten copy of `g` with every fusable conv-bn-relu chain
+/// collapsed, plus the number of fused chains.
+pub fn fuse_conv_bn_relu(g: &ModelGraph) -> (ModelGraph, usize) {
+    let n = g.num_nodes();
+    // consumers count per node
+    let mut fanout = vec![0usize; n];
+    for node in &g.nodes {
+        for &i in &node.inputs {
+            fanout[i] += 1;
+        }
+    }
+    // Identify chains: conv -> bn -> relu with single-fanout conv and bn.
+    // Map: relu node id -> (conv id, bn id).
+    let mut chain_of_relu: Vec<Option<(NodeId, NodeId)>> = vec![None; n];
+    let mut absorbed = vec![false; n];
+    for node in &g.nodes {
+        if !matches!(node.kind, LayerKind::Relu) {
+            continue;
+        }
+        let bn = node.inputs[0];
+        if !matches!(g.nodes[bn].kind, LayerKind::BatchNorm) || fanout[bn] != 1 {
+            continue;
+        }
+        let conv = g.nodes[bn].inputs[0];
+        if !matches!(g.nodes[conv].kind, LayerKind::Conv3x3 { .. }) || fanout[conv] != 1 {
+            continue;
+        }
+        chain_of_relu[node.id] = Some((conv, bn));
+        absorbed[conv] = true;
+        absorbed[bn] = true;
+    }
+
+    // Rebuild with absorbed nodes dropped; relu nodes of a chain become
+    // the fused node (keeping the relu's position preserves topology).
+    let mut remap = vec![usize::MAX; n];
+    let mut out = ModelGraph::new(&format!("{}_fused", g.name), &g.input_shape);
+    out.nodes.clear();
+    let mut fused = 0usize;
+    for node in &g.nodes {
+        if absorbed[node.id] {
+            continue;
+        }
+        let new_id = out.nodes.len();
+        remap[node.id] = new_id;
+        let new_node = if let Some((conv, bn)) = chain_of_relu[node.id] {
+            fused += 1;
+            let (cout, stride) = match g.nodes[conv].kind {
+                LayerKind::Conv3x3 { cout, stride } => (cout, stride),
+                _ => unreachable!(),
+            };
+            let x = remap[g.nodes[conv].inputs[0]];
+            debug_assert_ne!(x, usize::MAX, "input remapped before use");
+            let mut params = g.nodes[conv].params.clone();
+            params.extend(g.nodes[bn].params.clone());
+            LayerNode {
+                id: new_id,
+                kind: LayerKind::ConvBnRelu { cout, stride },
+                inputs: vec![x],
+                out_shape: node.out_shape.clone(),
+                params,
+            }
+        } else {
+            LayerNode {
+                id: new_id,
+                kind: node.kind.clone(),
+                inputs: node.inputs.iter().map(|&i| remap[i]).collect(),
+                out_shape: node.out_shape.clone(),
+                params: node.params.clone(),
+            }
+        };
+        out.nodes.push(new_node);
+    }
+    (out, fused)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    #[test]
+    fn fuses_v1_block_bodies() {
+        let g = zoo::resnet20_v1();
+        let (f, fused) = fuse_conv_bn_relu(&g);
+        f.validate().unwrap();
+        // v1: stem conv-bn-relu + first conv-bn-relu of each of 9 blocks
+        // fuse; each block's second conv-bn feeds Add (bn fanout 1 but no
+        // relu directly after) so it stays unfused.
+        assert_eq!(fused, 10, "stem + 9 block-first chains");
+        assert!(f.num_nodes() < g.num_nodes());
+        // Parameters preserved exactly.
+        assert_eq!(f.num_params(), g.num_params());
+    }
+
+    #[test]
+    fn skip_tapped_intermediates_stay_unfused() {
+        let mut g = crate::graph::ModelGraph::new("t", &[3, 8, 8]);
+        let x = g.input();
+        let c = g.conv3x3(x, 4, 1);
+        let b = g.batchnorm(c);
+        let r = g.relu(b);
+        // A second consumer of the conv output blocks fusion.
+        let side = g.conv3x3(c, 4, 1);
+        let s = g.add(r, side);
+        let p = g.gap(s);
+        let d = g.dense(p, 2);
+        g.loss(d);
+        let (f, fused) = fuse_conv_bn_relu(&g);
+        assert_eq!(fused, 0);
+        assert_eq!(f.num_nodes(), g.num_nodes());
+    }
+
+    #[test]
+    fn shapes_and_costs_preserved() {
+        let g = zoo::resnet20_v1();
+        let (f, _) = fuse_conv_bn_relu(&g);
+        // Same logits shape, roughly same FLOPs (fused adds the BN epilogue
+        // into the conv node's cost model).
+        let gl = g.loss_node().unwrap();
+        let fl = f.loss_node().unwrap();
+        assert_eq!(g.nodes[gl].out_shape, f.nodes[fl].out_shape);
+        let ratio = f.total_flops() / g.total_flops();
+        assert!((0.95..1.05).contains(&ratio), "flops ratio {ratio}");
+    }
+
+    #[test]
+    fn vgg_has_no_bn_so_nothing_fuses() {
+        let g = zoo::vgg16(&[3, 32, 32], 10);
+        let (_, fused) = fuse_conv_bn_relu(&g);
+        assert_eq!(fused, 0);
+    }
+}

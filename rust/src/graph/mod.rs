@@ -1,0 +1,537 @@
+//! The Keras-equivalent model definition layer: a DAG of typed layer nodes
+//! with skip connections, shape inference, parameter specs and an analytic
+//! cost model (FLOPs / bytes / params) that feeds the Load Balancer, the
+//! memory estimator and the cluster simulator.
+//!
+//! This plays the role the *Keras model object* plays in the paper: the user
+//! (or the zoo) builds a `ModelGraph` once, and the Model Generator
+//! (`crate::partition`) turns it into a distributed model without any change
+//! to the definition — the paper's "user-transparent" contract.
+//!
+//! Shapes stored per node are **per-sample** (no batch dimension); the batch
+//! (microbatch) size is prepended at run time, so one graph serves any batch
+//! size.
+
+pub mod artifact;
+pub mod fuse;
+pub mod zoo;
+
+use std::fmt;
+
+/// Node index within a [`ModelGraph`]. Nodes are stored in topological
+/// order by construction (the builder only lets you reference existing
+/// nodes as inputs).
+pub type NodeId = usize;
+
+/// Layer types. The set mirrors what the paper's models (VGG-16,
+/// ResNet-v1/v2) require, plus the fused conv+bn+relu fast-path variant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    /// Graph input (the data tensor). Exactly one per graph, at node 0.
+    Input,
+    /// 3x3 SAME conv, `stride` in {1,2}. Params: w[K,C,3,3].
+    Conv3x3 { cout: usize, stride: usize },
+    /// 1x1 conv (projection shortcut / bottleneck), `stride` in {1,2}.
+    Conv1x1 { cout: usize, stride: usize },
+    /// Fused 3x3 conv + train-mode BN + ReLU (single artifact; perf path).
+    ConvBnRelu { cout: usize, stride: usize },
+    /// Train-mode batch normalization. Params: gamma[C], beta[C].
+    BatchNorm,
+    /// ReLU (rank-4 or rank-2 depending on input).
+    Relu,
+    /// Elementwise add of two branches (the ResNet skip join).
+    /// Executed natively by the engine — no artifact.
+    Add,
+    /// 2x2 max pool, stride 2 (VGG).
+    MaxPool2,
+    /// Global average pool: [C,H,W] -> [C].
+    GlobalAvgPool,
+    /// Reshape [C,H,W] -> [C*H*W]. Free (row-major view); no artifact.
+    Flatten,
+    /// Fully connected. Params: w[D,M], b[M].
+    Dense { units: usize },
+    /// Fused dense + ReLU.
+    DenseRelu { units: usize },
+    /// Softmax cross-entropy head: consumes logits, produces
+    /// (scalar loss, dloss/dlogits). Terminal node; labels are supplied by
+    /// the engine, not modeled as a graph edge.
+    SoftmaxXent,
+}
+
+impl LayerKind {
+    /// Does this layer carry trainable parameters?
+    pub fn has_params(&self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv3x3 { .. }
+                | LayerKind::Conv1x1 { .. }
+                | LayerKind::ConvBnRelu { .. }
+                | LayerKind::BatchNorm
+                | LayerKind::Dense { .. }
+                | LayerKind::DenseRelu { .. }
+        )
+    }
+
+    /// Is this a "weight layer" in the paper's layer-counting sense
+    /// (conv/dense — what "ResNet-110 has 110 layers" counts)?
+    pub fn is_weight_layer(&self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv3x3 { .. }
+                | LayerKind::Conv1x1 { .. }
+                | LayerKind::ConvBnRelu { .. }
+                | LayerKind::Dense { .. }
+                | LayerKind::DenseRelu { .. }
+        )
+    }
+}
+
+/// A trainable parameter slot of a node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    /// Human-readable role: "w", "b", "gamma", "beta".
+    pub role: &'static str,
+    pub dims: Vec<usize>,
+    /// Fan-in for He-normal init (0 => init to the role's default:
+    /// gamma=1, beta=0, b=0).
+    pub fan_in: usize,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One node of the model graph.
+#[derive(Clone, Debug)]
+pub struct LayerNode {
+    pub id: NodeId,
+    pub kind: LayerKind,
+    /// Producer nodes (1 for most layers, 2 for Add).
+    pub inputs: Vec<NodeId>,
+    /// Per-sample output shape (no batch dim).
+    pub out_shape: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+}
+
+/// Per-node analytic costs (per sample).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeCost {
+    /// Forward FLOPs per sample. Backward is modeled as 2x forward.
+    pub flops: f64,
+    /// Output activation elements per sample (saved for backward).
+    pub activation: usize,
+    /// Trainable parameter count.
+    pub params: usize,
+}
+
+/// The model: a topologically-ordered DAG with exactly one `Input` node
+/// (id 0) and a `SoftmaxXent` terminal for trainable models.
+#[derive(Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    /// Per-sample input shape, e.g. [3, 32, 32].
+    pub input_shape: Vec<usize>,
+    pub nodes: Vec<LayerNode>,
+}
+
+impl ModelGraph {
+    /// Start a graph; node 0 is the input.
+    pub fn new(name: &str, input_shape: &[usize]) -> Self {
+        let input = LayerNode {
+            id: 0,
+            kind: LayerKind::Input,
+            inputs: vec![],
+            out_shape: input_shape.to_vec(),
+            params: vec![],
+        };
+        ModelGraph {
+            name: name.to_string(),
+            input_shape: input_shape.to_vec(),
+            nodes: vec![input],
+        }
+    }
+
+    pub fn input(&self) -> NodeId {
+        0
+    }
+
+    fn shape_of(&self, id: NodeId) -> &[usize] {
+        &self.nodes[id].out_shape
+    }
+
+    fn push(&mut self, kind: LayerKind, inputs: Vec<NodeId>) -> NodeId {
+        for &i in &inputs {
+            assert!(i < self.nodes.len(), "input node {i} does not exist yet");
+        }
+        let id = self.nodes.len();
+        let (out_shape, params) = self.infer(&kind, &inputs);
+        self.nodes.push(LayerNode { id, kind, inputs, out_shape, params });
+        id
+    }
+
+    /// Shape inference + parameter specs for a new node.
+    fn infer(&self, kind: &LayerKind, inputs: &[NodeId]) -> (Vec<usize>, Vec<ParamSpec>) {
+        let in0 = inputs.first().map(|&i| self.shape_of(i).to_vec());
+        match kind {
+            LayerKind::Input => unreachable!("Input is created by new()"),
+            LayerKind::Conv3x3 { cout, stride }
+            | LayerKind::ConvBnRelu { cout, stride } => {
+                let s = in0.unwrap();
+                assert_eq!(s.len(), 3, "conv expects [C,H,W], got {s:?}");
+                let (c, h, w) = (s[0], s[1], s[2]);
+                let (ho, wo) = (h.div_ceil(*stride), w.div_ceil(*stride));
+                let mut params = vec![ParamSpec {
+                    role: "w",
+                    dims: vec![*cout, c, 3, 3],
+                    fan_in: 9 * c,
+                }];
+                if matches!(kind, LayerKind::ConvBnRelu { .. }) {
+                    params.push(ParamSpec { role: "gamma", dims: vec![*cout], fan_in: 0 });
+                    params.push(ParamSpec { role: "beta", dims: vec![*cout], fan_in: 0 });
+                }
+                (vec![*cout, ho, wo], params)
+            }
+            LayerKind::Conv1x1 { cout, stride } => {
+                let s = in0.unwrap();
+                assert_eq!(s.len(), 3, "conv expects [C,H,W], got {s:?}");
+                let (c, h, w) = (s[0], s[1], s[2]);
+                let (ho, wo) = (h.div_ceil(*stride), w.div_ceil(*stride));
+                let params = vec![ParamSpec {
+                    role: "w",
+                    dims: vec![*cout, c, 1, 1],
+                    fan_in: c,
+                }];
+                (vec![*cout, ho, wo], params)
+            }
+            LayerKind::BatchNorm => {
+                let s = in0.unwrap();
+                assert_eq!(s.len(), 3, "bn expects [C,H,W], got {s:?}");
+                let c = s[0];
+                let params = vec![
+                    ParamSpec { role: "gamma", dims: vec![c], fan_in: 0 },
+                    ParamSpec { role: "beta", dims: vec![c], fan_in: 0 },
+                ];
+                (s, params)
+            }
+            LayerKind::Relu => (in0.unwrap(), vec![]),
+            LayerKind::Add => {
+                assert_eq!(inputs.len(), 2, "Add takes two inputs");
+                let a = self.shape_of(inputs[0]);
+                let b = self.shape_of(inputs[1]);
+                assert_eq!(a, b, "Add branch shapes differ: {a:?} vs {b:?}");
+                (a.to_vec(), vec![])
+            }
+            LayerKind::MaxPool2 => {
+                let s = in0.unwrap();
+                assert_eq!(s.len(), 3);
+                assert!(s[1] % 2 == 0 && s[2] % 2 == 0,
+                        "maxpool2 needs even H,W, got {s:?}");
+                (vec![s[0], s[1] / 2, s[2] / 2], vec![])
+            }
+            LayerKind::GlobalAvgPool => {
+                let s = in0.unwrap();
+                assert_eq!(s.len(), 3);
+                (vec![s[0]], vec![])
+            }
+            LayerKind::Flatten => {
+                let s = in0.unwrap();
+                (vec![s.iter().product()], vec![])
+            }
+            LayerKind::Dense { units } | LayerKind::DenseRelu { units } => {
+                let s = in0.unwrap();
+                assert_eq!(s.len(), 1, "dense expects flat input, got {s:?}");
+                let d = s[0];
+                let params = vec![
+                    ParamSpec { role: "w", dims: vec![d, *units], fan_in: d },
+                    ParamSpec { role: "b", dims: vec![*units], fan_in: 0 },
+                ];
+                (vec![*units], params)
+            }
+            LayerKind::SoftmaxXent => {
+                let s = in0.unwrap();
+                assert_eq!(s.len(), 1, "loss expects logits [C], got {s:?}");
+                // Output shape recorded as the glogits shape; the scalar loss
+                // is side-channel.
+                (s, vec![])
+            }
+        }
+    }
+
+    // ---- builder methods (the Keras-like API) ----
+
+    pub fn conv3x3(&mut self, x: NodeId, cout: usize, stride: usize) -> NodeId {
+        self.push(LayerKind::Conv3x3 { cout, stride }, vec![x])
+    }
+
+    pub fn conv1x1(&mut self, x: NodeId, cout: usize, stride: usize) -> NodeId {
+        self.push(LayerKind::Conv1x1 { cout, stride }, vec![x])
+    }
+
+    pub fn conv_bn_relu(&mut self, x: NodeId, cout: usize, stride: usize) -> NodeId {
+        self.push(LayerKind::ConvBnRelu { cout, stride }, vec![x])
+    }
+
+    pub fn batchnorm(&mut self, x: NodeId) -> NodeId {
+        self.push(LayerKind::BatchNorm, vec![x])
+    }
+
+    pub fn relu(&mut self, x: NodeId) -> NodeId {
+        self.push(LayerKind::Relu, vec![x])
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.push(LayerKind::Add, vec![a, b])
+    }
+
+    pub fn maxpool2(&mut self, x: NodeId) -> NodeId {
+        self.push(LayerKind::MaxPool2, vec![x])
+    }
+
+    pub fn gap(&mut self, x: NodeId) -> NodeId {
+        self.push(LayerKind::GlobalAvgPool, vec![x])
+    }
+
+    pub fn flatten(&mut self, x: NodeId) -> NodeId {
+        self.push(LayerKind::Flatten, vec![x])
+    }
+
+    pub fn dense(&mut self, x: NodeId, units: usize) -> NodeId {
+        self.push(LayerKind::Dense { units }, vec![x])
+    }
+
+    pub fn dense_relu(&mut self, x: NodeId, units: usize) -> NodeId {
+        self.push(LayerKind::DenseRelu { units }, vec![x])
+    }
+
+    pub fn loss(&mut self, logits: NodeId) -> NodeId {
+        self.push(LayerKind::SoftmaxXent, vec![logits])
+    }
+
+    // ---- queries ----
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Paper-style layer count (conv + dense weight layers).
+    pub fn num_weight_layers(&self) -> usize {
+        self.nodes.iter().filter(|n| n.kind.is_weight_layer()).count()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.nodes
+            .iter()
+            .flat_map(|n| n.params.iter())
+            .map(|p| p.numel())
+            .sum()
+    }
+
+    /// Ids of nodes that consume `id`'s output.
+    pub fn consumers(&self, id: NodeId) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| n.inputs.contains(&id))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Terminal (loss) node, if present.
+    pub fn loss_node(&self) -> Option<NodeId> {
+        self.nodes
+            .iter()
+            .rev()
+            .find(|n| matches!(n.kind, LayerKind::SoftmaxXent))
+            .map(|n| n.id)
+    }
+
+    /// Validate DAG invariants (used by tests and the partitioner).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.nodes.is_empty(), "empty graph");
+        anyhow::ensure!(
+            matches!(self.nodes[0].kind, LayerKind::Input),
+            "node 0 must be Input"
+        );
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                anyhow::ensure!(i < n.id, "node {} has non-topological input {i}", n.id);
+            }
+            let want_inputs = match n.kind {
+                LayerKind::Input => 0,
+                LayerKind::Add => 2,
+                _ => 1,
+            };
+            anyhow::ensure!(
+                n.inputs.len() == want_inputs,
+                "node {} ({:?}) expects {} inputs, has {}",
+                n.id, n.kind, want_inputs, n.inputs.len()
+            );
+        }
+        // Every non-terminal node must be consumed (no dangling branches).
+        for n in &self.nodes {
+            if Some(n.id) != self.loss_node() && n.id != self.nodes.len() - 1 {
+                anyhow::ensure!(
+                    !self.consumers(n.id).is_empty(),
+                    "node {} ({:?}) has no consumers",
+                    n.id, n.kind
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Analytic per-sample cost of one node.
+    pub fn node_cost(&self, id: NodeId) -> NodeCost {
+        let n = &self.nodes[id];
+        let out: usize = n.out_shape.iter().product();
+        let params: usize = n.params.iter().map(|p| p.numel()).sum();
+        let flops = match &n.kind {
+            LayerKind::Input => 0.0,
+            LayerKind::Conv3x3 { cout, .. } | LayerKind::ConvBnRelu { cout, .. } => {
+                let cin = self.shape_of(n.inputs[0])[0];
+                let spatial: usize = n.out_shape[1..].iter().product();
+                let conv = 2.0 * (*cout as f64) * (cin as f64) * 9.0 * spatial as f64;
+                if matches!(n.kind, LayerKind::ConvBnRelu { .. }) {
+                    conv + 10.0 * out as f64
+                } else {
+                    conv
+                }
+            }
+            LayerKind::Conv1x1 { cout, .. } => {
+                let cin = self.shape_of(n.inputs[0])[0];
+                let spatial: usize = n.out_shape[1..].iter().product();
+                2.0 * (*cout as f64) * (cin as f64) * spatial as f64
+            }
+            LayerKind::BatchNorm => 8.0 * out as f64,
+            LayerKind::Relu | LayerKind::Add => out as f64,
+            LayerKind::MaxPool2 => 4.0 * out as f64,
+            LayerKind::GlobalAvgPool => {
+                let s = self.shape_of(n.inputs[0]);
+                (s.iter().product::<usize>()) as f64
+            }
+            LayerKind::Flatten => 0.0,
+            LayerKind::Dense { units } | LayerKind::DenseRelu { units } => {
+                let d = self.shape_of(n.inputs[0])[0];
+                2.0 * d as f64 * *units as f64
+            }
+            LayerKind::SoftmaxXent => 5.0 * out as f64,
+        };
+        NodeCost { flops, activation: out, params }
+    }
+
+    /// Total forward FLOPs per sample.
+    pub fn total_flops(&self) -> f64 {
+        (0..self.nodes.len()).map(|i| self.node_cost(i).flops).sum()
+    }
+}
+
+impl fmt::Debug for ModelGraph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "ModelGraph '{}': {} nodes, {} weight layers, {} params",
+            self.name,
+            self.num_nodes(),
+            self.num_weight_layers(),
+            self.num_params()
+        )?;
+        for n in &self.nodes {
+            writeln!(
+                f,
+                "  [{:4}] {:?} <- {:?} -> {:?}",
+                n.id, n.kind, n.inputs, n.out_shape
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelGraph {
+        let mut g = ModelGraph::new("tiny", &[3, 8, 8]);
+        let x = g.input();
+        let c = g.conv3x3(x, 4, 1);
+        let b = g.batchnorm(c);
+        let r = g.relu(b);
+        let p = g.gap(r);
+        let d = g.dense(p, 10);
+        g.loss(d);
+        g
+    }
+
+    #[test]
+    fn shapes_infer() {
+        let g = tiny();
+        assert_eq!(g.nodes[1].out_shape, vec![4, 8, 8]);
+        assert_eq!(g.nodes[4].out_shape, vec![4]);
+        assert_eq!(g.nodes[5].out_shape, vec![10]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn strided_conv_halves_spatial() {
+        let mut g = ModelGraph::new("s", &[16, 32, 32]);
+        let x = g.input();
+        let c = g.conv3x3(x, 32, 2);
+        assert_eq!(g.nodes[c].out_shape, vec![32, 16, 16]);
+        let c2 = g.conv1x1(c, 64, 2);
+        assert_eq!(g.nodes[c2].out_shape, vec![64, 8, 8]);
+    }
+
+    #[test]
+    fn add_requires_matching_shapes() {
+        let mut g = ModelGraph::new("a", &[3, 8, 8]);
+        let x = g.input();
+        let a = g.conv3x3(x, 4, 1);
+        let b = g.conv3x3(x, 4, 1);
+        let s = g.add(a, b);
+        assert_eq!(g.nodes[s].out_shape, vec![4, 8, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "branch shapes differ")]
+    fn add_mismatched_panics() {
+        let mut g = ModelGraph::new("a", &[3, 8, 8]);
+        let x = g.input();
+        let a = g.conv3x3(x, 4, 1);
+        let b = g.conv3x3(x, 8, 1);
+        g.add(a, b);
+    }
+
+    #[test]
+    fn param_counts() {
+        let g = tiny();
+        // conv 4*3*3*3 + bn 2*4 + dense 4*10+10
+        assert_eq!(g.num_params(), 108 + 8 + 50);
+        assert_eq!(g.num_weight_layers(), 2);
+    }
+
+    #[test]
+    fn consumers_and_loss_node() {
+        let g = tiny();
+        assert_eq!(g.consumers(1), vec![2]);
+        assert_eq!(g.loss_node(), Some(6));
+    }
+
+    #[test]
+    fn flops_scale_with_channels() {
+        let mut g = ModelGraph::new("f", &[16, 32, 32]);
+        let x = g.input();
+        let a = g.conv3x3(x, 16, 1);
+        let b = g.conv3x3(a, 32, 1);
+        assert!(g.node_cost(b).flops > g.node_cost(a).flops * 1.9);
+    }
+
+    #[test]
+    fn flatten_is_free_and_correct() {
+        let mut g = ModelGraph::new("fl", &[4, 2, 2]);
+        let x = g.input();
+        let f = g.flatten(x);
+        assert_eq!(g.nodes[f].out_shape, vec![16]);
+        assert_eq!(g.node_cost(f).flops, 0.0);
+    }
+}

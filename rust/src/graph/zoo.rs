@@ -1,0 +1,296 @@
+//! The model zoo: the paper's evaluation models (VGG-16, ResNet-v1,
+//! ResNet-v2 at depths 110 / 1001 / 5000) plus MLPs for tests and the
+//! ~100M-parameter end-to-end example.
+//!
+//! Architectures follow the Keras reference the paper trains against
+//! (keras.io cifar10_resnet, the paper's accuracy baseline):
+//! - ResNet-v1 (depth = 6n+2): conv-bn-relu stem; 3 stages of n basic
+//!   blocks (conv-bn-relu, conv-bn, add, relu); projection (1x1 conv)
+//!   shortcut on stage transitions; GAP + dense softmax head.
+//! - ResNet-v2 (depth = 9n+2): conv stem; 3 stages of n bottleneck blocks
+//!   (bn-relu-1x1, bn-relu-3x3, bn-relu-1x1x4); BN-relu epilogue; GAP +
+//!   dense head.
+
+use super::{ModelGraph, NodeId};
+
+/// Plain MLP: dense_relu hidden layers + linear head + loss.
+pub fn mlp(input_dim: usize, hidden: &[usize], classes: usize) -> ModelGraph {
+    let mut g = ModelGraph::new("mlp", &[input_dim]);
+    let mut x = g.input();
+    for &h in hidden {
+        x = g.dense_relu(x, h);
+    }
+    let logits = g.dense(x, classes);
+    g.loss(logits);
+    g
+}
+
+/// The end-to-end example model: ~100M parameters (3072 -> 6x4096 -> 10).
+/// 3072*4096 + 5*4096^2 + 4096*10 + biases = 96.5M.
+pub fn wide_mlp_100m() -> ModelGraph {
+    let mut g = mlp(3072, &[4096, 4096, 4096, 4096, 4096, 4096], 10);
+    g.name = "wide_mlp_100m".into();
+    g
+}
+
+/// VGG-16 (13 conv + 3 dense = 16 weight layers, the paper's Fig 7/11/14
+/// model), adapted to the input resolution: 32x32 CIFAR input leaves a 1x1
+/// spatial map after the five pools.
+pub fn vgg16(input: &[usize; 3], classes: usize) -> ModelGraph {
+    let mut g = ModelGraph::new("vgg16", input);
+    let mut x = g.input();
+    let plan: &[&[usize]] = &[&[64, 64], &[128, 128], &[256, 256, 256],
+                              &[512, 512, 512], &[512, 512, 512]];
+    for stage in plan {
+        for &c in *stage {
+            let c1 = g.conv3x3(x, c, 1);
+            x = g.relu(c1);
+        }
+        x = g.maxpool2(x);
+    }
+    x = g.flatten(x);
+    x = g.dense_relu(x, 512);
+    x = g.dense_relu(x, 512);
+    let logits = g.dense(x, classes);
+    g.loss(logits);
+    g
+}
+
+/// One ResNet-v1 basic block.
+fn v1_block(g: &mut ModelGraph, x: NodeId, cout: usize, stride: usize,
+            project: bool) -> NodeId {
+    let c1 = g.conv3x3(x, cout, stride);
+    let b1 = g.batchnorm(c1);
+    let r1 = g.relu(b1);
+    let c2 = g.conv3x3(r1, cout, 1);
+    let b2 = g.batchnorm(c2);
+    let shortcut = if project { g.conv1x1(x, cout, stride) } else { x };
+    let s = g.add(b2, shortcut);
+    g.relu(s)
+}
+
+/// ResNet-v1 for 3-channel square inputs; depth = 6n+2.
+pub fn resnet_v1(depth: usize, input: &[usize; 3], classes: usize) -> ModelGraph {
+    assert!(depth >= 8 && (depth - 2) % 6 == 0,
+            "v1 depth must be 6n+2, got {depth}");
+    let n = (depth - 2) / 6;
+    let mut g = ModelGraph::new(&format!("resnet{depth}_v1"), input);
+    let mut x = g.input();
+    let c = g.conv3x3(x, 16, 1);
+    let b = g.batchnorm(c);
+    x = g.relu(b);
+    for (stage, &cout) in [16usize, 32, 64].iter().enumerate() {
+        for block in 0..n {
+            let stride = if stage > 0 && block == 0 { 2 } else { 1 };
+            let project = stage > 0 && block == 0;
+            x = v1_block(&mut g, x, cout, stride, project);
+        }
+    }
+    let p = g.gap(x);
+    let logits = g.dense(p, classes);
+    g.loss(logits);
+    g
+}
+
+/// One ResNet-v2 bottleneck block (pre-activation):
+/// bn-relu-conv1x1(f) . bn-relu-conv3x3(f) . bn-relu-conv1x1(fout), with a
+/// 1x1 projection shortcut from the block input on stage transitions
+/// (matching the Keras cifar10_resnet v2 reference the paper trains).
+fn v2_block(g: &mut ModelGraph, x: NodeId, f: usize, fout: usize,
+            stride: usize, project: bool) -> NodeId {
+    let b1 = g.batchnorm(x);
+    let r1 = g.relu(b1);
+    let c1 = g.conv1x1(r1, f, stride);
+    let b2 = g.batchnorm(c1);
+    let r2 = g.relu(b2);
+    let c2 = g.conv3x3(r2, f, 1);
+    let b3 = g.batchnorm(c2);
+    let r3 = g.relu(b3);
+    let c3 = g.conv1x1(r3, fout, 1);
+    let shortcut = if project { g.conv1x1(x, fout, stride) } else { x };
+    g.add(c3, shortcut)
+}
+
+/// ResNet-v2 (pre-activation bottleneck); depth = 9n+2. Bottleneck widths
+/// per stage are (16, 64, 128) with outputs (64, 128, 256), following the
+/// Keras reference — this is what yields the paper's "ResNet-1001 has
+/// ~30 million parameters" (He et al.'s original v2 uses narrower
+/// bottlenecks and lands at 10.2M).
+pub fn resnet_v2(depth: usize, input: &[usize; 3], classes: usize) -> ModelGraph {
+    assert!(depth >= 11 && (depth - 2) % 9 == 0,
+            "v2 depth must be 9n+2, got {depth}");
+    let n = (depth - 2) / 9;
+    let mut g = ModelGraph::new(&format!("resnet{depth}_v2"), input);
+    let x0 = g.input();
+    let mut x = g.conv3x3(x0, 16, 1);
+    let mut f_in = 16usize;
+    for stage in 0..3 {
+        let fout = if stage == 0 { f_in * 4 } else { f_in * 2 };
+        for block in 0..n {
+            let stride = if stage > 0 && block == 0 { 2 } else { 1 };
+            let project = block == 0;
+            x = v2_block(&mut g, x, f_in, fout, stride, project);
+        }
+        f_in = fout;
+    }
+    let b = g.batchnorm(x);
+    let r = g.relu(b);
+    let p = g.gap(r);
+    let logits = g.dense(p, classes);
+    g.loss(logits);
+    g
+}
+
+pub fn resnet20_v1() -> ModelGraph {
+    resnet_v1(20, &[3, 32, 32], 10)
+}
+
+pub fn resnet56_v1() -> ModelGraph {
+    resnet_v1(56, &[3, 32, 32], 10)
+}
+
+/// The paper's Fig 8/9/15 model.
+pub fn resnet110_v1() -> ModelGraph {
+    resnet_v1(110, &[3, 32, 32], 10)
+}
+
+pub fn resnet164_v2() -> ModelGraph {
+    resnet_v2(164, &[3, 32, 32], 10)
+}
+
+/// The paper's Fig 10/12/13/16 model (9*111+2 = 1001).
+pub fn resnet1001_v2() -> ModelGraph {
+    resnet_v2(1001, &[3, 32, 32], 10)
+}
+
+/// The paper's §8 next-generation model: closest 9n+2 configuration to
+/// 5,000 layers (9*555+2 = 4997), at the paper's 331x331 image size.
+pub fn resnet5000() -> ModelGraph {
+    let mut g = resnet_v2(4997, &[3, 332, 332], 10);
+    g.name = "resnet5000".into();
+    g
+}
+
+/// Resolve a model by CLI name. `input` overrides the default input shape
+/// where the architecture allows it.
+pub fn by_name(name: &str) -> anyhow::Result<ModelGraph> {
+    Ok(match name {
+        "mlp" => mlp(3072, &[512, 512], 10),
+        "wide_mlp_100m" => wide_mlp_100m(),
+        "vgg16" => vgg16(&[3, 32, 32], 10),
+        "resnet20" => resnet20_v1(),
+        "resnet56" => resnet56_v1(),
+        "resnet110" => resnet110_v1(),
+        "resnet164" => resnet164_v2(),
+        "resnet1001" => resnet1001_v2(),
+        "resnet5000" => resnet5000(),
+        other => anyhow::bail!(
+            "unknown model '{other}' (known: mlp, wide_mlp_100m, vgg16, \
+             resnet20, resnet56, resnet110, resnet164, resnet1001, resnet5000)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_shapes() {
+        let g = mlp(10, &[8, 6], 4);
+        g.validate().unwrap();
+        assert_eq!(g.num_weight_layers(), 3);
+        assert_eq!(g.num_params(), 10 * 8 + 8 + 8 * 6 + 6 + 6 * 4 + 4);
+    }
+
+    #[test]
+    fn wide_mlp_is_about_100m() {
+        let g = wide_mlp_100m();
+        let p = g.num_params();
+        assert!(p > 90_000_000 && p < 110_000_000, "params={p}");
+    }
+
+    #[test]
+    fn vgg16_has_16_weight_layers() {
+        let g = vgg16(&[3, 32, 32], 10);
+        g.validate().unwrap();
+        assert_eq!(g.num_weight_layers(), 16);
+        // 32 -> 1 spatial after 5 pools; flatten gives 512.
+        let flat = g.nodes.iter().find(|n| matches!(n.kind, super::super::LayerKind::Flatten)).unwrap();
+        assert_eq!(flat.out_shape, vec![512]);
+        // VGG-16 CIFAR params ~15M (conv 14.7M + heads).
+        let p = g.num_params();
+        assert!(p > 14_000_000 && p < 16_000_000, "params={p}");
+    }
+
+    #[test]
+    fn resnet_v1_depth_counting() {
+        // depth = weight layers when counting conv+dense MINUS projection
+        // shortcuts: the nominal "110 layers" counts 109 convs + 1 dense;
+        // our graph additionally has 2 projection convs.
+        let g = resnet110_v1();
+        g.validate().unwrap();
+        assert_eq!(g.num_weight_layers(), 110 + 2);
+        // ResNet-110 v1 CIFAR is ~1.7M params.
+        let p = g.num_params();
+        assert!(p > 1_500_000 && p < 2_000_000, "params={p}");
+    }
+
+    #[test]
+    fn resnet20_structure() {
+        let g = resnet20_v1();
+        g.validate().unwrap();
+        assert_eq!(g.num_weight_layers(), 20 + 2);
+        let p = g.num_params();
+        assert!(p > 250_000 && p < 300_000, "params={p}"); // ~0.27M
+    }
+
+    #[test]
+    fn resnet_v1_rejects_bad_depth() {
+        let r = std::panic::catch_unwind(|| resnet_v1(21, &[3, 32, 32], 10));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn resnet_v2_164_shapes() {
+        let g = resnet164_v2();
+        g.validate().unwrap();
+        // 164 = 9*18+2: 18 blocks/stage, 3 convs/block = 162 convs + stem +
+        // dense; plus 3 projection convs.
+        assert_eq!(g.num_weight_layers(), 164 + 3);
+        let p = g.num_params();
+        assert!(p > 2_000_000 && p < 6_000_000, "params={p}");
+    }
+
+    #[test]
+    fn resnet1001_params_match_paper() {
+        let g = resnet1001_v2();
+        // The paper says "approximately 30 million parameters" (Keras-style
+        // wide bottlenecks; He et al.'s narrow variant would be 10.2M).
+        let p = g.num_params();
+        assert!(p > 25_000_000 && p < 33_000_000, "params={p}");
+        assert_eq!(g.num_weight_layers(), 1001 + 3);
+    }
+
+    #[test]
+    fn resnet5000_builds() {
+        let g = resnet5000();
+        assert!(g.num_weight_layers() >= 4997);
+        assert_eq!(g.input_shape, vec![3, 332, 332]);
+    }
+
+    #[test]
+    fn stage_transitions_downsample() {
+        let g = resnet20_v1();
+        // Final pre-GAP activation must be [64, 8, 8].
+        let gap = g.nodes.iter().find(|n| matches!(n.kind, super::super::LayerKind::GlobalAvgPool)).unwrap();
+        assert_eq!(g.nodes[gap.inputs[0]].out_shape, vec![64, 8, 8]);
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for n in ["mlp", "vgg16", "resnet20", "resnet56", "resnet110", "resnet164"] {
+            by_name(n).unwrap().validate().unwrap();
+        }
+        assert!(by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Collective algorithms over the point-to-point fabric: barrier, broadcast,
+//! allgather and three allreduce implementations (naive star, ring,
+//! recursive doubling) with an auto-selection policy modeled on the choices
+//! production MPI libraries make by message size.
+
+use super::fabric::Comm;
+use super::tags::RESERVED_BASE;
+use crate::tensor::{Shape, Tensor};
+
+/// Which allreduce algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllreduceAlgo {
+    /// Gather to rank 0, reduce, broadcast. O(p) bandwidth at the root;
+    /// only sensible for tiny messages / tiny communicators.
+    Naive,
+    /// Ring reduce-scatter + allgather: 2(p-1) steps, bandwidth-optimal for
+    /// large messages (what Horovod/NCCL use).
+    Ring,
+    /// Recursive doubling: log2(p) steps, latency-optimal for small
+    /// messages; requires (and is only selected for) power-of-two sizes.
+    RecursiveDoubling,
+    /// Pick by message size and communicator size.
+    Auto,
+}
+
+/// Messages below this many bytes prefer latency-optimal algorithms.
+const SMALL_MSG_BYTES: usize = 64 * 1024;
+
+impl Comm {
+    /// Synchronize all ranks of this communicator (dissemination barrier).
+    pub fn barrier(&self) {
+        let n = self.size();
+        if n == 1 {
+            return;
+        }
+        let me = self.rank();
+        let token = Tensor::scalar(0.0);
+        let mut round = 0u64;
+        let mut dist = 1;
+        while dist < n {
+            let dst = (me + dist) % n;
+            let src = (me + n - dist % n) % n;
+            self.send(&token, dst, RESERVED_BASE + 100 + round);
+            self.recv(src, RESERVED_BASE + 100 + round);
+            dist *= 2;
+            round += 1;
+        }
+    }
+
+    /// Broadcast `t` from `root` to all ranks (binomial tree).
+    pub fn bcast(&self, t: &mut Tensor, root: usize) {
+        let n = self.size();
+        if n == 1 {
+            return;
+        }
+        // Rotate so the root is virtual rank 0.
+        let vrank = (self.rank() + n - root) % n;
+        let tag = RESERVED_BASE + 200;
+        let mut mask = 1;
+        // Receive phase: find the bit that brings the data to us.
+        while mask < n {
+            if vrank & mask != 0 {
+                let src_v = vrank ^ mask;
+                let src = (src_v + root) % n;
+                *t = self.recv(src, tag);
+                break;
+            }
+            mask <<= 1;
+        }
+        // Send phase: forward to the subtree below us.
+        let mut mask = mask >> 1;
+        while mask > 0 {
+            let dst_v = vrank | mask;
+            if dst_v != vrank && dst_v < n {
+                let dst = (dst_v + root) % n;
+                self.send(t, dst, tag);
+            }
+            mask >>= 1;
+        }
+    }
+
+    /// Gather every rank's tensor; returns them in rank order on all ranks.
+    pub fn allgather(&self, t: &Tensor) -> Vec<Tensor> {
+        let n = self.size();
+        let me = self.rank();
+        let tag = RESERVED_BASE + 300;
+        // Simple ring circulation: n-1 steps, each forwards what it received.
+        let mut out: Vec<Option<Tensor>> = (0..n).map(|_| None).collect();
+        out[me] = Some(t.clone());
+        let right = (me + 1) % n;
+        let left = (me + n - 1) % n;
+        let mut carry = t.clone();
+        for step in 0..n.saturating_sub(1) {
+            self.send_owned(carry, right, tag + step as u64);
+            carry = self.recv(left, tag + step as u64);
+            let origin = (me + n - 1 - step) % n;
+            out[origin] = Some(carry.clone());
+        }
+        out.into_iter().map(|o| o.expect("allgather hole")).collect()
+    }
+
+    /// In-place sum-allreduce with the given algorithm.
+    pub fn allreduce_sum_with(&self, t: &mut Tensor, algo: AllreduceAlgo) -> anyhow::Result<()> {
+        let t0 = std::time::Instant::now();
+        let n = self.size();
+        let bytes = t.size_bytes() as u64;
+        if n == 1 {
+            self.note_allreduce(bytes, t0.elapsed().as_secs_f64());
+            return Ok(());
+        }
+        let algo = match algo {
+            AllreduceAlgo::Auto => {
+                if t.size_bytes() <= SMALL_MSG_BYTES && n.is_power_of_two() {
+                    AllreduceAlgo::RecursiveDoubling
+                } else if n <= 3 {
+                    AllreduceAlgo::Naive
+                } else {
+                    AllreduceAlgo::Ring
+                }
+            }
+            a => a,
+        };
+        match algo {
+            AllreduceAlgo::Naive => self.allreduce_naive(t),
+            AllreduceAlgo::Ring => self.allreduce_ring(t),
+            AllreduceAlgo::RecursiveDoubling => {
+                if n.is_power_of_two() {
+                    self.allreduce_recdbl(t)
+                } else {
+                    self.allreduce_ring(t)
+                }
+            }
+            AllreduceAlgo::Auto => unreachable!(),
+        }
+        self.note_allreduce(bytes, t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// In-place sum-allreduce (auto algorithm).
+    pub fn allreduce_sum(&self, t: &mut Tensor) -> anyhow::Result<()> {
+        self.allreduce_sum_with(t, AllreduceAlgo::Auto)
+    }
+
+    /// In-place mean-allreduce (gradient averaging across model replicas).
+    pub fn allreduce_mean(&self, t: &mut Tensor) -> anyhow::Result<()> {
+        self.allreduce_sum(t)?;
+        t.scale(1.0 / self.size() as f32);
+        Ok(())
+    }
+
+    fn allreduce_naive(&self, t: &mut Tensor) {
+        let n = self.size();
+        let me = self.rank();
+        let tag = RESERVED_BASE + 400;
+        if me == 0 {
+            for src in 1..n {
+                let part = self.recv(src, tag);
+                t.add_assign(&part);
+            }
+        } else {
+            self.send(t, 0, tag);
+        }
+        self.bcast(t, 0);
+    }
+
+    /// Ring allreduce: reduce-scatter then allgather over uneven chunks.
+    fn allreduce_ring(&self, t: &mut Tensor) {
+        let n = self.size();
+        let me = self.rank();
+        let len = t.data.len();
+        // Chunk boundaries: chunk c covers [start[c], start[c+1]).
+        let starts: Vec<usize> = (0..=n).map(|c| c * len / n).collect();
+        let right = (me + 1) % n;
+        let left = (me + n - 1) % n;
+        let tag = RESERVED_BASE + 500;
+
+        // Reduce-scatter: after n-1 steps, rank r owns the full sum of
+        // chunk (r+1) mod n.
+        for step in 0..n - 1 {
+            let send_c = (me + n - step) % n;
+            let recv_c = (me + n - 1 - step) % n;
+            let chunk =
+                Tensor::new(Shape::new(&[starts[send_c + 1] - starts[send_c]]),
+                            t.data[starts[send_c]..starts[send_c + 1]].to_vec());
+            self.send_owned(chunk, right, tag + step as u64);
+            let incoming = self.recv(left, tag + step as u64);
+            let dst = &mut t.data[starts[recv_c]..starts[recv_c + 1]];
+            debug_assert_eq!(dst.len(), incoming.data.len());
+            for (d, s) in dst.iter_mut().zip(incoming.data.iter()) {
+                *d += *s;
+            }
+        }
+        // Allgather: circulate the reduced chunks.
+        for step in 0..n - 1 {
+            let send_c = (me + 1 + n - step) % n;
+            let recv_c = (me + n - step) % n;
+            let chunk =
+                Tensor::new(Shape::new(&[starts[send_c + 1] - starts[send_c]]),
+                            t.data[starts[send_c]..starts[send_c + 1]].to_vec());
+            self.send_owned(chunk, right, tag + 1000 + step as u64);
+            let incoming = self.recv(left, tag + 1000 + step as u64);
+            let dst = &mut t.data[starts[recv_c]..starts[recv_c + 1]];
+            dst.copy_from_slice(&incoming.data);
+        }
+    }
+
+    /// Recursive doubling (power-of-two communicators only).
+    fn allreduce_recdbl(&self, t: &mut Tensor) {
+        let n = self.size();
+        let me = self.rank();
+        let tag = RESERVED_BASE + 600;
+        let mut mask = 1;
+        let mut round = 0u64;
+        while mask < n {
+            let peer = me ^ mask;
+            self.send(t, peer, tag + round);
+            let other = self.recv(peer, tag + round);
+            t.add_assign(&other);
+            mask <<= 1;
+            round += 1;
+        }
+    }
+}

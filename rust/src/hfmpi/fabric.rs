@@ -1,0 +1,343 @@
+//! The fabric: per-rank mailboxes, tag-matched blocking send/recv, and the
+//! communicator machinery (world, dup, split) built on top.
+
+use crate::tensor::Tensor;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Global rank id (thread index in the world).
+pub type RankId = usize;
+
+/// (source global rank, communicator id, tag) — the match key for recv.
+type Key = (RankId, u64, u64);
+
+/// Default deadlock watchdog: a blocking recv that waits longer than this
+/// panics with a diagnostic instead of hanging the test suite forever.
+/// Override with HFMPI_TIMEOUT_SECS.
+const DEFAULT_TIMEOUT_SECS: u64 = 120;
+
+fn recv_timeout() -> Duration {
+    let secs = std::env::var("HFMPI_TIMEOUT_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_TIMEOUT_SECS);
+    Duration::from_secs(secs)
+}
+
+struct Mailbox {
+    queues: Mutex<HashMap<Key, VecDeque<Tensor>>>,
+    cv: Condvar,
+    timeout: Duration,
+}
+
+impl Mailbox {
+    fn new(timeout: Duration) -> Self {
+        Mailbox { queues: Mutex::new(HashMap::new()), cv: Condvar::new(), timeout }
+    }
+
+    fn push(&self, key: Key, msg: Tensor) {
+        let mut q = self.queues.lock().unwrap();
+        q.entry(key).or_default().push_back(msg);
+        self.cv.notify_all();
+    }
+
+    fn pop_blocking(&self, key: Key, me: RankId) -> Tensor {
+        let timeout = self.timeout;
+        let mut q = self.queues.lock().unwrap();
+        loop {
+            if let Some(dq) = q.get_mut(&key) {
+                if let Some(msg) = dq.pop_front() {
+                    return msg;
+                }
+            }
+            let (guard, res) = self.cv.wait_timeout(q, timeout).unwrap();
+            q = guard;
+            if res.timed_out() {
+                let pending: Vec<Key> = q
+                    .iter()
+                    .filter(|(_, v)| !v.is_empty())
+                    .map(|(k, _)| *k)
+                    .collect();
+                panic!(
+                    "hfmpi deadlock watchdog: rank {me} blocked >{timeout:?} on \
+                     recv(src={}, comm={}, tag={}); pending keys in mailbox: {pending:?}",
+                    key.0, key.1, key.2
+                );
+            }
+        }
+    }
+}
+
+/// Rendezvous state for collective communicator creation (split).
+struct SplitSlot {
+    entries: HashMap<RankId, (i64, i64)>, // rank -> (color, key)
+    result: Option<HashMap<RankId, (u64, Vec<RankId>)>>, // rank -> (comm id, members)
+    arrived: usize,
+}
+
+/// Shared state for all ranks of a [`World`].
+pub(crate) struct Fabric {
+    mailboxes: Vec<Mailbox>,
+    next_comm_id: AtomicU64,
+    splits: Mutex<HashMap<(u64, u64), SplitSlot>>, // (parent comm, epoch) -> slot
+    split_cv: Condvar,
+    timeout: Duration,
+}
+
+impl Fabric {
+    fn new(n: usize, timeout: Duration) -> Self {
+        Fabric {
+            mailboxes: (0..n).map(|_| Mailbox::new(timeout)).collect(),
+            next_comm_id: AtomicU64::new(1),
+            splits: Mutex::new(HashMap::new()),
+            split_cv: Condvar::new(),
+            timeout,
+        }
+    }
+}
+
+/// Per-rank, per-communicator statistics (bytes moved, call counts). The
+/// engine reads these to report communication overhead in benches.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    pub sends: u64,
+    pub recvs: u64,
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    pub allreduces: u64,
+    pub allreduce_bytes: u64,
+    pub allreduce_secs: f64,
+    pub send_secs: f64,
+    pub recv_secs: f64,
+}
+
+/// A communicator: an ordered group of global ranks plus this rank's index
+/// within it. Cheap to clone (shares the fabric).
+pub struct Comm {
+    fabric: Arc<Fabric>,
+    id: u64,
+    /// Global rank ids of the members, in rank order.
+    members: Vec<RankId>,
+    /// This thread's index within `members`.
+    my_idx: usize,
+    stats: std::cell::RefCell<CommStats>,
+    /// Per-rank epoch counters for split rendezvous on this comm.
+    my_split_epoch: std::cell::Cell<u64>,
+}
+
+impl Comm {
+    /// Rank within this communicator.
+    pub fn rank(&self) -> usize {
+        self.my_idx
+    }
+
+    /// Number of ranks in this communicator.
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Global (world) rank of this thread.
+    pub fn global_rank(&self) -> RankId {
+        self.members[self.my_idx]
+    }
+
+    /// Global rank of communicator member `idx`.
+    pub fn global_of(&self, idx: usize) -> RankId {
+        self.members[idx]
+    }
+
+    /// Snapshot of this communicator's traffic counters.
+    pub fn stats(&self) -> CommStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = CommStats::default();
+    }
+
+    /// Blocking tagged send to communicator rank `dst`.
+    ///
+    /// Mailboxes are unbounded, so "blocking" matches MPI's buffered-send
+    /// semantics: the call returns once the message is enqueued. Ordering
+    /// between a (src, tag) pair is FIFO.
+    pub fn send(&self, t: &Tensor, dst: usize, tag: u64) {
+        let t0 = std::time::Instant::now();
+        let dst_global = self.members[dst];
+        let key = (self.global_rank(), self.id, tag);
+        self.fabric.mailboxes[dst_global].push(key, t.clone());
+        let mut s = self.stats.borrow_mut();
+        s.sends += 1;
+        s.bytes_sent += t.size_bytes() as u64;
+        s.send_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// Move-variant of [`send`](Self::send): avoids cloning the payload.
+    pub fn send_owned(&self, t: Tensor, dst: usize, tag: u64) {
+        let t0 = std::time::Instant::now();
+        let bytes = t.size_bytes() as u64;
+        let dst_global = self.members[dst];
+        let key = (self.global_rank(), self.id, tag);
+        self.fabric.mailboxes[dst_global].push(key, t);
+        let mut s = self.stats.borrow_mut();
+        s.sends += 1;
+        s.bytes_sent += bytes;
+        s.send_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// Blocking tagged receive from communicator rank `src`.
+    pub fn recv(&self, src: usize, tag: u64) -> Tensor {
+        let t0 = std::time::Instant::now();
+        let me = self.global_rank();
+        let src_global = self.members[src];
+        let key = (src_global, self.id, tag);
+        let t = self.fabric.mailboxes[me].pop_blocking(key, me);
+        let mut s = self.stats.borrow_mut();
+        s.recvs += 1;
+        s.bytes_recv += t.size_bytes() as u64;
+        s.recv_secs += t0.elapsed().as_secs_f64();
+        t
+    }
+
+    /// Duplicate this communicator (fresh id, same members). Collective.
+    pub fn dup(&self) -> Comm {
+        self.split(0, self.my_idx as i64)
+    }
+
+    /// MPI_Comm_split: collective over all members of this communicator.
+    /// Ranks passing the same `color` land in the same new communicator,
+    /// ordered by `key` (ties broken by parent rank).
+    pub fn split(&self, color: i64, key: i64) -> Comm {
+        let epoch = self.my_split_epoch.get();
+        self.my_split_epoch.set(epoch + 1);
+        let slot_key = (self.id, epoch);
+        let me = self.global_rank();
+        let n = self.size();
+
+        let mut splits = self.fabric.splits.lock().unwrap();
+        {
+            let slot = splits.entry(slot_key).or_insert_with(|| SplitSlot {
+                entries: HashMap::new(),
+                result: None,
+                arrived: 0,
+            });
+            slot.entries.insert(me, (color, key));
+            slot.arrived += 1;
+            if slot.arrived == n {
+                // Last arrival computes the grouping for everyone.
+                let mut groups: HashMap<i64, Vec<(i64, usize, RankId)>> = HashMap::new();
+                for (idx, &g) in self.members.iter().enumerate() {
+                    let (c, k) = slot.entries[&g];
+                    groups.entry(c).or_default().push((k, idx, g));
+                }
+                let mut result = HashMap::new();
+                let mut colors: Vec<i64> = groups.keys().copied().collect();
+                colors.sort();
+                for c in colors {
+                    let mut v = groups.remove(&c).unwrap();
+                    v.sort(); // by (key, parent idx)
+                    let members: Vec<RankId> = v.iter().map(|&(_, _, g)| g).collect();
+                    let id = self.fabric.next_comm_id.fetch_add(1, Ordering::SeqCst);
+                    for &g in &members {
+                        result.insert(g, (id, members.clone()));
+                    }
+                }
+                slot.result = Some(result);
+                self.fabric.split_cv.notify_all();
+            }
+        }
+        // Wait for the grouping to be published.
+        let (id, members) = loop {
+            if let Some(slot) = splits.get(&slot_key) {
+                if let Some(res) = &slot.result {
+                    break res[&me].clone();
+                }
+            }
+            let timeout = self.fabric.timeout;
+            let (guard, res) = self.fabric.split_cv.wait_timeout(splits, timeout).unwrap();
+            splits = guard;
+            if res.timed_out() {
+                panic!("hfmpi: rank {me} timed out in split on comm {}", self.id);
+            }
+        };
+        let my_idx = members.iter().position(|&g| g == me).unwrap();
+        Comm {
+            fabric: Arc::clone(&self.fabric),
+            id,
+            members,
+            my_idx,
+            stats: Default::default(),
+            my_split_epoch: std::cell::Cell::new(0),
+        }
+    }
+
+    /// Record an allreduce in the stats (used by the collectives module).
+    pub(crate) fn note_allreduce(&self, bytes: u64, secs: f64) {
+        let mut s = self.stats.borrow_mut();
+        s.allreduces += 1;
+        s.allreduce_bytes += bytes;
+        s.allreduce_secs += secs;
+    }
+}
+
+/// The world: spawns `n` rank threads and hands each its world communicator.
+pub struct World;
+
+impl World {
+    /// Run `f` on `n` rank threads; returns each rank's result in rank order.
+    /// Panics in any rank propagate (failing the test/run) once all threads
+    /// finish or the watchdog fires.
+    pub fn run<T, F>(n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(&Comm) -> T + Sync,
+    {
+        Self::run_with_timeout(n, recv_timeout(), f)
+    }
+
+    /// [`run`](Self::run) with an explicit deadlock-watchdog timeout.
+    pub fn run_with_timeout<T, F>(n: usize, timeout: Duration, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(&Comm) -> T + Sync,
+    {
+        assert!(n > 0, "world size must be positive");
+        let fabric = Arc::new(Fabric::new(n, timeout));
+        let members: Vec<RankId> = (0..n).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n);
+            for r in 0..n {
+                let fabric = Arc::clone(&fabric);
+                let members = members.clone();
+                let f = &f;
+                handles.push(scope.spawn(move || {
+                    let comm = Comm {
+                        fabric,
+                        id: 0,
+                        members,
+                        my_idx: r,
+                        stats: Default::default(),
+                        my_split_epoch: std::cell::Cell::new(0),
+                    };
+                    f(&comm)
+                }));
+            }
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(r, h)| match h.join() {
+                    Ok(v) => v,
+                    Err(e) => {
+                        let msg = e
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "<non-string panic>".into());
+                        panic!("rank {r} panicked: {msg}")
+                    }
+                })
+                .collect()
+        })
+    }
+}

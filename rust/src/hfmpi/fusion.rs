@@ -1,0 +1,75 @@
+//! Horovod-style tensor fusion (paper §5.3): pack many small gradient
+//! tensors into flat buckets and run one allreduce per bucket, instead of
+//! one per tensor. This amortizes per-message latency — the dominant cost
+//! for deep models whose per-layer gradients are tiny (ResNet-110's median
+//! conv gradient is 9 KiB).
+
+use super::collectives::AllreduceAlgo;
+use super::fabric::Comm;
+use crate::tensor::{Shape, Tensor};
+
+/// Default fusion threshold, matching Horovod's 64 MiB default.
+pub const DEFAULT_THRESHOLD_BYTES: usize = 64 * 1024 * 1024;
+
+/// Greedy packer: fills buckets up to `threshold_bytes` in tensor order
+/// (order is deterministic so all replicas pack identically — required for
+/// the allreduce contents to line up).
+pub struct FusionBuffer {
+    threshold_bytes: usize,
+    algo: AllreduceAlgo,
+}
+
+impl FusionBuffer {
+    pub fn new(threshold_bytes: usize, algo: AllreduceAlgo) -> Self {
+        assert!(threshold_bytes > 0);
+        FusionBuffer { threshold_bytes, algo }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(DEFAULT_THRESHOLD_BYTES, AllreduceAlgo::Auto)
+    }
+
+    /// Mean-allreduce every tensor in `grads` across `comm`, fusing adjacent
+    /// tensors into buckets of at most `threshold_bytes`. Returns the number
+    /// of allreduce calls issued (for tests/benches).
+    pub fn allreduce_mean(&self, comm: &Comm, grads: &mut [&mut Tensor]) -> anyhow::Result<usize> {
+        let mut calls = 0;
+        let mut start = 0;
+        while start < grads.len() {
+            // Grow the bucket [start, end).
+            let mut end = start;
+            let mut bytes = 0usize;
+            while end < grads.len() {
+                let b = grads[end].size_bytes();
+                if end > start && bytes + b > self.threshold_bytes {
+                    break;
+                }
+                bytes += b;
+                end += 1;
+            }
+            if end - start == 1 {
+                comm.allreduce_sum_with(grads[start], self.algo)?;
+                grads[start].scale(1.0 / comm.size() as f32);
+            } else {
+                // Pack -> one allreduce -> unpack.
+                let total: usize = grads[start..end].iter().map(|g| g.numel()).sum();
+                let mut flat = Vec::with_capacity(total);
+                for g in grads[start..end].iter() {
+                    flat.extend_from_slice(&g.data);
+                }
+                let mut fused = Tensor::new(Shape::new(&[total]), flat);
+                comm.allreduce_sum_with(&mut fused, self.algo)?;
+                fused.scale(1.0 / comm.size() as f32);
+                let mut off = 0;
+                for g in grads[start..end].iter_mut() {
+                    let n = g.numel();
+                    g.data.copy_from_slice(&fused.data[off..off + n]);
+                    off += n;
+                }
+            }
+            calls += 1;
+            start = end;
+        }
+        Ok(calls)
+    }
+}

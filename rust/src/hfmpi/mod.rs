@@ -1,0 +1,56 @@
+//! `hfmpi` — an in-process MPI fabric.
+//!
+//! The paper runs on Intel MPI / MVAPICH2 across Stampede2 nodes; this repo
+//! substitutes a from-scratch message-passing substrate where **ranks are OS
+//! threads** inside one process. The substitution preserves everything the
+//! paper's contribution actually exercises — communicators, tag-matched
+//! blocking send/recv, collective algorithms, message-ordering/deadlock
+//! semantics, communicator-per-partition layout, tensor fusion — and only
+//! abstracts the wire. Multi-node behaviour is modeled separately by the
+//! calibrated simulator (`crate::sim`).
+//!
+//! API mirrors the MPI subset HyPar-Flow's Communication Engine uses
+//! (paper §6.3): `send`, `recv`, `broadcast`, `allreduce` (+ `barrier`,
+//! `allgather`, `split`, `dup`).
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath; the same code runs
+//! // as `hfmpi::tests::allreduce_*`.)
+//! use hyparflow::hfmpi::World;
+//! use hyparflow::tensor::Tensor;
+//! let outs = World::run(4, |comm| {
+//!     let mut t = Tensor::full(&[2], comm.rank() as f32);
+//!     comm.allreduce_sum(&mut t).unwrap();
+//!     t.data[0]
+//! });
+//! assert!(outs.iter().all(|&x| x == 6.0)); // 0+1+2+3
+//! ```
+
+mod collectives;
+mod fabric;
+mod fusion;
+
+pub use collectives::AllreduceAlgo;
+pub use fabric::{Comm, CommStats, World};
+pub use fusion::{FusionBuffer, DEFAULT_THRESHOLD_BYTES};
+
+/// Message tags used by the training engine. Kept here so every subsystem
+/// agrees on the tag space (hfmpi itself reserves tags >= `RESERVED_BASE`
+/// for collective internals).
+pub mod tags {
+    /// Forward-pass activation on a boundary/skip edge (+ edge id).
+    pub const ACTIVATION: u64 = 1 << 20;
+    /// Backward-pass partial error on a boundary/skip edge (+ edge id).
+    pub const ERROR: u64 = 2 << 20;
+    /// Initial weight broadcast (+ param id).
+    pub const WEIGHTS: u64 = 3 << 20;
+    /// Metrics reduction at the end of a step.
+    pub const METRICS: u64 = 4 << 20;
+    /// Label shipping from first to last partition (+ microbatch id).
+    pub const LABELS: u64 = 5 << 20;
+    /// Collective internals (reserved by hfmpi).
+    pub const RESERVED_BASE: u64 = u64::MAX - (1 << 32);
+}
+
+#[cfg(test)]
+mod tests;

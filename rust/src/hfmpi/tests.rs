@@ -1,0 +1,279 @@
+//! Unit tests for the hfmpi fabric: point-to-point semantics, communicator
+//! splitting, every collective algorithm, and the fusion buffer.
+
+use super::*;
+use crate::tensor::Tensor;
+
+#[test]
+fn send_recv_basic() {
+    World::run(2, |c| {
+        if c.rank() == 0 {
+            c.send(&Tensor::full(&[3], 7.0), 1, 42);
+        } else {
+            let t = c.recv(0, 42);
+            assert_eq!(t.data, vec![7.0; 3]);
+        }
+    });
+}
+
+#[test]
+fn send_recv_fifo_order_per_tag() {
+    World::run(2, |c| {
+        if c.rank() == 0 {
+            for i in 0..10 {
+                c.send(&Tensor::scalar(i as f32), 1, 5);
+            }
+        } else {
+            for i in 0..10 {
+                assert_eq!(c.recv(0, 5).data[0], i as f32);
+            }
+        }
+    });
+}
+
+#[test]
+fn tags_do_not_cross_match() {
+    World::run(2, |c| {
+        if c.rank() == 0 {
+            c.send(&Tensor::scalar(1.0), 1, 100);
+            c.send(&Tensor::scalar(2.0), 1, 200);
+        } else {
+            // Receive in reverse tag order: matching must be by tag.
+            assert_eq!(c.recv(0, 200).data[0], 2.0);
+            assert_eq!(c.recv(0, 100).data[0], 1.0);
+        }
+    });
+}
+
+#[test]
+fn sends_from_different_sources_do_not_cross_match() {
+    World::run(3, |c| {
+        match c.rank() {
+            0 => c.send(&Tensor::scalar(10.0), 2, 7),
+            1 => c.send(&Tensor::scalar(20.0), 2, 7),
+            _ => {
+                assert_eq!(c.recv(1, 7).data[0], 20.0);
+                assert_eq!(c.recv(0, 7).data[0], 10.0);
+            }
+        }
+    });
+}
+
+#[test]
+fn barrier_all_sizes() {
+    for n in [1, 2, 3, 4, 7, 8] {
+        World::run(n, |c| {
+            for _ in 0..3 {
+                c.barrier();
+            }
+        });
+    }
+}
+
+#[test]
+fn bcast_from_each_root() {
+    for n in [1, 2, 3, 5, 8] {
+        for root in 0..n {
+            World::run(n, move |c| {
+                let mut t = if c.rank() == root {
+                    Tensor::full(&[4], 3.5)
+                } else {
+                    Tensor::zeros(&[4])
+                };
+                c.bcast(&mut t, root);
+                assert_eq!(t.data, vec![3.5; 4], "n={n} root={root} rank={}", c.rank());
+            });
+        }
+    }
+}
+
+#[test]
+fn allgather_rank_order() {
+    for n in [1, 2, 3, 6] {
+        World::run(n, |c| {
+            let mine = Tensor::scalar(c.rank() as f32);
+            let all = c.allgather(&mine);
+            let got: Vec<f32> = all.iter().map(|t| t.data[0]).collect();
+            let want: Vec<f32> = (0..n).map(|r| r as f32).collect();
+            assert_eq!(got, want);
+        });
+    }
+}
+
+fn check_allreduce(n: usize, len: usize, algo: AllreduceAlgo) {
+    World::run(n, move |c| {
+        let mut t = Tensor::new(
+            crate::tensor::Shape::new(&[len]),
+            (0..len).map(|i| (c.rank() + 1) as f32 * (i + 1) as f32).collect(),
+        );
+        c.allreduce_sum_with(&mut t, algo).unwrap();
+        let rank_sum: f32 = (1..=n).sum::<usize>() as f32;
+        for (i, v) in t.data.iter().enumerate() {
+            let want = rank_sum * (i + 1) as f32;
+            assert!((v - want).abs() < 1e-3, "n={n} len={len} algo={algo:?} i={i}: {v} != {want}");
+        }
+    });
+}
+
+#[test]
+fn allreduce_naive() {
+    for n in [1, 2, 3, 4, 5] {
+        check_allreduce(n, 17, AllreduceAlgo::Naive);
+    }
+}
+
+#[test]
+fn allreduce_ring() {
+    // Includes len < n (empty chunks) and len not divisible by n.
+    for n in [2, 3, 4, 5, 8] {
+        for len in [1, 3, 64, 1000] {
+            check_allreduce(n, len, AllreduceAlgo::Ring);
+        }
+    }
+}
+
+#[test]
+fn allreduce_recursive_doubling() {
+    for n in [2, 4, 8] {
+        check_allreduce(n, 33, AllreduceAlgo::RecursiveDoubling);
+    }
+    // Non-power-of-two silently falls back to ring.
+    check_allreduce(3, 33, AllreduceAlgo::RecursiveDoubling);
+}
+
+#[test]
+fn allreduce_auto() {
+    for n in [2, 3, 4, 6, 8] {
+        check_allreduce(n, 100, AllreduceAlgo::Auto);
+        check_allreduce(n, 100_000, AllreduceAlgo::Auto);
+    }
+}
+
+#[test]
+fn allreduce_mean_averages() {
+    World::run(4, |c| {
+        let mut t = Tensor::full(&[8], c.rank() as f32);
+        c.allreduce_mean(&mut t).unwrap();
+        assert_eq!(t.data, vec![1.5; 8]); // mean(0,1,2,3)
+    });
+}
+
+#[test]
+fn split_by_color_groups_and_orders() {
+    // 6 ranks, color = rank % 2 -> two comms of 3 ordered by rank.
+    World::run(6, |c| {
+        let sub = c.split((c.rank() % 2) as i64, c.rank() as i64);
+        assert_eq!(sub.size(), 3);
+        assert_eq!(sub.rank(), c.rank() / 2);
+        // Collectives work inside the sub-communicator.
+        let mut t = Tensor::scalar(c.rank() as f32);
+        sub.allreduce_sum(&mut t).unwrap();
+        let want = if c.rank() % 2 == 0 { 0. + 2. + 4. } else { 1. + 3. + 5. };
+        assert_eq!(t.data[0], want);
+    });
+}
+
+#[test]
+fn split_key_reorders_ranks() {
+    World::run(4, |c| {
+        // All same color; key = -rank reverses the ordering.
+        let sub = c.split(0, -(c.rank() as i64));
+        assert_eq!(sub.rank(), 3 - c.rank());
+    });
+}
+
+#[test]
+fn repeated_splits_are_independent() {
+    World::run(4, |c| {
+        let a = c.split((c.rank() % 2) as i64, 0);
+        let b = c.split((c.rank() / 2) as i64, 0);
+        let mut ta = Tensor::scalar(1.0);
+        let mut tb = Tensor::scalar(1.0);
+        a.allreduce_sum(&mut ta).unwrap();
+        b.allreduce_sum(&mut tb).unwrap();
+        assert_eq!(ta.data[0], 2.0);
+        assert_eq!(tb.data[0], 2.0);
+    });
+}
+
+#[test]
+fn dup_gives_isolated_tag_space() {
+    World::run(2, |c| {
+        let d = c.dup();
+        if c.rank() == 0 {
+            c.send(&Tensor::scalar(1.0), 1, 9);
+            d.send(&Tensor::scalar(2.0), 1, 9);
+        } else {
+            // Same (src, tag) but different comm: no cross-matching.
+            assert_eq!(d.recv(0, 9).data[0], 2.0);
+            assert_eq!(c.recv(0, 9).data[0], 1.0);
+        }
+    });
+}
+
+#[test]
+fn stats_count_traffic() {
+    World::run(2, |c| {
+        if c.rank() == 0 {
+            c.send(&Tensor::full(&[10], 1.0), 1, 1);
+            let s = c.stats();
+            assert_eq!(s.sends, 1);
+            assert_eq!(s.bytes_sent, 40);
+        } else {
+            c.recv(0, 1);
+            let s = c.stats();
+            assert_eq!(s.recvs, 1);
+            assert_eq!(s.bytes_recv, 40);
+        }
+    });
+}
+
+#[test]
+fn fusion_buffer_fuses_and_matches_unfused() {
+    World::run(4, |c| {
+        let mut a = Tensor::full(&[100], c.rank() as f32);
+        let mut b = Tensor::full(&[50], 2.0 * c.rank() as f32);
+        let mut cc = Tensor::full(&[200], 1.0);
+        {
+            let fb = FusionBuffer::new(usize::MAX, AllreduceAlgo::Ring);
+            let mut grads = [&mut a, &mut b, &mut cc];
+            let calls = fb.allreduce_mean(c, &mut grads).unwrap();
+            assert_eq!(calls, 1, "everything fits one bucket");
+        }
+        assert_eq!(a.data, vec![1.5; 100]);
+        assert_eq!(b.data, vec![3.0; 50]);
+        assert_eq!(cc.data, vec![1.0; 200]);
+    });
+}
+
+#[test]
+fn fusion_buffer_respects_threshold() {
+    World::run(2, |c| {
+        let mut a = Tensor::full(&[100], 2.0); // 400 B
+        let mut b = Tensor::full(&[100], 4.0);
+        let mut d = Tensor::full(&[100], 6.0);
+        let fb = FusionBuffer::new(500, AllreduceAlgo::Ring);
+        let mut grads = [&mut a, &mut b, &mut d];
+        let calls = fb.allreduce_mean(c, &mut grads).unwrap();
+        assert_eq!(calls, 3, "400B each, 500B cap -> one bucket per tensor");
+        assert_eq!(a.data[0], 2.0);
+        assert_eq!(b.data[0], 4.0);
+        assert_eq!(d.data[0], 6.0);
+    });
+}
+
+#[test]
+fn world_returns_rank_ordered_results() {
+    let outs = World::run(5, |c| c.rank() * 10);
+    assert_eq!(outs, vec![0, 10, 20, 30, 40]);
+}
+
+#[test]
+#[should_panic(expected = "deadlock watchdog")]
+fn watchdog_fires_on_missing_message() {
+    World::run_with_timeout(2, std::time::Duration::from_secs(1), |c| {
+        if c.rank() == 1 {
+            c.recv(0, 999); // nobody sends
+        }
+    });
+}

@@ -1,0 +1,37 @@
+//! # HyPar-Flow (Rust + JAX + Pallas reproduction)
+//!
+//! A user-transparent framework for **model-parallel**, **data-parallel** and
+//! **hybrid-parallel** DNN training, reproducing *HyPar-Flow: Exploiting MPI
+//! and Keras for Scalable Hybrid-Parallel DNN Training using TensorFlow*
+//! (Awan et al., 2019).
+//!
+//! The stack has three layers:
+//! - **L3 (this crate)** — the coordinator: model graph, partitioner
+//!   (Model Generator + Load Balancer), distributed trainer with grad-layer
+//!   back-propagation, communication engine over an in-process MPI fabric,
+//!   and a calibrated cluster simulator for multi-node scaling studies.
+//! - **L2 (python/compile/model.py)** — JAX layer primitives (fwd + VJP),
+//!   AOT-lowered once to HLO text artifacts.
+//! - **L1 (python/compile/kernels/)** — the Pallas matmul hot-spot kernel the
+//!   L2 primitives call into.
+//!
+//! Python never runs at training time: the Rust hot path loads the HLO
+//! artifacts via the PJRT C API (`xla` crate) and executes them directly.
+//!
+//! Entry points: [`api::TrainConfig`] / [`api::fit`] (the `hf.fit()`
+//! equivalent), or the `hyparflow` CLI.
+
+pub mod api;
+pub mod comm;
+pub mod figures;
+pub mod data;
+pub mod engine;
+pub mod graph;
+pub mod hfmpi;
+pub mod mem;
+pub mod partition;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;

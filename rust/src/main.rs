@@ -1,0 +1,347 @@
+//! `hyparflow` — the leader CLI.
+//!
+//! Subcommands:
+//!   train      run a training job (the paper's Listing 2, as a CLI)
+//!   inspect    print a model summary / partitioning; --emit-registry
+//!              regenerates python/compile/registry.txt for `make artifacts`
+//!   sim        run the calibrated cluster simulator for a scaling scenario
+//!   calibrate  measure per-primitive costs on this host (feeds `sim`)
+//!   mem        memory-model report (Fig 1 / Table 3 trainability)
+//!
+//! Arg parsing is hand-rolled (offline build: no clap). Flags are
+//! `--key value`.
+
+use hyparflow::api::{fit, Strategy, TrainConfig};
+use hyparflow::graph::{artifact, zoo};
+use hyparflow::partition::Partitioning;
+use std::collections::BTreeSet;
+
+fn main() {
+    // Keep PJRT's TFRT client quiet unless the user overrides.
+    if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    }
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("inspect") => cmd_inspect(&args[1..]),
+        Some("sim") => cmd_sim(&args[1..]),
+        Some("calibrate") => cmd_calibrate(&args[1..]),
+        Some("mem") => cmd_mem(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            Ok(())
+        }
+        Some(other) => Err(anyhow::anyhow!("unknown subcommand '{other}'")),
+    }
+    .map_or_else(
+        |e| {
+            eprintln!("error: {e:#}");
+            1
+        },
+        |_| 0,
+    );
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "hyparflow — hybrid-parallel DNN training (HyPar-Flow reproduction)\n\
+         \n\
+         USAGE: hyparflow <train|inspect|sim|calibrate|mem> [--key value ...]\n\
+         \n\
+         train:    --model M --strategy seq|model|data|hybrid --partitions P\n\
+         \x20         --replicas R --steps N --mb B --num-mb K --lr F --seed S\n\
+         \x20         --log-every N --eval N --lpp a,b,c\n\
+         inspect:  --model M [--partitions P] [--emit-registry] [--mb B]\n\
+         sim:      --model M --nodes N --ppn P --partitions K --replicas R\n\
+         \x20         --mb B --num-mb K --platform skylake|epyc [--calib FILE]\n\
+         calibrate: [--out FILE] [--mb B]\n\
+         mem:      --model M [--image-size S] [--mb B] [--partitions P]"
+    );
+}
+
+/// Tiny flag parser: --key value pairs + boolean flags.
+pub(crate) struct Flags {
+    kv: std::collections::HashMap<String, String>,
+    bools: BTreeSet<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> anyhow::Result<Flags> {
+        let mut kv = std::collections::HashMap::new();
+        let mut bools = BTreeSet::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got '{}'", args[i]))?;
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                kv.insert(k.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                bools.insert(k.to_string());
+                i += 1;
+            }
+        }
+        Ok(Flags { kv, bools })
+    }
+
+    fn get<T: std::str::FromStr>(&self, k: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.kv.get(k) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{k} {v}: {e}")),
+        }
+    }
+
+    fn str(&self, k: &str, default: &str) -> String {
+        self.kv.get(k).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.bools.contains(k)
+    }
+}
+
+fn cmd_train(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    let model = zoo::by_name(&f.str("model", "resnet20"))?;
+    let strategy = Strategy::parse(&f.str("strategy", "model"))?;
+    let mut cfg = TrainConfig::new(model, strategy)
+        .partitions(f.get("partitions", 2)?)
+        .replicas(f.get("replicas", 1)?)
+        .steps(f.get("steps", 20)?)
+        .microbatch(f.get("mb", 8)?)
+        .num_microbatches(f.get("num-mb", 1)?)
+        .lr(f.get("lr", 0.05)?)
+        .seed(f.get("seed", 42)?)
+        .eval_batches(f.get("eval", 0)?)
+        .log_every(f.get("log-every", 1)?);
+    if let Some(lpp) = f.kv.get("lpp") {
+        let v: Vec<usize> = lpp
+            .split(',')
+            .map(|x| x.parse())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("--lpp: {e}"))?;
+        cfg = cfg.lpp(v);
+    }
+    let (p, r) = cfg.effective_topology();
+    println!(
+        "training {} | strategy={strategy:?} partitions={p} replicas={r} \
+         mb={} x {} (per-replica batch {})",
+        cfg.model.name,
+        cfg.engine.microbatch,
+        cfg.engine.num_microbatches,
+        cfg.engine.microbatch * cfg.engine.num_microbatches,
+    );
+    let res = fit(&cfg)?;
+    println!(
+        "done: final loss={:.4} acc={:.3} | {:.1} img/s over {:.1}s",
+        res.final_loss(),
+        res.history.last().map(|m| m.accuracy).unwrap_or(0.0),
+        res.img_per_sec,
+        res.wall_secs
+    );
+    if let Some(e) = res.eval {
+        println!("eval: loss={:.4} acc={:.3}", e.loss, e.accuracy);
+    }
+    Ok(())
+}
+
+/// The numeric-mode (model, microbatch) set whose artifacts must exist for
+/// examples and tests. `inspect --emit-registry` writes the union of their
+/// primitive instances.
+fn numeric_set() -> Vec<(hyparflow::graph::ModelGraph, usize)> {
+    vec![
+        // Tiny shapes for unit tests.
+        (zoo::mlp(4, &[4], 3), 2),
+        // Equivalence/integration tests.
+        (zoo::mlp(8, &[8, 8, 8], 4), 4),
+        (zoo::resnet20_v1(), 4),
+        // Fused conv-bn-relu variant (perf-pass ablation).
+        (hyparflow::graph::fuse::fuse_conv_bn_relu(&zoo::resnet20_v1()).0, 4),
+        // Examples (quickstart, fig14/15/16 scaled accuracy runs).
+        (zoo::resnet20_v1(), 8),
+        (zoo::resnet56_v1(), 8),
+        (zoo::resnet_v2(29, &[3, 32, 32], 10), 8),
+        (zoo::vgg16(&[3, 32, 32], 10), 8),
+        // End-to-end ~100M-parameter driver.
+        (zoo::wide_mlp_100m(), 16),
+    ]
+}
+
+fn cmd_inspect(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags::parse(args)?;
+    if f.has("emit-registry") {
+        let mut lines: BTreeSet<String> = BTreeSet::new();
+        // Keep the hand-listed tiny shapes used by runtime unit tests.
+        for l in [
+            "dense 2 4 3", "denserelu 2 4 3", "relu2 2 4", "softmaxxent 2 3",
+            "conv3x3 2 3 4 8 8 1", "bn 2 4 8 8", "relu4 2 4 8 8", "gap 2 4 8 8",
+            "maxpool2 2 4 8 8", "conv1x1 2 4 8 8 8 2",
+        ] {
+            lines.insert(l.to_string());
+        }
+        for (g, mb) in numeric_set() {
+            for l in artifact::registry_lines(&g, mb) {
+                lines.insert(l);
+            }
+        }
+        let header = "\
+# Primitive-instance registry (GENERATED by `hyparflow inspect --emit-registry`).
+# One instance per line: `prim p1 p2 ...` — see model.PARAM_ORDER for the
+# per-primitive parameter order. `make artifacts` compiles each instance's
+# fwd/bwd to artifacts/*.hlo.txt.
+";
+        let body: Vec<String> = lines.into_iter().collect();
+        let out = format!("{header}{}\n", body.join("\n"));
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/python/compile/registry.txt");
+        std::fs::write(path, &out)?;
+        println!("wrote {} instances to {path}", body.len());
+        return Ok(());
+    }
+    let g = zoo::by_name(&f.str("model", "resnet20"))?;
+    println!(
+        "{}: {} nodes, {} weight layers, {} params, {:.2} GFLOP/sample fwd",
+        g.name,
+        g.num_nodes(),
+        g.num_weight_layers(),
+        hyparflow::util::fmt_si(g.num_params() as f64),
+        g.total_flops() / 1e9
+    );
+    let p: usize = f.get("partitions", 0)?;
+    if p > 0 {
+        let pt = Partitioning::auto(&g, p)?;
+        println!(
+            "partitioned into {p}: {} cross edges, {} boundary bytes/sample",
+            pt.edges.len(),
+            pt.boundary_bytes_per_sample(&g)
+        );
+        for i in 0..p {
+            let flops: f64 = pt.parts[i].iter().map(|&n| g.node_cost(n).flops).sum();
+            println!(
+                "  partition {i}: {} nodes, {} params, {:.2} MFLOP/sample",
+                pt.parts[i].len(),
+                pt.params_of(&g, i),
+                flops / 1e6
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
+    use hyparflow::sim::{simulate, Platform, SimConfig};
+    let f = Flags::parse(args)?;
+    let g = zoo::by_name(&f.str("model", "resnet110"))?;
+    let platform = Platform::by_name(&f.str("platform", "skylake"))?;
+    let partitions: usize = f.get("partitions", 16)?;
+    let replicas: usize = f.get("replicas", 1)?;
+    let nodes: usize = f.get("nodes", 1)?;
+    let pt = Partitioning::auto(&g, partitions)?;
+    let mut cfg = SimConfig::new(platform, partitions, replicas);
+    cfg.nodes = nodes;
+    cfg.ppn = f.get("ppn", (partitions * replicas).div_ceil(nodes))?;
+    cfg.microbatch = f.get("mb", 4)?;
+    cfg.num_microbatches = f.get("num-mb", 8)?;
+    cfg.overlap_allreduce = !f.has("no-overlap");
+    if let Some(path) = f.kv.get("calib") {
+        let text = std::fs::read_to_string(path)?;
+        cfg.cost.apply_calibration(&text)?;
+    }
+    let r = simulate(&g, &pt, &cfg);
+    println!(
+        "sim {} on {} | nodes={nodes} ppn={} P={partitions} R={replicas} \
+         mb={}x{} (EBS {})",
+        g.name, cfg.platform.name, cfg.ppn, cfg.microbatch, cfg.num_microbatches,
+        cfg.effective_batch()
+    );
+    println!(
+        "  {:.1} img/s | step {:.4}s | compute {:.4}s bubble {:.4}s \
+         p2p {:.4}s allreduce {:.4}s | peak mem {}",
+        r.img_per_sec,
+        r.step_secs,
+        r.breakdown.compute_secs,
+        r.breakdown.bubble_secs,
+        r.breakdown.p2p_secs,
+        r.breakdown.allreduce_secs,
+        hyparflow::util::fmt_bytes(r.breakdown.mem_bytes)
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &[String]) -> anyhow::Result<()> {
+    use hyparflow::runtime::Runtime;
+    use hyparflow::tensor::Tensor;
+    let f = Flags::parse(args)?;
+    let out = f.str("out", "calibration.txt");
+    let rt = Runtime::open(hyparflow::api::default_artifacts_dir())?;
+
+    // Dispatch floor: tiny op, many reps.
+    let x = Tensor::zeros(&[2, 4]);
+    rt.exec("relu2_n2_d4.fwd", &[&x])?;
+    let t0 = std::time::Instant::now();
+    let n = 300;
+    for _ in 0..n {
+        rt.exec("relu2_n2_d4.fwd", &[&x])?;
+    }
+    let dispatch = t0.elapsed().as_secs_f64() / n as f64;
+
+    // Sustained rate from the ResNet workhorse conv (mb=8).
+    let cx = Tensor::zeros(&[8, 16, 32, 32]);
+    let cw = Tensor::zeros(&[16, 16, 3, 3]);
+    let flops = 2.0 * 16.0 * 16.0 * 9.0 * 32.0 * 32.0 * 8.0;
+    rt.exec("conv3x3_n8_c16_k16_h32_w32_s1.fwd", &[&cx, &cw])?;
+    let t0 = std::time::Instant::now();
+    let n = 30;
+    for _ in 0..n {
+        rt.exec("conv3x3_n8_c16_k16_h32_w32_s1.fwd", &[&cx, &cw])?;
+    }
+    let per = t0.elapsed().as_secs_f64() / n as f64;
+    let core_rate = flops / (per - dispatch).max(1e-9);
+
+    let text = format!(
+        "# hyparflow calibration (host PJRT-CPU measurements)\n\
+         # dispatch: tiny-op round trip; core_rate: conv3x3 16ch mb8\n\
+         dispatch {dispatch:.6e}\ncore_rate {core_rate:.6e}\n"
+    );
+    std::fs::write(&out, &text)?;
+    println!("{text}wrote {out}");
+    Ok(())
+}
+
+fn cmd_mem(args: &[String]) -> anyhow::Result<()> {
+    use hyparflow::mem;
+    let f = Flags::parse(args)?;
+    let g = zoo::by_name(&f.str("model", "resnet1001"))?;
+    let mb: usize = f.get("mb", 1)?;
+    let parts: usize = f.get("partitions", 1)?;
+    let e = if parts <= 1 {
+        mem::sequential_memory(&g, mb)
+    } else {
+        mem::mp_memory(&g, parts, mb)?
+    };
+    println!(
+        "{} mb={mb} partitions={parts}: total {:.2} GB \
+         (weights {} grads {} opt {} acts {} workspace {} framework {})",
+        g.name,
+        e.total_gb(),
+        hyparflow::util::fmt_bytes(e.weights),
+        hyparflow::util::fmt_bytes(e.gradients),
+        hyparflow::util::fmt_bytes(e.optimizer),
+        hyparflow::util::fmt_bytes(e.activations),
+        hyparflow::util::fmt_bytes(e.workspace),
+        hyparflow::util::fmt_bytes(e.framework),
+    );
+    for (name, budget) in [
+        ("P100-16GB", mem::budgets::PASCAL_GB),
+        ("V100-32GB", mem::budgets::VOLTA_GB),
+        ("Skylake-192GB", mem::budgets::SKYLAKE_GB),
+    ] {
+        println!("  {name}: {}", if mem::trainable(&e, budget) { "trainable" } else { "NOT trainable" });
+    }
+    Ok(())
+}

@@ -1,0 +1,199 @@
+//! The Load Balancer: compute an LPP (nodes-per-partition) vector that
+//! minimizes the bottleneck partition cost — the classic *linear
+//! partitioning* problem, solved by binary search on the bottleneck value
+//! with a greedy feasibility check (O(n log(sum/eps))), which scales to
+//! ResNet-5000-sized graphs where the O(n^2 p) DP would not.
+//!
+//! Cost per node = forward FLOPs (backward is a uniform 2x multiple, so it
+//! does not change the argmin). Two structural constraints the greedy must
+//! respect: node 0 (Input) stays on partition 0, the loss node on the last
+//! partition — both fall out naturally from contiguity.
+
+use crate::graph::ModelGraph;
+
+/// Per-node balancing costs.
+pub(crate) fn node_costs(g: &ModelGraph) -> Vec<f64> {
+    (0..g.num_nodes())
+        .map(|i| {
+            // Small epsilon keeps zero-cost nodes (Input/Flatten) from making
+            // partitions of only-free nodes look feasible.
+            g.node_cost(i).flops.max(1.0)
+        })
+        .collect()
+}
+
+/// Can `costs` be split into at most `p` contiguous chunks, each with sum
+/// <= `cap`? Greedy first-fit is exact for this feasibility question.
+fn feasible(costs: &[f64], p: usize, cap: f64) -> bool {
+    let mut chunks = 1usize;
+    let mut acc = 0.0;
+    for &c in costs {
+        if c > cap {
+            return false;
+        }
+        if acc + c > cap {
+            chunks += 1;
+            acc = c;
+            if chunks > p {
+                return false;
+            }
+        } else {
+            acc += c;
+        }
+    }
+    true
+}
+
+/// Split `costs` greedily under `cap`, then rebalance so exactly `p`
+/// non-empty chunks come out (the greedy may use fewer).
+fn split_with_cap(costs: &[f64], p: usize, cap: f64) -> Vec<usize> {
+    let n = costs.len();
+    let mut sizes = vec![];
+    let mut acc = 0.0;
+    let mut count = 0usize;
+    for &c in costs {
+        // Close the current chunk on overflow (unless we're already on the
+        // last allowed chunk, which must absorb the remainder — the cap came
+        // from a feasibility check, so this cannot actually overflow it).
+        if count > 0 && acc + c > cap && sizes.len() < p - 1 {
+            sizes.push(count);
+            count = 0;
+            acc = 0.0;
+        }
+        count += 1;
+        acc += c;
+    }
+    sizes.push(count);
+    // Pad to exactly p partitions by splitting the largest chunks.
+    while sizes.len() < p {
+        let (idx, _) = sizes
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s >= 2)
+            .max_by(|a, b| a.1.cmp(b.1))
+            .expect("cannot make p non-empty partitions: too few nodes");
+        let s = sizes[idx];
+        sizes[idx] = s / 2;
+        sizes.insert(idx + 1, s - s / 2);
+    }
+    debug_assert_eq!(sizes.iter().sum::<usize>(), n);
+    sizes
+}
+
+/// Compute a balanced LPP for `p` partitions (FLOP-balanced).
+pub fn auto_lpp(g: &ModelGraph, p: usize) -> anyhow::Result<Vec<usize>> {
+    auto_lpp_weighted(g, p, &node_costs(g))
+}
+
+/// Balanced LPP under arbitrary per-node weights (e.g. memory bytes for
+/// trainability studies — the expert would hand-tune LPP the same way).
+pub fn auto_lpp_weighted(
+    g: &ModelGraph,
+    p: usize,
+    costs: &[f64],
+) -> anyhow::Result<Vec<usize>> {
+    let n = g.num_nodes();
+    anyhow::ensure!(p >= 1, "need at least one partition");
+    anyhow::ensure!(costs.len() == n, "weights length {} != nodes {n}", costs.len());
+    anyhow::ensure!(
+        p <= n,
+        "cannot split {n} nodes across {p} partitions \
+         (the paper's 'no more partitions than layers' constraint)"
+    );
+    if p == 1 {
+        return Ok(vec![n]);
+    }
+    let costs = costs.to_vec();
+    let costs: Vec<f64> = costs.iter().map(|c| c.max(1.0)).collect();
+    let total: f64 = costs.iter().sum();
+    let maxc = costs.iter().cloned().fold(0.0, f64::max);
+    let (mut lo, mut hi) = (maxc.max(total / p as f64), total);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if feasible(&costs, p, mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Ok(split_with_cap(&costs, p, hi))
+}
+
+/// Convert an LPP vector to (start, end) node ranges.
+pub fn lpp_to_ranges(lpp: &[usize]) -> Vec<(usize, usize)> {
+    let mut out = vec![];
+    let mut start = 0;
+    for &c in lpp {
+        out.push((start, start + c));
+        start += c;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    #[test]
+    fn feasible_boundaries() {
+        let c = [1.0, 1.0, 1.0, 1.0];
+        assert!(feasible(&c, 2, 2.0));
+        assert!(!feasible(&c, 2, 1.5));
+        assert!(feasible(&c, 4, 1.0));
+        assert!(!feasible(&c, 1, 3.9));
+    }
+
+    #[test]
+    fn auto_lpp_sums_and_nonzero() {
+        let g = zoo::resnet110_v1();
+        for p in [1, 2, 7, 16, 48] {
+            let lpp = auto_lpp(&g, p).unwrap();
+            assert_eq!(lpp.len(), p);
+            assert_eq!(lpp.iter().sum::<usize>(), g.num_nodes());
+            assert!(lpp.iter().all(|&c| c > 0), "p={p}: {lpp:?}");
+        }
+    }
+
+    #[test]
+    fn auto_lpp_more_parts_than_nodes_errors() {
+        let g = zoo::mlp(4, &[], 2); // 3 nodes
+        assert!(auto_lpp(&g, 10).is_err());
+    }
+
+    #[test]
+    fn p_equals_n_gives_singletons() {
+        let g = zoo::mlp(4, &[3, 3], 2); // 5 nodes
+        let lpp = auto_lpp(&g, 5).unwrap();
+        assert_eq!(lpp, vec![1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn bottleneck_near_optimal_uniform() {
+        // Uniform-ish chain: bottleneck should be within 30% of total/p.
+        let g = zoo::mlp(256, &[256; 20], 10);
+        let costs = node_costs(&g);
+        let total: f64 = costs.iter().sum();
+        let lpp = auto_lpp(&g, 4).unwrap();
+        let ranges = lpp_to_ranges(&lpp);
+        let bottleneck = ranges
+            .iter()
+            .map(|&(a, b)| costs[a..b].iter().sum::<f64>())
+            .fold(0.0, f64::max);
+        assert!(bottleneck <= total / 4.0 * 1.5, "bottleneck {bottleneck} vs ideal {}", total / 4.0);
+    }
+
+    #[test]
+    fn ranges_roundtrip() {
+        assert_eq!(lpp_to_ranges(&[2, 3, 1]), vec![(0, 2), (2, 5), (5, 6)]);
+    }
+
+    #[test]
+    fn resnet5000_scale_is_fast() {
+        let g = zoo::resnet_v2(4997, &[3, 32, 32], 10);
+        let t0 = std::time::Instant::now();
+        let lpp = auto_lpp(&g, 96).unwrap();
+        assert_eq!(lpp.iter().sum::<usize>(), g.num_nodes());
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "balancer too slow");
+    }
+}

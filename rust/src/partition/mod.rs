@@ -1,0 +1,297 @@
+//! The **Model Generator** and **Load Balancer** (paper §6.1 / Fig 4):
+//! turn a [`ModelGraph`] into `P` contiguous partitions, enumerate every
+//! cross-partition edge (boundary edges *and* skip connections, Fig 6),
+//! build the forward/backward dependency lists, and produce the
+//! rank-sorted, deadlock-free message schedule.
+//!
+//! Partitions are contiguous node ranges in topological order — the same
+//! "layers per partition" (LPP) model the paper exposes. The balancer
+//! either takes a user LPP vector (expert knob, Listing 2) or solves the
+//! classic linear-partitioning problem on the analytic cost model
+//! (binary search on the bottleneck + greedy feasibility check).
+
+mod balancer;
+mod schedule;
+
+pub use balancer::{auto_lpp, auto_lpp_weighted, lpp_to_ranges};
+pub use schedule::{MsgDir, MsgSchedule, ScheduledMsg};
+
+use crate::graph::{LayerKind, ModelGraph, NodeId};
+
+/// A cross-partition data dependency: `src_node`'s output is consumed by
+/// `dst_node` living on another partition. Each edge gets a stable id used
+/// as the message-tag offset in both passes (activations forward, partial
+/// errors backward — the paper's grad-layer channel).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CrossEdge {
+    pub id: usize,
+    pub src_node: NodeId,
+    pub dst_node: NodeId,
+    pub src_part: usize,
+    pub dst_part: usize,
+}
+
+/// The partitioned model: assignment plus the communication structure.
+#[derive(Clone, Debug)]
+pub struct Partitioning {
+    pub num_partitions: usize,
+    /// node id -> partition index.
+    pub assign: Vec<usize>,
+    /// partition -> node ids in topological order.
+    pub parts: Vec<Vec<NodeId>>,
+    /// All cross-partition edges, ordered by (src_node, dst_node).
+    pub edges: Vec<CrossEdge>,
+}
+
+impl Partitioning {
+    /// Partition `g` into `p` contiguous ranges using the auto balancer.
+    pub fn auto(g: &ModelGraph, p: usize) -> anyhow::Result<Partitioning> {
+        let lpp = auto_lpp(g, p)?;
+        Self::from_lpp(g, &lpp)
+    }
+
+    /// Partition `g` with an explicit LPP (nodes per partition) vector —
+    /// the paper's expert knob. Must sum to the node count.
+    pub fn from_lpp(g: &ModelGraph, lpp: &[usize]) -> anyhow::Result<Partitioning> {
+        let n = g.num_nodes();
+        let p = lpp.len();
+        anyhow::ensure!(p >= 1, "need at least one partition");
+        anyhow::ensure!(
+            lpp.iter().sum::<usize>() == n,
+            "LPP {:?} must sum to the node count {n}", lpp
+        );
+        anyhow::ensure!(
+            lpp.iter().all(|&c| c > 0),
+            "every partition needs at least one node, got {:?}", lpp
+        );
+        let mut assign = vec![0usize; n];
+        let mut parts: Vec<Vec<NodeId>> = vec![vec![]; p];
+        let mut next = 0usize;
+        for (part, &count) in lpp.iter().enumerate() {
+            for _ in 0..count {
+                assign[next] = part;
+                parts[part].push(next);
+                next += 1;
+            }
+        }
+        // Enumerate cross edges in deterministic (src, dst) order.
+        let mut edges = vec![];
+        for node in &g.nodes {
+            for &src in &node.inputs {
+                if assign[src] != assign[node.id] {
+                    edges.push(CrossEdge {
+                        id: edges.len(),
+                        src_node: src,
+                        dst_node: node.id,
+                        src_part: assign[src],
+                        dst_part: assign[node.id],
+                    });
+                }
+            }
+        }
+        edges.sort_by_key(|e| (e.src_node, e.dst_node));
+        for (i, e) in edges.iter_mut().enumerate() {
+            e.id = i;
+        }
+        let pt = Partitioning { num_partitions: p, assign, parts, edges };
+        pt.check(g)?;
+        Ok(pt)
+    }
+
+    /// Sanity invariants (also exercised by the proptest fuzzer).
+    fn check(&self, g: &ModelGraph) -> anyhow::Result<()> {
+        anyhow::ensure!(self.assign[0] == 0, "Input node must be on partition 0");
+        if let Some(l) = g.loss_node() {
+            anyhow::ensure!(
+                self.assign[l] == self.num_partitions - 1,
+                "loss node must be on the last partition (got {})",
+                self.assign[l]
+            );
+        }
+        // Contiguity <=> assignment is monotone non-decreasing.
+        for w in self.assign.windows(2) {
+            anyhow::ensure!(w[0] <= w[1], "partition assignment not contiguous");
+        }
+        Ok(())
+    }
+
+    /// Edges whose producer lives on partition `p` (forward sends),
+    /// rank-sorted: emitted in node order, nearest destination partition
+    /// first (the paper's deadlock-avoidance order, §6.3).
+    pub fn sends_of(&self, p: usize) -> Vec<&CrossEdge> {
+        let mut v: Vec<&CrossEdge> =
+            self.edges.iter().filter(|e| e.src_part == p).collect();
+        v.sort_by_key(|e| (e.src_node, e.dst_part, e.dst_node));
+        v
+    }
+
+    /// Edges whose consumer lives on partition `p` (forward receives),
+    /// in consumer-topological order.
+    pub fn recvs_of(&self, p: usize) -> Vec<&CrossEdge> {
+        let mut v: Vec<&CrossEdge> =
+            self.edges.iter().filter(|e| e.dst_part == p).collect();
+        v.sort_by_key(|e| (e.dst_node, e.src_node));
+        v
+    }
+
+    /// Cross edges delivering inputs of `node` (in input-slot order).
+    pub fn in_edges_of_node(&self, node: NodeId) -> Vec<&CrossEdge> {
+        self.edges.iter().filter(|e| e.dst_node == node).collect()
+    }
+
+    /// Cross edges consuming `node`'s output.
+    pub fn out_edges_of_node(&self, node: NodeId) -> Vec<&CrossEdge> {
+        self.edges.iter().filter(|e| e.src_node == node).collect()
+    }
+
+    /// The paper's Fig 6 "Forward list": for partition `p`, the per-node
+    /// list of (node, remote destination partitions) it must send to.
+    pub fn forward_list(&self, p: usize) -> Vec<(NodeId, Vec<usize>)> {
+        let mut out: Vec<(NodeId, Vec<usize>)> = vec![];
+        for &n in &self.parts[p] {
+            let dsts: Vec<usize> = {
+                let mut d: Vec<usize> = self
+                    .out_edges_of_node(n)
+                    .iter()
+                    .map(|e| e.dst_part)
+                    .collect();
+                d.sort();
+                d.dedup();
+                d
+            };
+            if !dsts.is_empty() {
+                out.push((n, dsts));
+            }
+        }
+        out
+    }
+
+    /// The paper's Fig 6 "Backward list": for partition `p`, the per-node
+    /// list of (node, remote source partitions) it receives from.
+    pub fn backward_list(&self, p: usize) -> Vec<(NodeId, Vec<usize>)> {
+        let mut out: Vec<(NodeId, Vec<usize>)> = vec![];
+        for &n in &self.parts[p] {
+            let srcs: Vec<usize> = {
+                let mut s: Vec<usize> = self
+                    .in_edges_of_node(n)
+                    .iter()
+                    .map(|e| e.src_part)
+                    .collect();
+                s.sort();
+                s.dedup();
+                s
+            };
+            if !srcs.is_empty() {
+                out.push((n, srcs));
+            }
+        }
+        out
+    }
+
+    /// Total bytes crossing partition boundaries per sample in the forward
+    /// pass (used by the simulator and the balancer diagnostics).
+    pub fn boundary_bytes_per_sample(&self, g: &ModelGraph) -> usize {
+        self.edges
+            .iter()
+            .map(|e| g.nodes[e.src_node].out_shape.iter().product::<usize>() * 4)
+            .sum()
+    }
+
+    /// Parameter count on partition `p`.
+    pub fn params_of(&self, g: &ModelGraph, p: usize) -> usize {
+        self.parts[p]
+            .iter()
+            .flat_map(|&n| g.nodes[n].params.iter())
+            .map(|ps| ps.numel())
+            .sum()
+    }
+}
+
+/// Skip-connection-aware helper: does this graph have non-consecutive
+/// connections (paper §4.3)?
+pub fn has_skip_connections(g: &ModelGraph) -> bool {
+    g.nodes.iter().any(|n| matches!(n.kind, LayerKind::Add))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    #[test]
+    fn from_lpp_basic() {
+        let g = zoo::mlp(8, &[6, 5], 4); // input + 2 dense_relu + dense + loss
+        assert_eq!(g.num_nodes(), 5);
+        let pt = Partitioning::from_lpp(&g, &[2, 2, 1]).unwrap();
+        assert_eq!(pt.assign, vec![0, 0, 1, 1, 2]);
+        assert_eq!(pt.parts[1], vec![2, 3]);
+        // Chain graph: boundary edges only.
+        assert_eq!(pt.edges.len(), 2);
+        assert_eq!(pt.edges[0].src_node, 1);
+        assert_eq!(pt.edges[0].dst_node, 2);
+    }
+
+    #[test]
+    fn lpp_must_sum() {
+        let g = zoo::mlp(8, &[6], 4);
+        assert!(Partitioning::from_lpp(&g, &[1, 1]).is_err());
+        assert!(Partitioning::from_lpp(&g, &[4, 0]).is_err());
+    }
+
+    #[test]
+    fn skip_connections_become_cross_edges() {
+        let g = zoo::resnet20_v1();
+        let p = Partitioning::auto(&g, 4).unwrap();
+        assert!(has_skip_connections(&g));
+        assert!(
+            p.edges.len() >= 3,
+            "expected chain + skip cross edges, got {:?}", p.edges.len()
+        );
+        // Every edge's endpoints agree with the assignment.
+        for e in &p.edges {
+            assert_eq!(p.assign[e.src_node], e.src_part);
+            assert_eq!(p.assign[e.dst_node], e.dst_part);
+            assert_ne!(e.src_part, e.dst_part);
+        }
+    }
+
+    #[test]
+    fn single_partition_has_no_edges() {
+        let g = zoo::resnet20_v1();
+        let p = Partitioning::auto(&g, 1).unwrap();
+        assert!(p.edges.is_empty());
+        assert_eq!(p.parts[0].len(), g.num_nodes());
+    }
+
+    #[test]
+    fn forward_backward_lists_mirror() {
+        let g = zoo::resnet20_v1();
+        let p = Partitioning::auto(&g, 3).unwrap();
+        let sends: usize = (0..3).map(|i| p.sends_of(i).len()).sum();
+        let recvs: usize = (0..3).map(|i| p.recvs_of(i).len()).sum();
+        assert_eq!(sends, recvs);
+        assert_eq!(sends, p.edges.len());
+    }
+
+    #[test]
+    fn auto_balances_within_2x() {
+        let g = zoo::resnet56_v1();
+        for parts in [2, 4, 8] {
+            let p = Partitioning::auto(&g, parts).unwrap();
+            let costs: Vec<f64> = (0..parts)
+                .map(|i| p.parts[i].iter().map(|&n| g.node_cost(n).flops).sum())
+                .collect();
+            let max = costs.iter().cloned().fold(0.0, f64::max);
+            let avg = costs.iter().sum::<f64>() / parts as f64;
+            assert!(max < 2.0 * avg, "parts={parts} costs={costs:?}");
+        }
+    }
+
+    #[test]
+    fn params_partition_sums_to_total() {
+        let g = zoo::resnet20_v1();
+        let p = Partitioning::auto(&g, 4).unwrap();
+        let total: usize = (0..4).map(|i| p.params_of(&g, i)).sum();
+        assert_eq!(total, g.num_params());
+    }
+}

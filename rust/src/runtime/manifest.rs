@@ -1,0 +1,156 @@
+//! Parser for `artifacts/manifest.txt`, the contract file written by
+//! `python/compile/aot.py`. Line format (hand-rolled, no serde in the
+//! offline build):
+//!
+//! ```text
+//! # registry-sha256=<digest>
+//! dense_n2_d4_m3.fwd|in=f32[2,4];f32[4,3];f32[3]|out=f32[2,3]
+//! ```
+
+use crate::tensor::Shape;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Shapes of one artifact's inputs and outputs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub in_shapes: Vec<Shape>,
+    pub out_shapes: Vec<Shape>,
+}
+
+/// The parsed manifest: artifact name -> metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: HashMap<String, ArtifactMeta>,
+    /// The registry digest stamped by aot.py (freshness check).
+    pub registry_digest: Option<String>,
+}
+
+fn parse_shape_list(s: &str) -> anyhow::Result<Vec<Shape>> {
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split(';').map(parse_typed_shape).collect()
+}
+
+/// "f32[2,4]" -> Shape([2,4]); "f32[]" -> scalar.
+fn parse_typed_shape(s: &str) -> anyhow::Result<Shape> {
+    let s = s.trim();
+    let rest = s
+        .strip_prefix("f32[")
+        .ok_or_else(|| anyhow::anyhow!("expected f32[...], got '{s}' (only f32 supported)"))?;
+    let dims = rest
+        .strip_suffix(']')
+        .ok_or_else(|| anyhow::anyhow!("unterminated shape '{s}'"))?;
+    Shape::parse(dims)
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let mut entries = HashMap::new();
+        let mut registry_digest = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('#') {
+                if let Some(d) = rest.trim().strip_prefix("registry-sha256=") {
+                    registry_digest = Some(d.to_string());
+                }
+                continue;
+            }
+            let mut fields = line.split('|');
+            let (name, ins, outs) = (|| {
+                let name = fields.next()?;
+                let ins = fields.next()?.strip_prefix("in=")?;
+                let outs = fields.next()?.strip_prefix("out=")?;
+                Some((name, ins, outs))
+            })()
+            .ok_or_else(|| {
+                anyhow::anyhow!("manifest line {}: malformed '{line}'", lineno + 1)
+            })?;
+            let meta = ArtifactMeta {
+                name: name.to_string(),
+                in_shapes: parse_shape_list(ins)?,
+                out_shapes: parse_shape_list(outs)?,
+            };
+            if entries.insert(name.to_string(), meta).is_some() {
+                anyhow::bail!("manifest line {}: duplicate artifact '{name}'", lineno + 1);
+            }
+        }
+        Ok(Manifest { entries, registry_digest })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read manifest {path:?}: {e} — run `make artifacts` first"
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = Manifest::parse(
+            "# registry-sha256=abc123\n\
+             dense_n2_d4_m3.fwd|in=f32[2,4];f32[4,3];f32[3]|out=f32[2,3]\n\
+             softmaxxent_n2_c3.fwd|in=f32[2,3];f32[2,3]|out=f32[];f32[2,3]\n",
+        )
+        .unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.registry_digest.as_deref(), Some("abc123"));
+        let d = m.get("dense_n2_d4_m3.fwd").unwrap();
+        assert_eq!(d.in_shapes.len(), 3);
+        assert_eq!(d.in_shapes[0], Shape::new(&[2, 4]));
+        let s = m.get("softmaxxent_n2_c3.fwd").unwrap();
+        assert_eq!(s.out_shapes[0], Shape::new(&[])); // scalar loss
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("name-only\n").is_err());
+        assert!(Manifest::parse("x|in=f32[2|out=f32[2]\n").is_err());
+        assert!(Manifest::parse("x|in=i8[2]|out=f32[2]\n").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let text = "a.fwd|in=f32[1]|out=f32[1]\na.fwd|in=f32[1]|out=f32[1]\n";
+        assert!(Manifest::parse(text).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads() {
+        let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.txt");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.len() >= 10);
+            assert!(m.registry_digest.is_some());
+        }
+    }
+}

@@ -1,0 +1,288 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `python/compile/aot.py`) and execute them from the Rust
+//! hot path. This is the layer that keeps Python off the training path:
+//! after `make artifacts`, the coordinator is self-contained.
+//!
+//! Per the AOT recipe (see /opt/xla-example/README.md): the interchange
+//! format is HLO **text** (`HloModuleProto::from_text_file`); all artifacts
+//! were lowered with `return_tuple=True`, so every execution result is a
+//! tuple we decompose.
+//!
+//! One `Runtime` per rank thread (the PJRT wrappers are not `Sync`);
+//! executables are compiled lazily on first use and cached, so a rank only
+//! pays for the primitives its partition actually runs.
+
+mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest};
+
+use crate::tensor::{Shape, Tensor};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Execution statistics (for the perf pass and benches).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub exec_secs: f64,
+    pub compile_secs: f64,
+    pub compiles: u64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+/// Artifact registry + PJRT client + executable cache for one rank.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.txt`, compiles nothing
+    /// yet) and create a PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Does the registry hold an artifact of this name?
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.get(name).is_some()
+    }
+
+    fn executable(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        anyhow::ensure!(
+            self.manifest.get(name).is_some(),
+            "artifact '{name}' not in manifest at {:?} — run `make artifacts` \
+             after regenerating the registry (`hyparflow inspect --emit-registry`)",
+            self.dir
+        );
+        let t0 = std::time::Instant::now();
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact path not utf-8"),
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        let mut s = self.stats.borrow_mut();
+        s.compiles += 1;
+        s.compile_secs += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+
+    /// Eagerly compile a set of artifacts (used at startup so the first
+    /// training step isn't a compile storm).
+    pub fn warmup<'a>(&self, names: impl IntoIterator<Item = &'a str>) -> anyhow::Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` on host tensors, returning host tensors.
+    ///
+    /// Shapes are validated against the manifest before launch so that a
+    /// registry/engine mismatch fails with names, not an XLA shape error.
+    pub fn exec(&self, name: &str, args: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            args.len() == meta.in_shapes.len(),
+            "{name}: expected {} args, got {}",
+            meta.in_shapes.len(),
+            args.len()
+        );
+        for (i, (a, want)) in args.iter().zip(meta.in_shapes.iter()).enumerate() {
+            anyhow::ensure!(
+                &a.shape == want,
+                "{name}: arg {i} shape {} != manifest {}",
+                a.shape,
+                want
+            );
+        }
+        let exe = self.executable(name)?;
+        let t0 = std::time::Instant::now();
+
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<anyhow::Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let out_literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result of {name}: {e:?}"))?;
+        // All artifacts are lowered with return_tuple=True.
+        let parts = out_literal
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result of {name}: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == meta.out_shapes.len(),
+            "{name}: got {} outputs, manifest says {}",
+            parts.len(),
+            meta.out_shapes.len()
+        );
+        let outs: Vec<Tensor> = parts
+            .iter()
+            .zip(meta.out_shapes.iter())
+            .map(|(l, shape)| literal_to_tensor(l, shape))
+            .collect::<anyhow::Result<_>>()?;
+
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.exec_secs += t0.elapsed().as_secs_f64();
+        s.h2d_bytes += args.iter().map(|t| t.size_bytes() as u64).sum::<u64>();
+        s.d2h_bytes += outs.iter().map(|t| t.size_bytes() as u64).sum::<u64>();
+        Ok(outs)
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.rank() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = t.shape.dims().iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape literal to {}: {e:?}", t.shape))
+}
+
+fn literal_to_tensor(l: &xla::Literal, shape: &Shape) -> anyhow::Result<Tensor> {
+    let data = l
+        .to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
+    anyhow::ensure!(
+        data.len() == shape.numel(),
+        "literal has {} elements, manifest shape {} wants {}",
+        data.len(),
+        shape,
+        shape.numel()
+    );
+    Ok(Tensor::new(shape.clone(), data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        assert!(
+            d.join("manifest.txt").exists(),
+            "artifacts not built — run `make artifacts` first"
+        );
+        d
+    }
+
+    #[test]
+    fn exec_dense_fwd_matches_cpu_math() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        // dense_n2_d4_m3: y = x @ w + b
+        let x = Tensor::new(Shape::new(&[2, 4]), (0..8).map(|i| i as f32).collect());
+        let w = Tensor::ones(&[4, 3]);
+        let b = Tensor::full(&[3], 0.5);
+        let out = rt.exec("dense_n2_d4_m3.fwd", &[&x, &w, &b]).unwrap();
+        assert_eq!(out.len(), 1);
+        // Row sums: 0+1+2+3=6, 4+5+6+7=22; +0.5.
+        assert_eq!(out[0].data, vec![6.5, 6.5, 6.5, 22.5, 22.5, 22.5]);
+    }
+
+    #[test]
+    fn exec_relu_fwd() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let x = Tensor::new(Shape::new(&[2, 4]),
+                            vec![-1., 2., -3., 4., 0., -0.5, 7., -8.]);
+        let out = rt.exec("relu2_n2_d4.fwd", &[&x]).unwrap();
+        assert_eq!(out[0].data, vec![0., 2., 0., 4., 0., 0., 7., 0.]);
+    }
+
+    #[test]
+    fn exec_softmaxxent_two_outputs() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let logits = Tensor::zeros(&[2, 3]);
+        let mut y = Tensor::zeros(&[2, 3]);
+        y.data[0] = 1.0; // class 0
+        y.data[5] = 1.0; // class 2
+        let out = rt.exec("softmaxxent_n2_c3.fwd", &[&logits, &y]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!((out[0].data[0] - (3f32).ln()).abs() < 1e-5, "uniform loss = ln(3)");
+        assert_eq!(out[1].shape.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn exec_dense_bwd_grads() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let x = Tensor::ones(&[2, 4]);
+        let w = Tensor::ones(&[4, 3]);
+        let gy = Tensor::ones(&[2, 3]);
+        let out = rt.exec("dense_n2_d4_m3.bwd", &[&x, &w, &gy]).unwrap();
+        assert_eq!(out.len(), 3); // gx, gw, gb
+        assert_eq!(out[0].data, vec![3.0; 8]); // gy @ w^T
+        assert_eq!(out[1].data, vec![2.0; 12]); // x^T @ gy
+        assert_eq!(out[2].data, vec![2.0; 3]); // col sums of gy
+    }
+
+    #[test]
+    fn shape_mismatch_is_descriptive() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let bad = Tensor::zeros(&[3, 4]);
+        let w = Tensor::ones(&[4, 3]);
+        let b = Tensor::zeros(&[3]);
+        let err = rt.exec("dense_n2_d4_m3.fwd", &[&bad, &w, &b]).unwrap_err();
+        assert!(err.to_string().contains("arg 0 shape"), "err: {err}");
+    }
+
+    #[test]
+    fn missing_artifact_names_the_fix() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let err = rt.exec("conv9x9_n1_c1_k1_h1_w1_s1.fwd", &[]).unwrap_err();
+        assert!(err.to_string().contains("not in manifest"), "err: {err}");
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let x = Tensor::zeros(&[2, 4]);
+        for _ in 0..3 {
+            rt.exec("relu2_n2_d4.fwd", &[&x]).unwrap();
+        }
+        let s = rt.stats();
+        assert_eq!(s.compiles, 1);
+        assert_eq!(s.executions, 3);
+    }
+}

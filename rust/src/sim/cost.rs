@@ -1,0 +1,176 @@
+//! Per-primitive compute cost model.
+//!
+//! `t(W, c) = g0 + g1*c + W / (core_rate * ceff(W, c))`
+//!
+//! Two mechanisms, both measured pathologies of TF-1.13-era CPU training:
+//!
+//! 1. **Thread-pool fork/join overhead grows with the cores an op spans**
+//!    (`g0 + g1*c`). A sequential process gives every op all 48 cores, so
+//!    every op pays the widest synchronization cost; a model-parallel
+//!    partition with 48/P cores pays far less per op while the pipeline
+//!    keeps all cores busy. This is what makes HF(MP) beat sequential even
+//!    at batch size 1 (paper Figs 7-10) and makes the gain grow with depth
+//!    (ResNet-1001's 3,000+ ops amplify per-op overhead).
+//! 2. **Saturating intra-op scaling**: `ceff(W, c) = min(c, 1 + W/grain,
+//!    max_intra_op_speedup)` — an op engages an extra core only per `grain`
+//!    FLOPs of work and never beats the memory-bandwidth/NUMA ceiling.
+//!    This is why large batches favor fewer-bigger ranks (DP catches up at
+//!    BS >= 512) and why 48-core sequential wastes most of the node.
+//!
+//! `hyparflow calibrate` re-anchors `core_rate` and `g0` from PJRT
+//! measurements on this host; platform profiles carry scaled defaults.
+
+use super::Platform;
+use crate::graph::{ModelGraph, NodeId};
+
+/// Default per-op dispatch overhead if calibration is absent (seconds).
+pub const PRIM_DISPATCH_DEFAULT: f64 = 80e-6;
+
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Sustained per-core FLOP rate (f32).
+    pub core_rate: f64,
+    /// Fixed per-op dispatch overhead, seconds.
+    pub dispatch: f64,
+    /// Additional per-op overhead per core the op's thread pool spans.
+    pub dispatch_per_core: f64,
+    /// FLOPs per additional core of intra-op scaling.
+    pub grain: f64,
+    /// Intra-op speedup ceiling.
+    pub max_speedup: f64,
+}
+
+impl CostModel {
+    pub fn for_platform(p: &Platform) -> CostModel {
+        CostModel {
+            core_rate: p.core_gflops * 1e9,
+            dispatch: p.dispatch_secs,
+            dispatch_per_core: p.dispatch_per_core_secs,
+            grain: p.grain_flops,
+            max_speedup: p.max_intra_op_speedup,
+        }
+    }
+
+    /// Effective cores an op of `w` FLOPs can use out of `c`.
+    pub fn ceff(&self, w: f64, c: f64) -> f64 {
+        c.min(1.0 + w / self.grain).min(self.max_speedup).max(1.0)
+    }
+
+    /// Per-op overhead when the op's pool spans `c` cores.
+    pub fn overhead(&self, c: f64) -> f64 {
+        self.dispatch + self.dispatch_per_core * c
+    }
+
+    /// Time for one op of `w` FLOPs on `c` cores.
+    pub fn op_time(&self, w: f64, c: f64) -> f64 {
+        if w <= 0.0 {
+            return 0.0; // free ops (Input/Flatten) execute natively
+        }
+        self.overhead(c) + w / (self.core_rate * self.ceff(w, c))
+    }
+
+    /// Forward time of one node for a microbatch of `mb` on `c` cores.
+    pub fn node_fwd(&self, g: &ModelGraph, n: NodeId, mb: usize, c: f64) -> f64 {
+        self.op_time(g.node_cost(n).flops * mb as f64, c)
+    }
+
+    /// Backward is ~2x forward FLOPs (dgrad + wgrad) with its own dispatch.
+    pub fn node_bwd(&self, g: &ModelGraph, n: NodeId, mb: usize, c: f64) -> f64 {
+        let w = g.node_cost(n).flops * mb as f64;
+        if w <= 0.0 {
+            return 0.0;
+        }
+        self.op_time(2.0 * w, c)
+    }
+
+    /// Load calibration overrides from `calibration.txt` (written by
+    /// `hyparflow calibrate`): `key value` lines for core_rate/dispatch.
+    pub fn apply_calibration(&mut self, text: &str) -> anyhow::Result<()> {
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let (k, v) = (
+                it.next().ok_or_else(|| anyhow::anyhow!("bad line '{line}'"))?,
+                it.next()
+                    .ok_or_else(|| anyhow::anyhow!("bad line '{line}'"))?
+                    .parse::<f64>()?,
+            );
+            match k {
+                "core_rate" => self.core_rate = v,
+                "dispatch" => self.dispatch = v,
+                "dispatch_per_core" => self.dispatch_per_core = v,
+                "grain" => self.grain = v,
+                "max_speedup" => self.max_speedup = v,
+                other => anyhow::bail!("unknown calibration key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    fn cm() -> CostModel {
+        CostModel::for_platform(&Platform::skylake48())
+    }
+
+    #[test]
+    fn tiny_ops_are_dispatch_bound() {
+        let c = cm();
+        let t = c.op_time(1e3, 48.0);
+        assert!((t - c.overhead(48.0)) / t < 0.01, "tiny op ~ dispatch: {t}");
+    }
+
+    #[test]
+    fn per_op_overhead_grows_with_pool_width() {
+        // The TF thread-pool pathology the paper exploits: a 48-core op
+        // pays more fork/join than a 6-core op.
+        let c = cm();
+        assert!(c.overhead(48.0) > 2.0 * c.overhead(6.0));
+    }
+
+    #[test]
+    fn big_ops_scale_until_ceiling() {
+        let c = cm();
+        let t1 = c.op_time(1e9, 1.0);
+        let t8 = c.op_time(1e9, 8.0);
+        let t48 = c.op_time(1e9, 48.0);
+        assert!(t8 < t1 / 4.0, "8 cores should speed up big ops");
+        // Ceiling: 48 cores no better than max_speedup (+ pool overhead).
+        let floor = c.overhead(48.0) + 1e9 / (c.core_rate * c.max_speedup);
+        assert!((t48 - floor).abs() / floor < 0.01, "{t48} vs {floor}");
+    }
+
+    #[test]
+    fn ceff_monotone_in_work() {
+        let c = cm();
+        assert!(c.ceff(1e5, 48.0) < c.ceff(1e8, 48.0));
+        assert!(c.ceff(1e8, 4.0) <= 4.0);
+    }
+
+    #[test]
+    fn node_costs_positive_for_compute_nodes() {
+        let g = zoo::resnet20_v1();
+        let c = cm();
+        for n in 0..g.num_nodes() {
+            let f = c.node_fwd(&g, n, 8, 4.0);
+            let b = c.node_bwd(&g, n, 8, 4.0);
+            assert!(f >= 0.0 && b >= f, "node {n}: fwd {f} bwd {b}");
+        }
+    }
+
+    #[test]
+    fn calibration_overrides() {
+        let mut c = cm();
+        c.apply_calibration("# comment\ncore_rate 5e9\ndispatch 1e-4\n").unwrap();
+        assert_eq!(c.core_rate, 5e9);
+        assert_eq!(c.dispatch, 1e-4);
+        assert!(c.apply_calibration("bogus 1").is_err());
+    }
+}

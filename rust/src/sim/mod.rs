@@ -1,0 +1,333 @@
+//! Calibrated cluster simulator (DESIGN.md substitution #3).
+//!
+//! The paper's multi-node results (Fig 7-13) were measured on Stampede2
+//! Skylake nodes (Omni-Path) and an AMD EPYC cluster (IB-EDR). Neither is
+//! available, so scaling experiments run on this model:
+//!
+//! - **compute**: per-op time `t(W, c) = g + W / (rate * ceff(W, c))` where
+//!   `W` is FLOPs, `c` the cores given to the op, `g` the framework
+//!   dispatch overhead, and `ceff` a saturating parallel-efficiency curve
+//!   (ops only scale to as many cores as their work grain supports) — the
+//!   mechanism behind the paper's "sequential TF cannot use 48 cores for
+//!   small batches" observation that makes MP win at small batch sizes.
+//! - **communication**: alpha-beta links (latency + bytes/bandwidth),
+//!   intra-node vs inter-node; ring allreduce across replicas, one
+//!   concurrent allreduce per model-partition (paper §5.3), overlapped
+//!   with the other partitions' compute.
+//! - **schedule**: the exact fill/drain microbatch pipeline the Trainer
+//!   executes, replayed per partition with boundary + skip-edge payloads
+//!   from the real `Partitioning`.
+//!
+//! Constants are anchored by `hyparflow calibrate` (PJRT measurements on
+//! this host, scaled to platform profiles); the *shapes* of the figures
+//! come from the mechanisms above, not from curve fitting.
+
+mod cost;
+mod pipeline;
+
+pub use cost::{CostModel, PRIM_DISPATCH_DEFAULT};
+pub use pipeline::{simulate_step, SimBreakdown};
+
+use crate::graph::ModelGraph;
+use crate::partition::Partitioning;
+
+/// Hardware profile for one cluster flavor.
+#[derive(Clone, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    pub cores_per_node: usize,
+    /// Sustained per-core f32 GFLOP/s for conv/matmul-type work.
+    pub core_gflops: f64,
+    /// FLOPs of work needed to profitably engage one extra core
+    /// (intra-op parallel grain).
+    pub grain_flops: f64,
+    /// Framework per-op dispatch overhead (fixed part), seconds.
+    pub dispatch_secs: f64,
+    /// Per-op thread-pool fork/join cost per core spanned, seconds.
+    pub dispatch_per_core_secs: f64,
+    /// Hard cap on intra-op scaling (NUMA/memory-bandwidth ceiling).
+    pub max_intra_op_speedup: f64,
+    /// Inter-node link (Omni-Path / IB-EDR class).
+    pub net_latency: f64,
+    pub net_bw: f64, // bytes/sec
+    /// Intra-node (shared-memory) link.
+    pub shm_latency: f64,
+    pub shm_bw: f64,
+    pub mem_gb: f64,
+}
+
+impl Platform {
+    /// Stampede2 Skylake partition: dual-socket Xeon 8160, 48 cores,
+    /// 192 GB, 100 Gb/s Omni-Path.
+    pub fn skylake48() -> Platform {
+        Platform {
+            name: "skylake-48c",
+            cores_per_node: 48,
+            core_gflops: 18.0,
+            grain_flops: 6.0e6,
+            dispatch_secs: 80e-6,
+            dispatch_per_core_secs: 8e-6,
+            max_intra_op_speedup: 16.0,
+            net_latency: 1.8e-6,
+            net_bw: 12.0e9,
+            shm_latency: 0.6e-6,
+            shm_bw: 24.0e9,
+            mem_gb: 192.0,
+        }
+    }
+
+    /// The paper's AMD platform: dual-socket EPYC 7551, 64 cores, IB-EDR.
+    /// OpenBLAS on Zen1 sustains notably lower per-core conv throughput and
+    /// the 4-die NUMA topology caps intra-op scaling harder — this is what
+    /// produced the paper's 3.2x MP-over-sequential result (Fig 9).
+    pub fn epyc64() -> Platform {
+        Platform {
+            name: "epyc-64c",
+            cores_per_node: 64,
+            core_gflops: 9.0,
+            grain_flops: 8.0e6,
+            dispatch_secs: 100e-6,
+            // OpenBLAS pthread pool + 4-die NUMA: wider per-core fork/join
+            // cost and a lower scaling ceiling than MKL-on-Skylake.
+            dispatch_per_core_secs: 14e-6,
+            max_intra_op_speedup: 8.0,
+            net_latency: 1.5e-6,
+            net_bw: 12.0e9,
+            shm_latency: 0.7e-6,
+            shm_bw: 20.0e9,
+            mem_gb: 256.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<Platform> {
+        Ok(match name {
+            "skylake" | "skylake48" | "skylake-48c" => Self::skylake48(),
+            "epyc" | "epyc64" | "epyc-64c" => Self::epyc64(),
+            _ => anyhow::bail!("unknown platform '{name}' (skylake|epyc)"),
+        })
+    }
+
+    /// Point-to-point transfer time over the chosen link.
+    pub fn p2p(&self, bytes: f64, inter_node: bool) -> f64 {
+        if inter_node {
+            self.net_latency + bytes / self.net_bw
+        } else {
+            self.shm_latency + bytes / self.shm_bw
+        }
+    }
+
+    /// Ring allreduce across `r` ranks. `inter` selects the bottleneck
+    /// link class.
+    pub fn allreduce(&self, bytes: f64, r: usize, inter_node: bool) -> f64 {
+        if r <= 1 {
+            return 0.0;
+        }
+        let (lat, bw) = if inter_node {
+            (self.net_latency, self.net_bw)
+        } else {
+            (self.shm_latency, self.shm_bw)
+        };
+        // MPI software overhead per message hop dominates tiny latencies.
+        let hop = lat + 15e-6;
+        2.0 * (r as f64 - 1.0) * (hop + (bytes / r as f64) / bw)
+    }
+}
+
+/// One simulated scenario.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub platform: Platform,
+    pub nodes: usize,
+    /// Ranks (processes) per node.
+    pub ppn: usize,
+    pub partitions: usize,
+    pub replicas: usize,
+    /// Microbatch size per pipeline slot.
+    pub microbatch: usize,
+    /// Microbatches per step; per-replica batch = microbatch*num_mb.
+    pub num_microbatches: usize,
+    /// Overlap the per-partition allreduce with other partitions' compute
+    /// (the paper's design). Off = single global allreduce after backward
+    /// (plain Horovod DP behavior).
+    pub overlap_allreduce: bool,
+    pub cost: CostModel,
+}
+
+impl SimConfig {
+    pub fn new(platform: Platform, partitions: usize, replicas: usize) -> SimConfig {
+        let cost = CostModel::for_platform(&platform);
+        SimConfig {
+            platform,
+            nodes: 1,
+            ppn: partitions * replicas,
+            partitions,
+            replicas,
+            microbatch: 8,
+            num_microbatches: 4,
+            overlap_allreduce: true,
+            cost,
+        }
+    }
+
+    /// Total ranks.
+    pub fn world(&self) -> usize {
+        self.partitions * self.replicas
+    }
+
+    /// Cores available to each rank.
+    pub fn cores_per_rank(&self) -> f64 {
+        let slots = (self.nodes * self.ppn).max(1);
+        debug_assert!(self.world() <= slots, "world {} > slots {slots}", self.world());
+        (self.platform.cores_per_node as f64) / self.ppn as f64
+    }
+
+    /// Node index hosting a given (replica, partition) rank,
+    /// replica-major placement (a replica's partitions stay close).
+    pub fn node_of(&self, replica: usize, partition: usize) -> usize {
+        let rank = replica * self.partitions + partition;
+        rank / self.ppn
+    }
+
+    pub fn batch_per_replica(&self) -> usize {
+        self.microbatch * self.num_microbatches
+    }
+
+    pub fn effective_batch(&self) -> usize {
+        self.batch_per_replica() * self.replicas
+    }
+}
+
+/// Simulation output.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub step_secs: f64,
+    pub img_per_sec: f64,
+    pub breakdown: SimBreakdown,
+}
+
+/// Simulate one synchronous training step of `g` under `cfg`.
+pub fn simulate(g: &ModelGraph, pt: &Partitioning, cfg: &SimConfig) -> SimResult {
+    let b = simulate_step(g, pt, cfg);
+    let step = b.step_secs;
+    SimResult {
+        step_secs: step,
+        img_per_sec: cfg.effective_batch() as f64 / step,
+        breakdown: b,
+    }
+}
+
+/// Convenience: simulate the sequential baseline (1 rank, all cores,
+/// single "microbatch" equal to the full batch).
+pub fn simulate_sequential(g: &ModelGraph, platform: &Platform, batch: usize) -> SimResult {
+    let pt = Partitioning::auto(g, 1).expect("P=1");
+    let mut cfg = SimConfig::new(platform.clone(), 1, 1);
+    cfg.nodes = 1;
+    cfg.ppn = 1;
+    cfg.microbatch = batch;
+    cfg.num_microbatches = 1;
+    simulate(g, &pt, &cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    #[test]
+    fn p2p_and_allreduce_monotone() {
+        let p = Platform::skylake48();
+        assert!(p.p2p(1e6, true) > p.p2p(1e6, false));
+        assert!(p.allreduce(1e8, 4, true) > p.allreduce(1e6, 4, true));
+        assert!(p.allreduce(1e6, 8, true) > p.allreduce(1e6, 2, true));
+        assert_eq!(p.allreduce(1e6, 1, true), 0.0);
+    }
+
+    #[test]
+    fn sequential_throughput_scales_with_batch() {
+        let g = zoo::resnet110_v1();
+        let p = Platform::skylake48();
+        let small = simulate_sequential(&g, &p, 8).img_per_sec;
+        let large = simulate_sequential(&g, &p, 512).img_per_sec;
+        assert!(
+            large > 2.0 * small,
+            "dispatch overhead should cap small-batch throughput: {small:.1} vs {large:.1}"
+        );
+    }
+
+    #[test]
+    fn mp_beats_sequential() {
+        // The paper's core single-node claim (Figs 8/9): model parallelism
+        // with per-sample pipelining beats sequential TF (which pays the
+        // 48-core thread-pool toll on every op and caps at the node's
+        // intra-op scaling ceiling).
+        let g = zoo::resnet110_v1();
+        let p = Platform::skylake48();
+        let seq = simulate_sequential(&g, &p, 128);
+        let pt = Partitioning::auto(&g, 48).unwrap();
+        let mut cfg = SimConfig::new(p, 48, 1);
+        cfg.ppn = 48;
+        cfg.microbatch = 1;
+        cfg.num_microbatches = 128;
+        let mp = simulate(&g, &pt, &cfg);
+        assert!(
+            mp.img_per_sec > 1.5 * seq.img_per_sec,
+            "MP {:.1} vs seq {:.1} img/s",
+            mp.img_per_sec,
+            seq.img_per_sec
+        );
+    }
+
+    #[test]
+    fn dp_allreduce_hurts_param_heavy_models() {
+        // ResNet-1001 (30M params) must scale worse under DP than
+        // ResNet-110 (1.7M) — the paper's Fig 10/12 observation.
+        let p = Platform::skylake48();
+        let rel_overhead = |g: &ModelGraph| {
+            let pt = Partitioning::auto(g, 1).unwrap();
+            let mut cfg = SimConfig::new(p.clone(), 1, 8);
+            cfg.nodes = 8;
+            cfg.ppn = 1;
+            cfg.microbatch = 32;
+            cfg.num_microbatches = 1;
+            cfg.overlap_allreduce = false;
+            let r = simulate(g, &pt, &cfg);
+            r.breakdown.allreduce_secs / r.step_secs
+        };
+        let small = rel_overhead(&zoo::resnet110_v1());
+        let big = rel_overhead(&zoo::resnet_v2(164, &[3, 32, 32], 10));
+        // 164-v2 has ~2x the params of 110-v1 but also more compute; use
+        // 1001 for the real contrast (kept cheap here).
+        let huge = rel_overhead(&zoo::resnet1001_v2());
+        assert!(huge > small, "allreduce share: 110={small:.3} 1001={huge:.3}");
+        let _ = big;
+    }
+
+    #[test]
+    fn epyc_sequential_is_slower_than_skylake() {
+        let g = zoo::resnet110_v1();
+        let sky = simulate_sequential(&g, &Platform::skylake48(), 256).img_per_sec;
+        let amd = simulate_sequential(&g, &Platform::epyc64(), 256).img_per_sec;
+        assert!(amd < sky, "epyc {amd:.1} should be slower than skylake {sky:.1}");
+    }
+
+    #[test]
+    fn multi_node_mp_pays_network_latency() {
+        let g = zoo::resnet110_v1();
+        let p = Platform::skylake48();
+        let pt = Partitioning::auto(&g, 16).unwrap();
+        let mut one = SimConfig::new(p.clone(), 16, 1);
+        one.nodes = 1;
+        one.ppn = 16;
+        let mut two = SimConfig::new(p, 16, 1);
+        two.nodes = 2;
+        two.ppn = 8;
+        let t1 = simulate(&g, &pt, &one);
+        let t2 = simulate(&g, &pt, &two);
+        assert!(
+            t2.breakdown.p2p_secs > t1.breakdown.p2p_secs,
+            "cross-node boundaries cost more: {:.4} vs {:.4}",
+            t2.breakdown.p2p_secs,
+            t1.breakdown.p2p_secs
+        );
+    }
+}

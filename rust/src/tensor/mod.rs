@@ -1,0 +1,265 @@
+//! Host tensor: a contiguous `f32` buffer plus a shape. This is the currency
+//! of the coordinator — activations, partial errors, parameters and gradients
+//! all travel as `Tensor`s between the PJRT runtime, the communication engine
+//! and the optimizer.
+//!
+//! Layout is row-major (C order), matching both JAX defaults and the XLA
+//! literal layout the runtime marshals to/from.
+
+use crate::rng::Rng;
+use std::fmt;
+
+/// Shape = dimension list. Scalars are `[]`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Bytes when stored as f32.
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    /// Parse "8,16,32,32" (empty string = scalar).
+    pub fn parse(s: &str) -> anyhow::Result<Shape> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Ok(Shape(vec![]));
+        }
+        let dims = s
+            .split(',')
+            .map(|d| d.trim().parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| anyhow::anyhow!("bad shape '{s}': {e}"))?;
+        Ok(Shape(dims))
+    }
+}
+
+impl fmt::Debug for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}]", self.0.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","))
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Shape, data: Vec<f32>) -> Self {
+        assert_eq!(shape.numel(), data.len(), "shape {shape} != data len {}", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn ones(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![1.0; n] }
+    }
+
+    pub fn full(dims: &[usize], v: f32) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: Shape(vec![]), data: vec![v] }
+    }
+
+    /// He-normal init (fan_in based), the standard conv/dense init used by the
+    /// paper's Keras models.
+    pub fn he_normal(dims: &[usize], fan_in: usize, rng: &mut Rng) -> Self {
+        let std = (2.0 / fan_in as f32).sqrt();
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        let data = (0..n).map(|_| rng.normal() * std).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn randn(dims: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        let data = (0..n).map(|_| rng.normal() * std).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// First (batch) dimension; panics on scalars.
+    pub fn batch(&self) -> usize {
+        self.shape.0[0]
+    }
+
+    /// Split along dim 0 into `n` equal chunks. Panics if not divisible.
+    pub fn split_batch(&self, n: usize) -> Vec<Tensor> {
+        let b = self.batch();
+        assert!(b % n == 0, "batch {b} not divisible into {n} chunks");
+        let chunk_b = b / n;
+        let stride: usize = self.shape.0[1..].iter().product();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut dims = self.shape.0.clone();
+            dims[0] = chunk_b;
+            let lo = i * chunk_b * stride;
+            let hi = lo + chunk_b * stride;
+            out.push(Tensor::new(Shape(dims), self.data[lo..hi].to_vec()));
+        }
+        out
+    }
+
+    /// Concatenate along dim 0. All inputs must agree on trailing dims.
+    pub fn concat_batch(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let trailing = &parts[0].shape.0[1..];
+        let mut total_b = 0;
+        let mut data = Vec::with_capacity(parts.iter().map(|p| p.numel()).sum());
+        for p in parts {
+            assert_eq!(&p.shape.0[1..], trailing, "trailing dims mismatch in concat");
+            total_b += p.shape.0[0];
+            data.extend_from_slice(&p.data);
+        }
+        let mut dims = parts[0].shape.0.clone();
+        dims[0] = total_b;
+        Tensor::new(Shape(dims), data)
+    }
+
+    /// Elementwise in-place add (used for gradient accumulation across
+    /// microbatches and for fan-in joins).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "add_assign shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// L2 norm (used in tests and gradient diagnostics).
+    pub fn l2(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Max absolute difference vs another tensor (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{} l2={:.4}", self.shape, self.l2())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_numel() {
+        assert_eq!(Shape::new(&[2, 3, 4]).numel(), 24);
+        assert_eq!(Shape::new(&[]).numel(), 1);
+    }
+
+    #[test]
+    fn shape_parse_roundtrip() {
+        let s = Shape::parse("8,16,32,32").unwrap();
+        assert_eq!(s.dims(), &[8, 16, 32, 32]);
+        assert_eq!(Shape::parse("").unwrap().rank(), 0);
+        assert!(Shape::parse("2,x").is_err());
+    }
+
+    #[test]
+    fn split_concat_roundtrip() {
+        let t = Tensor::new(Shape::new(&[4, 3]), (0..12).map(|x| x as f32).collect());
+        let parts = t.split_batch(2);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].shape.dims(), &[2, 3]);
+        assert_eq!(parts[0].data, vec![0., 1., 2., 3., 4., 5.]);
+        let back = Tensor::concat_batch(&parts);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn split_not_divisible_panics() {
+        Tensor::zeros(&[3, 2]).split_batch(2);
+    }
+
+    #[test]
+    fn add_assign_and_scale() {
+        let mut a = Tensor::ones(&[2, 2]);
+        let b = Tensor::full(&[2, 2], 2.0);
+        a.add_assign(&b);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.5; 4]);
+    }
+
+    #[test]
+    fn he_normal_std() {
+        let mut rng = Rng::new(11);
+        let t = Tensor::he_normal(&[64, 64, 3, 3], 9 * 64, &mut rng);
+        let n = t.numel() as f32;
+        let mean = t.data.iter().sum::<f32>() / n;
+        let var = t.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n;
+        let want = 2.0 / (9.0 * 64.0);
+        assert!((var - want).abs() < want * 0.2, "var={var} want~{want}");
+    }
+
+    #[test]
+    fn max_abs_diff_zero_on_clone() {
+        let t = Tensor::randn(&[5, 5], 1.0, &mut Rng::new(0));
+        assert_eq!(t.max_abs_diff(&t.clone()), 0.0);
+    }
+}

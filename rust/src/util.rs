@@ -1,0 +1,140 @@
+//! Small shared helpers: human-readable units, timing, and a tiny
+//! line-oriented table printer used by the bench harnesses.
+
+use std::time::Instant;
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a count with SI units (e.g. parameter counts, FLOPs).
+pub fn fmt_si(n: f64) -> String {
+    const UNITS: [&str; 5] = ["", "K", "M", "G", "T"];
+    let mut v = n;
+    let mut u = 0;
+    while v.abs() >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    format!("{v:.2}{}", UNITS[u])
+}
+
+/// Format seconds adaptively (ns/us/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Time a closure, returning (result, elapsed seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Minimal fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>width$} | ", c, width = w[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &w));
+        let mut sep = String::from("|");
+        for wi in &w {
+            sep.push_str(&"-".repeat(wi + 2));
+            sep.push('|');
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&line(r, &w));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(16_800_000_000), "15.65 GiB");
+    }
+
+    #[test]
+    fn si_units() {
+        assert_eq!(fmt_si(30_000_000.0), "30.00M");
+        assert_eq!(fmt_si(999.0), "999.00");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(fmt_secs(0.5), "500.00ms");
+        assert_eq!(fmt_secs(2.0), "2.000s");
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| a | bb |") || s.contains("a"));
+        assert_eq!(s.lines().count(), 3);
+    }
+}

@@ -1,0 +1,157 @@
+//! The machine check of the paper's §6.1 guarantee: the Model Generator
+//! "follows sequential semantics for the distributed model-parallel version
+//! it creates" — same hyperparameters, same updates, no accuracy impact.
+//!
+//! Model-parallel runs must produce **identical** weights to sequential
+//! (partitioning moves ops across ranks but never changes the math; sends
+//! copy exact floats). Data-parallel/hybrid averaging over equal shards is
+//! equal to the big-batch mean up to float reassociation, so those compare
+//! with a tolerance.
+
+use hyparflow::api::{fit, FitResult, Strategy, TrainConfig};
+use hyparflow::graph::zoo;
+
+fn mlp_cfg(strategy: Strategy) -> TrainConfig {
+    TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), strategy)
+        .microbatch(4)
+        .steps(6)
+        .lr(0.05)
+        .seed(7)
+}
+
+fn resnet_cfg(strategy: Strategy) -> TrainConfig {
+    TrainConfig::new(zoo::resnet20_v1(), strategy)
+        .microbatch(4)
+        .steps(2)
+        .lr(0.01)
+        .seed(11)
+}
+
+fn max_param_diff(a: &FitResult, b: &FitResult) -> f32 {
+    assert_eq!(a.params.len(), b.params.len(), "param sets differ");
+    let mut worst = 0.0f32;
+    for ((ka, ta), (kb, tb)) in a.params.iter().zip(b.params.iter()) {
+        assert_eq!(ka, kb, "param key order mismatch");
+        worst = worst.max(ta.max_abs_diff(tb));
+    }
+    worst
+}
+
+fn loss_history(r: &FitResult) -> Vec<f32> {
+    r.history.iter().map(|m| m.loss).collect()
+}
+
+#[test]
+fn mlp_model_parallel_matches_sequential_exactly() {
+    let seq = fit(&mlp_cfg(Strategy::Sequential)).unwrap();
+    for p in [2, 3, 4] {
+        let mp = fit(&mlp_cfg(Strategy::Model).partitions(p)).unwrap();
+        assert_eq!(
+            loss_history(&seq),
+            loss_history(&mp),
+            "loss history diverged at P={p}"
+        );
+        let d = max_param_diff(&seq, &mp);
+        assert_eq!(d, 0.0, "P={p}: max param diff {d} (must be bitwise equal)");
+    }
+}
+
+#[test]
+fn mlp_explicit_lpp_matches_too() {
+    let seq = fit(&mlp_cfg(Strategy::Sequential)).unwrap();
+    // 6 nodes: input + 3 dense_relu + dense + loss; skew the split hard.
+    let mp = fit(&mlp_cfg(Strategy::Model).partitions(3).lpp(vec![1, 1, 4])).unwrap();
+    assert_eq!(max_param_diff(&seq, &mp), 0.0);
+}
+
+#[test]
+fn resnet_model_parallel_matches_sequential_exactly() {
+    // Conv + BN + skip connections crossing partitions.
+    let seq = fit(&resnet_cfg(Strategy::Sequential)).unwrap();
+    for p in [2, 4] {
+        let mp = fit(&resnet_cfg(Strategy::Model).partitions(p)).unwrap();
+        assert_eq!(
+            loss_history(&seq),
+            loss_history(&mp),
+            "loss history diverged at P={p}"
+        );
+        assert_eq!(max_param_diff(&seq, &mp), 0.0, "P={p}");
+    }
+}
+
+#[test]
+fn microbatched_mp_matches_microbatched_seq() {
+    // Pipelining (num_microbatches > 1) must not change the math either,
+    // as long as sequential uses the same microbatching (BN sees the same
+    // per-microbatch statistics).
+    let seq = fit(&mlp_cfg(Strategy::Sequential).num_microbatches(3)).unwrap();
+    let mp = fit(&mlp_cfg(Strategy::Model).partitions(3).num_microbatches(3)).unwrap();
+    assert_eq!(max_param_diff(&seq, &mp), 0.0);
+}
+
+#[test]
+fn data_parallel_matches_bigbatch_sequential() {
+    // DP with R replicas of microbatch m == sequential with microbatch R*m
+    // (grad averaging == big-batch mean), up to float reassociation.
+    // The MLP has no BN, so batch-size semantics are clean.
+    let seq = fit(&TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), Strategy::Sequential)
+        .microbatch(4)
+        .num_microbatches(2) // batch 8, as 2 microbatches of 4
+        .steps(6)
+        .lr(0.05)
+        .seed(7))
+    .unwrap();
+    let dp = fit(&TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), Strategy::Data)
+        .replicas(2)
+        .microbatch(4)
+        .num_microbatches(1) // batch 4 per replica, EBS 8
+        .steps(6)
+        .lr(0.05)
+        .seed(7))
+    .unwrap();
+    let d = max_param_diff(&seq, &dp);
+    assert!(d < 2e-5, "DP vs big-batch seq diff {d}");
+}
+
+#[test]
+fn hybrid_matches_bigbatch_sequential() {
+    let seq = fit(&TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), Strategy::Sequential)
+        .microbatch(4)
+        .num_microbatches(2)
+        .steps(5)
+        .lr(0.05)
+        .seed(3))
+    .unwrap();
+    let hy = fit(&TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), Strategy::Hybrid)
+        .partitions(3)
+        .replicas(2)
+        .microbatch(4)
+        .num_microbatches(1)
+        .steps(5)
+        .lr(0.05)
+        .seed(3))
+    .unwrap();
+    let d = max_param_diff(&seq, &hy);
+    assert!(d < 2e-5, "hybrid vs big-batch seq diff {d}");
+}
+
+#[test]
+fn replicas_agree_after_training() {
+    // Hybrid training must be deterministic end-to-end: same seed, same
+    // topology -> bitwise identical weights.
+    let a = fit(&mlp_cfg(Strategy::Hybrid).partitions(2).replicas(2)).unwrap();
+    let b = fit(&mlp_cfg(Strategy::Hybrid).partitions(2).replicas(2)).unwrap();
+    assert_eq!(max_param_diff(&a, &b), 0.0, "hybrid training not deterministic");
+}
+
+#[test]
+fn losses_are_finite_and_improve_on_average() {
+    let r = fit(&mlp_cfg(Strategy::Model).partitions(2).steps(30)).unwrap();
+    assert!(r.history.iter().all(|m| m.loss.is_finite()));
+    let first: f32 = r.history[..5].iter().map(|m| m.loss).sum::<f32>() / 5.0;
+    let last: f32 = r.history[25..].iter().map(|m| m.loss).sum::<f32>() / 5.0;
+    assert!(
+        last < first,
+        "loss should trend down: first5={first:.4} last5={last:.4}"
+    );
+}

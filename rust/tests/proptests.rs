@@ -1,0 +1,210 @@
+//! Property-based tests (seeded PRNG fuzzing — the offline build carries no
+//! proptest crate, so the shrink-less equivalent is rolled by hand: many
+//! random cases per property, each failure printing its seed).
+//!
+//! Properties:
+//! 1. Random skip-topology graphs x random partitionings -> the message
+//!    schedule completes under rendezvous semantics (no deadlock), and
+//!    every cross edge appears exactly twice (fwd + bwd).
+//! 2. Random LPP splits of a fixed MLP -> bitwise equivalence with the
+//!    sequential run (the §6.1 guarantee, fuzzed).
+//! 3. The auto load balancer never produces empty partitions and never
+//!    exceeds 2x the ideal bottleneck on random graphs.
+//! 4. hfmpi collectives agree with a scalar reference on random inputs.
+
+use hyparflow::api::{fit, Strategy, TrainConfig};
+use hyparflow::graph::{zoo, ModelGraph};
+use hyparflow::hfmpi::{AllreduceAlgo, World};
+use hyparflow::partition::{auto_lpp, MsgSchedule, Partitioning};
+use hyparflow::rng::Rng;
+use hyparflow::tensor::{Shape, Tensor};
+
+/// Random conv/skip graph in the ResNet family: chains of conv-bn-relu with
+/// random Add skip edges back to earlier same-shape nodes.
+fn random_skip_graph(rng: &mut Rng) -> ModelGraph {
+    let mut g = ModelGraph::new("fuzz", &[3, 8, 8]);
+    let x = g.input();
+    let mut cur = g.conv3x3(x, 4, 1);
+    // Same-shape checkpoints eligible as skip sources.
+    let mut checkpoints = vec![cur];
+    let blocks = 2 + rng.below(6);
+    for _ in 0..blocks {
+        let c = g.conv3x3(cur, 4, 1);
+        let b = g.batchnorm(c);
+        let r = g.relu(b);
+        cur = r;
+        if rng.below(2) == 0 && !checkpoints.is_empty() {
+            let src = checkpoints[rng.below(checkpoints.len())];
+            cur = g.add(cur, src);
+        }
+        checkpoints.push(cur);
+    }
+    let p = g.gap(cur);
+    let d = g.dense(p, 3);
+    g.loss(d);
+    g
+}
+
+/// Random LPP vector: contiguous, non-empty, sums to n.
+fn random_lpp(rng: &mut Rng, n: usize, parts: usize) -> Vec<usize> {
+    // parts-1 random cut points.
+    let mut cuts: Vec<usize> = (0..parts - 1).map(|_| 1 + rng.below(n - 1)).collect();
+    cuts.sort();
+    cuts.dedup();
+    while cuts.len() < parts - 1 {
+        let c = 1 + rng.below(n - 1);
+        if !cuts.contains(&c) {
+            cuts.push(c);
+            cuts.sort();
+        }
+    }
+    let mut lpp = vec![];
+    let mut prev = 0;
+    for c in cuts {
+        lpp.push(c - prev);
+        prev = c;
+    }
+    lpp.push(n - prev);
+    lpp
+}
+
+#[test]
+fn prop_random_graphs_schedule_deadlock_free() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let g = random_skip_graph(&mut rng);
+        g.validate().unwrap_or_else(|e| panic!("seed {seed}: invalid graph: {e}"));
+        let n = g.num_nodes();
+        let parts = 2 + rng.below(n.min(6) - 1);
+        let lpp = random_lpp(&mut rng, n, parts);
+        let pt = Partitioning::from_lpp(&g, &lpp)
+            .unwrap_or_else(|e| panic!("seed {seed}: partition {lpp:?}: {e}"));
+        let s = MsgSchedule::build(&pt);
+        let steps = s
+            .check_rendezvous()
+            .unwrap_or_else(|stuck| panic!("seed {seed}: deadlock, stuck={stuck:?} lpp={lpp:?}"));
+        assert_eq!(steps, pt.edges.len() * 2, "seed {seed}: edge coverage");
+    }
+}
+
+#[test]
+fn prop_balancer_invariants_on_random_graphs() {
+    for seed in 100..140u64 {
+        let mut rng = Rng::new(seed);
+        let g = random_skip_graph(&mut rng);
+        let n = g.num_nodes();
+        for parts in [2, 3, n.min(7)] {
+            let lpp = auto_lpp(&g, parts).unwrap();
+            assert_eq!(lpp.len(), parts, "seed {seed}");
+            assert_eq!(lpp.iter().sum::<usize>(), n, "seed {seed}");
+            assert!(lpp.iter().all(|&c| c > 0), "seed {seed}: {lpp:?}");
+            let costs: Vec<f64> = {
+                let mut acc = vec![];
+                let mut i = 0;
+                for &c in &lpp {
+                    acc.push((i..i + c).map(|k| g.node_cost(k).flops.max(1.0)).sum());
+                    i += c;
+                }
+                acc
+            };
+            let total: f64 = costs.iter().sum();
+            let max = costs.iter().cloned().fold(0.0, f64::max);
+            let maxnode = (0..n)
+                .map(|k| g.node_cost(k).flops.max(1.0))
+                .fold(0.0, f64::max);
+            let ideal = (total / parts as f64).max(maxnode);
+            assert!(
+                max <= ideal * 2.0 + 1.0,
+                "seed {seed} parts={parts}: bottleneck {max} vs ideal {ideal}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_random_lpp_training_equivalence() {
+    // Fuzz the *numeric* guarantee on the artifact-backed MLP: any random
+    // contiguous split trains bitwise-identically to sequential.
+    let seq = fit(&base_cfg(Strategy::Sequential)).unwrap();
+    let g = zoo::mlp(8, &[8, 8, 8], 4);
+    let n = g.num_nodes(); // 6
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed);
+        let parts = 2 + rng.below(3); // 2..4
+        let lpp = random_lpp(&mut rng, n, parts);
+        let mp = fit(&base_cfg(Strategy::Model).partitions(parts).lpp(lpp.clone())).unwrap();
+        for ((ka, ta), (kb, tb)) in seq.params.iter().zip(mp.params.iter()) {
+            assert_eq!(ka, kb);
+            assert_eq!(
+                ta.max_abs_diff(tb),
+                0.0,
+                "seed {seed} lpp {lpp:?}: params diverged"
+            );
+        }
+    }
+}
+
+fn base_cfg(s: Strategy) -> TrainConfig {
+    TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), s)
+        .microbatch(4)
+        .steps(3)
+        .lr(0.05)
+        .seed(21)
+}
+
+#[test]
+fn prop_allreduce_matches_scalar_reference() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.below(7);
+        let len = 1 + rng.below(300);
+        let algo = match rng.below(3) {
+            0 => AllreduceAlgo::Naive,
+            1 => AllreduceAlgo::Ring,
+            _ => AllreduceAlgo::RecursiveDoubling,
+        };
+        // Reference: sum of per-rank deterministic vectors.
+        let make = |rank: usize| -> Vec<f32> {
+            let mut r = Rng::new(seed * 1000 + rank as u64);
+            (0..len).map(|_| r.uniform_in(-1.0, 1.0)).collect()
+        };
+        let mut want = vec![0.0f32; len];
+        for rank in 0..n {
+            for (w, v) in want.iter_mut().zip(make(rank)) {
+                *w += v;
+            }
+        }
+        let outs = World::run(n, |c| {
+            let mut t = Tensor::new(Shape::new(&[len]), make(c.rank()));
+            c.allreduce_sum_with(&mut t, algo).unwrap();
+            t
+        });
+        for (rank, t) in outs.iter().enumerate() {
+            for (i, (got, want)) in t.data.iter().zip(want.iter()).enumerate() {
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "seed {seed} n={n} len={len} algo={algo:?} rank {rank} [{i}]: {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bcast_from_random_roots() {
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(seed + 500);
+        let n = 2 + rng.below(7);
+        let root = rng.below(n);
+        let val = rng.uniform();
+        World::run(n, move |c| {
+            let mut t = if c.rank() == root {
+                Tensor::full(&[5], val)
+            } else {
+                Tensor::zeros(&[5])
+            };
+            c.bcast(&mut t, root);
+            assert_eq!(t.data, vec![val; 5], "seed {seed} n={n} root={root}");
+        });
+    }
+}
