@@ -1,5 +1,5 @@
 //! `cargo bench --bench microbench` — real (not simulated) measurements of
-//! the hot-path components: PJRT executable dispatch, per-primitive
+//! the hot-path components: runtime primitive dispatch, per-primitive
 //! execution, hfmpi collectives (by algorithm and size), tensor fusion
 //! on/off, and one real end-to-end training step per strategy.
 //!
@@ -28,7 +28,7 @@ fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
 }
 
 fn bench_runtime() {
-    println!("--- PJRT runtime (real measurements) ---");
+    println!("--- primitive runtime (real measurements) ---");
     let rt = Runtime::open(default_artifacts_dir()).unwrap();
     let mut t = Table::new(&["artifact", "time/call", "GFLOP/s"]);
 

@@ -24,6 +24,7 @@ use crate::graph::{ModelGraph, NodeId};
 use crate::hfmpi::{AllreduceAlgo, World};
 use crate::partition::Partitioning;
 use crate::runtime::Runtime;
+use crate::schedule::ScheduleKind;
 use crate::tensor::Tensor;
 use std::path::PathBuf;
 
@@ -121,6 +122,14 @@ impl TrainConfig {
 
     pub fn num_microbatches(mut self, m: usize) -> Self {
         self.engine.num_microbatches = m;
+        self
+    }
+
+    /// Pipeline schedule (paper's GPipe-style fill/drain, or 1F1B with
+    /// bounded in-flight microbatches). One IR drives the Trainer, the
+    /// simulator and the memory model — see `crate::schedule`.
+    pub fn schedule(mut self, s: ScheduleKind) -> Self {
+        self.engine.schedule = s;
         self
     }
 
@@ -273,7 +282,14 @@ fn run_rank(
     partitions: usize,
     dataset: &SyntheticDataset,
 ) -> anyhow::Result<RankOutput> {
-    let ce = CommEngine::new(world, partitions, cfg.fusion_threshold, cfg.allreduce_algo);
+    let ce = CommEngine::new(
+        world,
+        partitions,
+        pt.edges.len(),
+        cfg.engine.num_microbatches,
+        cfg.fusion_threshold,
+        cfg.allreduce_algo,
+    );
     let rt = Runtime::open(&cfg.artifacts_dir)?;
     let mut trainer =
         Trainer::new(&cfg.model, pt, cfg.engine.clone(), &ce, &rt, dataset.clone())?;

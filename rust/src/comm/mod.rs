@@ -18,7 +18,12 @@ use crate::hfmpi::{tags, AllreduceAlgo, Comm, FusionBuffer};
 use crate::tensor::Tensor;
 
 /// Maximum microbatches per step encodable in a tag.
-const MAX_MB: u64 = 4096;
+pub const MAX_MB: u64 = 4096;
+
+/// Maximum cross-partition edge ids encodable without colliding with the
+/// next tag class: the ACTIVATION and ERROR windows are `1 << 20` apart
+/// (see `hfmpi::tags`), and each edge consumes `MAX_MB` tags.
+pub const MAX_EDGES: u64 = (tags::ERROR - tags::ACTIVATION) / MAX_MB;
 
 /// Per-rank communication engine.
 pub struct CommEngine {
@@ -34,15 +39,35 @@ pub struct CommEngine {
 impl CommEngine {
     /// Split the world communicator into the hybrid-parallel layout.
     /// `world.size()` must equal `partitions * replicas`.
+    ///
+    /// `num_edges` and `num_microbatches` are the run's tag-space budget:
+    /// the (edge, microbatch) pair is packed into a message tag as
+    /// `edge * MAX_MB + mb` inside a `1 << 20`-wide class window, so a run
+    /// exceeding either limit would silently alias tags between edges (or
+    /// between the activation and error classes) and deliver tensors to the
+    /// wrong receive. Assert it here, at construction, instead.
     pub fn new(
         world: &Comm,
         partitions: usize,
+        num_edges: usize,
+        num_microbatches: usize,
         fusion_threshold: usize,
         algo: AllreduceAlgo,
     ) -> CommEngine {
         assert!(world.size() % partitions == 0,
                 "world size {} not divisible by partitions {partitions}",
                 world.size());
+        assert!(
+            (num_microbatches as u64) <= MAX_MB,
+            "num_microbatches {num_microbatches} exceeds the tag budget \
+             MAX_MB={MAX_MB}; edge/microbatch tags would alias"
+        );
+        assert!(
+            (num_edges as u64) <= MAX_EDGES,
+            "{num_edges} cross-partition edges exceed the tag budget \
+             MAX_EDGES={MAX_EDGES}; activation tags would spill into the \
+             error tag window"
+        );
         let rank = world.rank();
         let partition = rank % partitions;
         let replica_id = rank / partitions;
@@ -58,10 +83,12 @@ impl CommEngine {
     }
 
     fn act_tag(edge: usize, mb: usize) -> u64 {
+        debug_assert!((edge as u64) < MAX_EDGES && (mb as u64) < MAX_MB);
         tags::ACTIVATION + edge as u64 * MAX_MB + mb as u64
     }
 
     fn err_tag(edge: usize, mb: usize) -> u64 {
+        debug_assert!((edge as u64) < MAX_EDGES && (mb as u64) < MAX_MB);
         tags::ERROR + edge as u64 * MAX_MB + mb as u64
     }
 
@@ -122,7 +149,7 @@ mod tests {
     fn hybrid_layout_2x3() {
         // 3 partitions x 2 replicas = 6 ranks.
         World::run(6, |world| {
-            let ce = CommEngine::new(world, 3, usize::MAX, AllreduceAlgo::Auto);
+            let ce = CommEngine::new(world, 3, 8, 4, usize::MAX, AllreduceAlgo::Auto);
             assert_eq!(ce.partition, world.rank() % 3);
             assert_eq!(ce.replica_id, world.rank() / 3);
             assert_eq!(ce.pipeline.size(), 3);
@@ -135,7 +162,7 @@ mod tests {
     #[test]
     fn activations_flow_within_replica_only() {
         World::run(4, |world| {
-            let ce = CommEngine::new(world, 2, usize::MAX, AllreduceAlgo::Auto);
+            let ce = CommEngine::new(world, 2, 8, 4, usize::MAX, AllreduceAlgo::Auto);
             // Partition 0 of each replica sends a replica-stamped tensor to
             // partition 1; the receiver must see its own replica's value.
             if ce.partition == 0 {
@@ -151,7 +178,7 @@ mod tests {
     #[test]
     fn grads_average_across_replicas_per_partition() {
         World::run(4, |world| {
-            let ce = CommEngine::new(world, 2, usize::MAX, AllreduceAlgo::Auto);
+            let ce = CommEngine::new(world, 2, 8, 4, usize::MAX, AllreduceAlgo::Auto);
             let mut g = Tensor::full(&[4], (ce.replica_id * 10 + ce.partition) as f32);
             ce.allreduce_grads(&mut [&mut g]).unwrap();
             // replicas {0,1}: values p and 10+p -> mean 5+p.
@@ -162,7 +189,7 @@ mod tests {
     #[test]
     fn errors_and_activations_do_not_collide() {
         World::run(2, |world| {
-            let ce = CommEngine::new(world, 2, usize::MAX, AllreduceAlgo::Auto);
+            let ce = CommEngine::new(world, 2, 8, 4, usize::MAX, AllreduceAlgo::Auto);
             if ce.partition == 0 {
                 ce.send_activation(&Tensor::scalar(1.0), 1, 5, 3);
                 let e = ce.recv_error(1, 5, 3);
@@ -176,9 +203,39 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "exceeds the tag budget")]
+    fn too_many_microbatches_rejected_at_construction() {
+        World::run(1, |world| {
+            CommEngine::new(world, 1, 4, MAX_MB as usize + 1, usize::MAX, AllreduceAlgo::Auto);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed the tag budget")]
+    fn too_many_edges_rejected_at_construction() {
+        World::run(1, |world| {
+            CommEngine::new(world, 1, MAX_EDGES as usize + 1, 1, usize::MAX, AllreduceAlgo::Auto);
+        });
+    }
+
+    #[test]
+    fn budget_boundary_is_accepted() {
+        World::run(1, |world| {
+            CommEngine::new(
+                world,
+                1,
+                MAX_EDGES as usize,
+                MAX_MB as usize,
+                usize::MAX,
+                AllreduceAlgo::Auto,
+            );
+        });
+    }
+
+    #[test]
     fn bcast_param_syncs_replicas() {
         World::run(4, |world| {
-            let ce = CommEngine::new(world, 2, usize::MAX, AllreduceAlgo::Auto);
+            let ce = CommEngine::new(world, 2, 8, 4, usize::MAX, AllreduceAlgo::Auto);
             let mut w = if ce.replica_id == 0 {
                 Tensor::full(&[3], 42.0)
             } else {

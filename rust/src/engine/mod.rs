@@ -1,30 +1,39 @@
 //! The **Trainer** (paper §6.2 / Listing 3): per-rank distributed training
-//! loop implementing forward and backward passes over one model-partition,
-//! with microbatch pipelining, grad-layer partial-error exchange, and
-//! data-parallel gradient averaging.
+//! as an **interpreter of the pipeline-schedule IR** (`crate::schedule`).
 //!
-//! Execution model per training step (GPipe-style fill/drain, the paper's
-//! "pipelining via batch splitting"):
+//! `Trainer::new` compiles the `(ModelGraph, Partitioning,
+//! num_microbatches, ScheduleKind)` quadruple into a per-rank
+//! [`Program`](crate::schedule::Program); `train_step` then executes this
+//! rank's instruction stream:
 //!
-//! 1. **Forward**: for each microbatch, run this partition's nodes in
-//!    topological order. Cross-partition inputs are received (tag =
-//!    edge x microbatch); produced outputs that feed remote partitions are
-//!    sent eagerly. The first partition materializes `x` from the dataset,
-//!    the last one runs the loss head (labels materialized locally — the
-//!    dataset is index-deterministic).
-//! 2. **Backward**: reverse order. A node's output-gradient is the sum of
-//!    its local consumers' input-gradients and the partial errors received
-//!    from remote consumers (the paper's *grad layer* per recv, Eq. 5-6).
-//!    Parameter gradients accumulate across microbatches; input gradients
-//!    propagate locally or are sent as partial errors.
-//! 3. **Update**: average gradients over microbatches, allreduce across
-//!    replicas (per-partition communicator, fused), SGD+momentum step.
+//! - `FwdCompute {node, mb}` — run the node's forward on microbatch `mb`.
+//!   Inputs come from the stash (local producers computed earlier, remote
+//!   ones received). The first partition materializes `x` from the
+//!   dataset; the last one runs the loss head (labels materialized
+//!   locally — the dataset is index-deterministic, so no label shipping
+//!   is needed).
+//! - `Send/RecvActivation` — boundary/skip-edge traffic (tag =
+//!   edge x microbatch), ordered by the IR's deadlock-safe linearization
+//!   (paper §6.3).
+//! - `BwdCompute {node, mb}` — a node's output-gradient is the sum of its
+//!   local consumers' input-gradients and the partial errors received from
+//!   remote consumers (the paper's *grad layer*, Eq. 5-6), all accumulated
+//!   into the per-microbatch `gout` map *in instruction order*. Parameter
+//!   gradients accumulate across microbatches in the order the schedule
+//!   runs backwards — which is why GPipe reproduces the original fill/
+//!   drain loop bitwise.
+//! - `Send/RecvError` — partial-error traffic, mirrored ordering.
+//! - `DropStash {mb}` — the microbatch's activations and gradient
+//!   accumulators are dead; under 1F1B this is what bounds live stashes
+//!   to the pipeline depth instead of `num_microbatches`.
+//! - `AllreduceGrads` / `OptStep` — microbatch-average, data-parallel
+//!   allreduce (per-partition communicator, fused), SGD+momentum step.
 //!
-//! Because every rank runs the same node-level math as sequential execution
-//! (partitioning only moves ops, never changes them), model-parallel
-//! training is *bitwise* equivalent to sequential — asserted by
-//! `rust/tests/equivalence.rs`, the machine check of the paper's §6.1
-//! "sequential semantics" guarantee.
+//! Because every rank runs the same node-level math as sequential
+//! execution (the schedule only moves ops, never changes them), training
+//! under either generator is *bitwise* equivalent to sequential execution
+//! under the same schedule kind — asserted by `rust/tests/equivalence.rs`,
+//! the machine check of the paper's §6.1 "sequential semantics" guarantee.
 
 pub mod checkpoint;
 mod optimizer;
@@ -39,17 +48,21 @@ use crate::graph::{LayerKind, ModelGraph, NodeId};
 use crate::partition::Partitioning;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
+use crate::schedule::{Instr, Program, ScheduleKind};
 use crate::tensor::{Shape, Tensor};
 use std::collections::HashMap;
 
 /// Engine configuration (per run).
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
-    /// Microbatch size — must match the `n` the artifacts were compiled for.
+    /// Microbatch size — must match the `n` the artifacts are built for.
     pub microbatch: usize,
     /// Microbatches per step (pipeline depth). Per-replica batch =
     /// microbatch * num_microbatches.
     pub num_microbatches: usize,
+    /// Pipeline schedule interpreted by the Trainer (and, identically, by
+    /// the simulator and the memory model).
+    pub schedule: ScheduleKind,
     pub lr: f32,
     pub momentum: f32,
     pub seed: u64,
@@ -63,6 +76,7 @@ impl Default for EngineConfig {
         EngineConfig {
             microbatch: 8,
             num_microbatches: 1,
+            schedule: ScheduleKind::GPipe,
             lr: 0.01,
             momentum: 0.9,
             seed: 42,
@@ -81,6 +95,9 @@ pub struct StepMetrics {
     pub step_secs: f64,
 }
 
+/// The forward head captured at the loss node: (loss, glogits, labels).
+type Head = (f32, Tensor, Vec<usize>);
+
 /// Per-rank trainer state.
 pub struct Trainer<'a> {
     pub g: &'a ModelGraph,
@@ -92,8 +109,10 @@ pub struct Trainer<'a> {
     /// node -> parameter tensors (only for nodes on this partition).
     pub params: HashMap<NodeId, Vec<Tensor>>,
     opt: SgdMomentum,
-    /// Nodes of this partition in topological order.
-    my_nodes: Vec<NodeId>,
+    /// The compiled per-rank schedule program this trainer interprets.
+    program: Program,
+    /// Forward-only program for evaluation.
+    eval_program: Program,
     /// Deterministic order of (node, slot) for fused allreduce packing.
     param_order: Vec<(NodeId, usize)>,
 }
@@ -159,7 +178,26 @@ impl<'a> Trainer<'a> {
             ce.bcast_param(t, i);
         }
         let opt = SgdMomentum::new(cfg.lr, cfg.momentum, &param_order, &params);
-        Ok(Trainer { g, pt, cfg, ce, rt, data, params, opt, my_nodes, param_order })
+        let program = Program::compile(g, pt, cfg.num_microbatches, cfg.schedule);
+        let eval_program = Program::forward_only(pt);
+        Ok(Trainer {
+            g,
+            pt,
+            cfg,
+            ce,
+            rt,
+            data,
+            params,
+            opt,
+            program,
+            eval_program,
+            param_order,
+        })
+    }
+
+    /// The compiled schedule program (shared shape with sim/mem consumers).
+    pub fn program(&self) -> &Program {
+        &self.program
     }
 
     /// Batch size processed per step per replica.
@@ -183,236 +221,196 @@ impl<'a> Trainer<'a> {
         self.ce.partition == self.pt.num_partitions - 1
     }
 
-    /// Forward one microbatch; fills `acts` (node -> output) and returns
-    /// (loss, glogits, labels) on the last partition.
-    fn forward_microbatch(
+    /// Interpret `FwdCompute {node, mb}`: run one node's forward, stash the
+    /// output under the node id. Returns the head at the loss node.
+    fn exec_fwd_node(
         &self,
         step: u64,
         mb: usize,
         test: bool,
+        nid: NodeId,
         acts: &mut HashMap<NodeId, Tensor>,
-    ) -> anyhow::Result<Option<(f32, Tensor, Vec<usize>)>> {
+    ) -> anyhow::Result<Option<Head>> {
         let n_mb = self.cfg.microbatch;
         let base = self.sample_base(step, mb);
+        let node = &self.g.nodes[nid];
         let mut head = None;
-        for &nid in &self.my_nodes {
-            let node = &self.g.nodes[nid];
-            // Phase 1 — satisfy remote inputs: receive and stash under the
-            // *producer* id (the backward pass recomputes from these — the
-            // state the paper's grad layers close over).
-            for (slot, &src) in node.inputs.iter().enumerate() {
-                if self.pt.assign[src] != self.ce.partition {
-                    let e = self
-                        .pt
-                        .edges
-                        .iter()
-                        .find(|e| e.src_node == src && e.dst_node == nid)
-                        .unwrap_or_else(|| panic!("missing edge {src}->{nid} slot {slot}"));
-                    // Always consume the message (the producer sends one
-                    // per edge); duplicates of an already-stashed producer
-                    // are identical payloads.
-                    let t = self.ce.recv_activation(e.src_part, e.id, mb);
-                    acts.insert(src, t);
-                }
+        // Borrow inputs from the stash (no clones on the hot path; every
+        // producer — local or received — is in `acts` by schedule order).
+        let inputs: Vec<&Tensor> = node.inputs.iter().map(|src| &acts[src]).collect();
+        let out = match &node.kind {
+            LayerKind::Input => {
+                debug_assert!(self.is_first_partition() || !node.inputs.is_empty());
+                let (x, _, _) = if test {
+                    self.data.test_batch(base, n_mb)
+                } else {
+                    self.data.batch(base, n_mb)
+                };
+                x
             }
-            // Phase 2 — borrow inputs from the stash (no clones on the hot
-            // path; every producer, local or received, is in `acts` now).
-            let inputs: Vec<&Tensor> = node.inputs.iter().map(|src| &acts[src]).collect();
-            let out = match &node.kind {
-                LayerKind::Input => {
-                    debug_assert!(self.is_first_partition() || !node.inputs.is_empty());
-                    let (x, _, _) = if test {
-                        self.data.test_batch(base, n_mb)
-                    } else {
-                        self.data.batch(base, n_mb)
-                    };
-                    x
-                }
-                LayerKind::Add => {
-                    let mut s = inputs[0].clone();
-                    s.add_assign(&inputs[1]);
-                    s
-                }
-                LayerKind::Flatten => {
-                    let t = inputs[0];
-                    let flat: usize = t.shape.dims()[1..].iter().product();
-                    Tensor::new(Shape::new(&[t.batch(), flat]), t.data.clone())
-                }
-                LayerKind::SoftmaxXent => {
-                    let (_, y, labels) = if test {
-                        self.data.test_batch(base, n_mb)
-                    } else {
-                        self.data.batch(base, n_mb)
-                    };
-                    let art = crate::graph::artifact::node_artifact(self.g, nid, n_mb)
-                        .expect("loss artifact");
-                    let outs = self.rt.exec(&art.fwd, &[inputs[0], &y])?;
-                    let loss = outs[0].data[0];
-                    head = Some((loss, outs[1].clone(), labels));
-                    // The loss node's "activation" is its glogits (only used
-                    // locally in backward).
-                    outs[1].clone()
-                }
-                _ => {
-                    let art = crate::graph::artifact::node_artifact(self.g, nid, n_mb)
-                        .expect("artifact for compute node");
-                    // Python signature: fwd(x, params...).
-                    let mut args: Vec<&Tensor> = vec![inputs[0]];
-                    let slots = self.params.get(&nid);
-                    if let Some(slots) = slots {
-                        args.extend(slots.iter());
-                    }
-                    let outs = self.rt.exec(&art.fwd, &args)?;
-                    outs.into_iter().next().unwrap()
-                }
-            };
-            // Eager sends on all out-edges (consumer-node order — matches
-            // the deadlock-free schedule; hfmpi buffers, so never blocks).
-            let mut out_edges = self.pt.out_edges_of_node(nid);
-            out_edges.sort_by_key(|e| (e.dst_node, e.src_node));
-            for e in out_edges {
-                self.ce.send_activation(&out, e.dst_part, e.id, mb);
+            LayerKind::Add => {
+                let mut s = inputs[0].clone();
+                s.add_assign(inputs[1]);
+                s
             }
-            acts.insert(nid, out);
-        }
+            LayerKind::Flatten => {
+                let t = inputs[0];
+                let flat: usize = t.shape.dims()[1..].iter().product();
+                Tensor::new(Shape::new(&[t.batch(), flat]), t.data.clone())
+            }
+            LayerKind::SoftmaxXent => {
+                let (_, y, labels) = if test {
+                    self.data.test_batch(base, n_mb)
+                } else {
+                    self.data.batch(base, n_mb)
+                };
+                let art = crate::graph::artifact::node_artifact(self.g, nid, n_mb)
+                    .expect("loss artifact");
+                let outs = self.rt.exec(&art.fwd, &[inputs[0], &y])?;
+                let loss = outs[0].data[0];
+                head = Some((loss, outs[1].clone(), labels));
+                // The loss node's "activation" is its glogits (only used
+                // locally in backward).
+                outs[1].clone()
+            }
+            _ => {
+                let art = crate::graph::artifact::node_artifact(self.g, nid, n_mb)
+                    .expect("artifact for compute node");
+                // Primitive signature: fwd(x, params...).
+                let mut args: Vec<&Tensor> = vec![inputs[0]];
+                if let Some(slots) = self.params.get(&nid) {
+                    args.extend(slots.iter());
+                }
+                let outs = self.rt.exec(&art.fwd, &args)?;
+                outs.into_iter().next().unwrap()
+            }
+        };
+        acts.insert(nid, out);
         Ok(head)
     }
 
-    /// Backward one microbatch given the forward stash; accumulates
-    /// parameter gradients into `grads`.
-    fn backward_microbatch(
+    /// Interpret `BwdCompute {node, mb}`: assemble the node's
+    /// output-gradient (local consumers + received errors, already summed
+    /// into `gout` in instruction order), compute input and parameter
+    /// gradients, route local input-gradients into `gout` and remote ones
+    /// into `pending_err` for the following `SendError` ops.
+    #[allow(clippy::too_many_arguments)]
+    fn exec_bwd_node(
         &self,
         mb: usize,
+        nid: NodeId,
         acts: &HashMap<NodeId, Tensor>,
         glogits: Option<&Tensor>,
+        gout: &mut HashMap<NodeId, Tensor>,
         grads: &mut HashMap<NodeId, Vec<Tensor>>,
+        pending_err: &mut HashMap<(usize, usize), Tensor>,
     ) -> anyhow::Result<()> {
         let n_mb = self.cfg.microbatch;
-        // Output-gradient accumulator per node.
-        let mut gout: HashMap<NodeId, Tensor> = HashMap::new();
-        for &nid in self.my_nodes.iter().rev() {
-            let node = &self.g.nodes[nid];
-            if matches!(node.kind, LayerKind::Input) {
-                continue; // data has no gradient
+        let node = &self.g.nodes[nid];
+        debug_assert!(!matches!(node.kind, LayerKind::Input), "Input has no backward");
+        // 1) dL/d(out of nid): accumulated by earlier BwdCompute (local
+        // consumers) and RecvError (remote consumers) instructions.
+        let gy = match &node.kind {
+            LayerKind::SoftmaxXent => None, // loss root: uses fwd glogits
+            _ => gout.remove(&nid),
+        };
+        if !matches!(node.kind, LayerKind::SoftmaxXent) && gy.is_none() {
+            // Dead-end node (shouldn't happen in validated graphs).
+            return Ok(());
+        }
+        // 2) Input gradients (+ parameter gradients).
+        let gins: Vec<(NodeId, Tensor)> = match &node.kind {
+            LayerKind::SoftmaxXent => {
+                let g = glogits.expect("loss backward needs fwd glogits").clone();
+                vec![(node.inputs[0], g)]
             }
-            // 1) Assemble dL/d(out of nid).
-            let mut gy = match &node.kind {
-                LayerKind::SoftmaxXent => {
-                    // Loss root: gradient w.r.t. logits was computed in fwd.
-                    // Handled below as the gradient *to its input*; gy unused.
-                    None
-                }
-                _ => gout.remove(&nid),
-            };
-            // Remote consumers' partial errors (grad-layer recv), in the
-            // mirror of the forward send order.
-            let mut out_edges = self.pt.out_edges_of_node(nid);
-            out_edges.sort_by_key(|e| (std::cmp::Reverse(e.dst_node), e.src_node));
-            for e in out_edges {
-                let err = self.ce.recv_error(e.dst_part, e.id, mb);
-                match &mut gy {
-                    Some(t) => t.add_assign(&err),
-                    None => gy = Some(err),
-                }
+            LayerKind::Add => {
+                let gy = gy.unwrap();
+                vec![(node.inputs[0], gy.clone()), (node.inputs[1], gy)]
             }
-            if !matches!(node.kind, LayerKind::SoftmaxXent) && gy.is_none() {
-                // Dead-end node (shouldn't happen in validated graphs).
-                continue;
+            LayerKind::Flatten => {
+                let gy = gy.unwrap();
+                let src = node.inputs[0];
+                let mut dims = vec![gy.batch()];
+                dims.extend_from_slice(&self.g.nodes[src].out_shape);
+                vec![(src, Tensor::new(Shape(dims), gy.data))]
             }
-            // 2) Compute input gradients (+ parameter gradients).
-            let gins: Vec<(NodeId, Tensor)> = match &node.kind {
-                LayerKind::SoftmaxXent => {
-                    let g = glogits.expect("loss backward needs fwd glogits").clone();
-                    vec![(node.inputs[0], g)]
+            kind => {
+                let gy = gy.unwrap();
+                let art = crate::graph::artifact::node_artifact(self.g, nid, n_mb)
+                    .expect("artifact for compute node");
+                let bwd = art.bwd.as_ref().expect("non-loss node has bwd");
+                // Primitive signatures (model.instance):
+                //   conv/bn/dense: bwd(x, <param subset>, gy)
+                //   relu/pool:     bwd(x, gy)
+                //   gap:           bwd(gy)        (x only matters for shape)
+                let slots = self.params.get(&nid);
+                let mut args: Vec<&Tensor> = vec![];
+                if !matches!(kind, LayerKind::GlobalAvgPool) {
+                    args.push(self.node_input_act(nid, acts));
                 }
-                LayerKind::Add => {
-                    let gy = gy.unwrap();
-                    vec![(node.inputs[0], gy.clone()), (node.inputs[1], gy)]
-                }
-                LayerKind::Flatten => {
-                    let gy = gy.unwrap();
-                    let src = node.inputs[0];
-                    let mut dims = vec![gy.batch()];
-                    dims.extend_from_slice(&self.g.nodes[src].out_shape);
-                    vec![(src, Tensor::new(Shape(dims), gy.data))]
-                }
-                kind => {
-                    let gy = gy.unwrap();
-                    let art = crate::graph::artifact::node_artifact(self.g, nid, n_mb)
-                        .expect("artifact for compute node");
-                    let bwd = art.bwd.as_ref().expect("non-loss node has bwd");
-                    // Python signatures (model.instance):
-                    //   conv/bn/dense: bwd(x, <param subset>, gy)
-                    //   relu/pool:     bwd(x, gy)
-                    //   gap:           bwd(gy)        (x only matters for shape)
-                    let slots = self.params.get(&nid);
-                    let mut args: Vec<&Tensor> = vec![];
-                    if !matches!(kind, LayerKind::GlobalAvgPool) {
-                        args.push(self.node_input_act(nid, acts));
+                match kind {
+                    LayerKind::Conv3x3 { .. } | LayerKind::Conv1x1 { .. } => {
+                        args.push(&slots.unwrap()[0]); // w
                     }
-                    match kind {
-                        LayerKind::Conv3x3 { .. } | LayerKind::Conv1x1 { .. } => {
-                            args.push(&slots.unwrap()[0]); // w
-                        }
-                        LayerKind::ConvBnRelu { .. } => {
-                            let s = slots.unwrap();
-                            args.extend([&s[0], &s[1], &s[2]]); // w, gamma, beta
-                        }
-                        LayerKind::BatchNorm => {
-                            args.push(&slots.unwrap()[0]); // gamma
-                        }
-                        LayerKind::Dense { .. } => {
-                            args.push(&slots.unwrap()[0]); // w
-                        }
-                        LayerKind::DenseRelu { .. } => {
-                            let s = slots.unwrap();
-                            args.extend([&s[0], &s[1]]); // w, b
-                        }
-                        _ => {}
+                    LayerKind::ConvBnRelu { .. } => {
+                        let s = slots.unwrap();
+                        args.extend([&s[0], &s[1], &s[2]]); // w, gamma, beta
                     }
-                    args.push(&gy);
-                    let mut outs = self.rt.exec(bwd, &args)?;
-                    // outs[0] = gx; outs[1..] = parameter gradients in the
-                    // same slot order as node.params.
-                    let gx = outs.remove(0);
-                    if !outs.is_empty() {
-                        let slot_grads = grads.entry(nid).or_insert_with(|| {
-                            outs.iter()
-                                .map(|t| Tensor::zeros(t.shape.dims()))
-                                .collect()
-                        });
-                        for (acc, g) in slot_grads.iter_mut().zip(outs.iter()) {
-                            acc.add_assign(g);
-                        }
+                    LayerKind::BatchNorm => {
+                        args.push(&slots.unwrap()[0]); // gamma
                     }
-                    vec![(node.inputs[0], gx)]
+                    LayerKind::Dense { .. } => {
+                        args.push(&slots.unwrap()[0]); // w
+                    }
+                    LayerKind::DenseRelu { .. } => {
+                        let s = slots.unwrap();
+                        args.extend([&s[0], &s[1]]); // w, b
+                    }
+                    _ => {}
                 }
-            };
-            // 3) Route input gradients: local accumulate or remote send.
-            for (src, gin) in gins {
-                if self.pt.assign[src] == self.ce.partition {
-                    match gout.get_mut(&src) {
-                        Some(t) => t.add_assign(&gin),
-                        None => {
-                            gout.insert(src, gin);
-                        }
+                args.push(&gy);
+                let mut outs = self.rt.exec(bwd, &args)?;
+                // outs[0] = gx; outs[1..] = parameter gradients in the
+                // same slot order as node.params.
+                let gx = outs.remove(0);
+                if !outs.is_empty() {
+                    let slot_grads = grads.entry(nid).or_insert_with(|| {
+                        outs.iter()
+                            .map(|t| Tensor::zeros(t.shape.dims()))
+                            .collect()
+                    });
+                    for (acc, g) in slot_grads.iter_mut().zip(outs.iter()) {
+                        acc.add_assign(g);
                     }
-                } else {
-                    let e = self
-                        .pt
-                        .edges
-                        .iter()
-                        .find(|e| e.src_node == src && e.dst_node == nid)
-                        .expect("cross edge for backward send");
-                    self.ce.send_error(&gin, e.src_part, e.id, mb);
                 }
+                vec![(node.inputs[0], gx)]
+            }
+        };
+        // 3) Route input gradients: local accumulate or park for SendError.
+        for (src, gin) in gins {
+            if self.pt.assign[src] == self.ce.partition {
+                match gout.get_mut(&src) {
+                    Some(t) => t.add_assign(&gin),
+                    None => {
+                        gout.insert(src, gin);
+                    }
+                }
+            } else {
+                let e = self
+                    .pt
+                    .edges
+                    .iter()
+                    .find(|e| e.src_node == src && e.dst_node == nid)
+                    .expect("cross edge for backward send");
+                pending_err.insert((e.id, mb), gin);
             }
         }
         Ok(())
     }
 
     /// The stashed input activation of node `nid` (its first input's
-    /// output). For cross-partition inputs the forward pass stashed the
+    /// output). For cross-partition inputs the schedule stashed the
     /// received tensor under the producer id.
     fn node_input_act<'b>(
         &self,
@@ -423,67 +421,107 @@ impl<'a> Trainer<'a> {
         acts.get(&src).expect("input activation stashed")
     }
 
-    /// One full training step (all microbatches + update). Returns the
-    /// replica-local metrics (meaningful on the last partition).
+    /// One full training step: interpret this rank's schedule program.
+    /// Returns the replica-local metrics (meaningful on the last
+    /// partition).
     pub fn train_step(&mut self, step: u64) -> anyhow::Result<StepMetrics> {
         let t0 = std::time::Instant::now();
         if let Some(s) = &self.cfg.lr_schedule {
             self.opt.lr = s.at(step);
         }
         let m = self.cfg.num_microbatches;
-        let mut stashes: Vec<HashMap<NodeId, Tensor>> = Vec::with_capacity(m);
-        let mut heads: Vec<Option<(f32, Tensor, Vec<usize>)>> = Vec::with_capacity(m);
-
-        // ---- forward fill ----
-        for mb in 0..m {
-            let mut acts = HashMap::new();
-            heads.push(self.forward_microbatch(step, mb, false, &mut acts)?);
-            stashes.push(acts);
-        }
-
-        // ---- backward drain (reverse microbatch order) ----
+        let mut stashes: Vec<HashMap<NodeId, Tensor>> = (0..m).map(|_| HashMap::new()).collect();
+        let mut gouts: Vec<HashMap<NodeId, Tensor>> = (0..m).map(|_| HashMap::new()).collect();
+        let mut heads: Vec<Option<Head>> = vec![None; m];
         let mut grads: HashMap<NodeId, Vec<Tensor>> = HashMap::new();
-        for mb in (0..m).rev() {
-            let glogits = heads[mb].as_ref().map(|(_, g, _)| g);
-            // Forward-received activations for cross inputs are needed in
-            // backward too: restash them (they live in stashes[mb] already
-            // because forward inserted received tensors under producer ids
-            // only when consumed... see forward_microbatch note).
-            self.backward_microbatch(mb, &stashes[mb], glogits, &mut grads)?;
-        }
+        let mut pending_err: HashMap<(usize, usize), Tensor> = HashMap::new();
 
-        // ---- average over microbatches ----
-        let inv_m = 1.0 / m as f32;
-        for slots in grads.values_mut() {
-            for t in slots.iter_mut() {
-                t.scale(inv_m);
-            }
-        }
-
-        // ---- data-parallel allreduce (per-partition communicator) ----
-        let mut flat: Vec<&mut Tensor> = vec![];
-        let order = self.param_order.clone();
-        {
-            // Deterministic packing order across replicas.
-            let mut by_node: HashMap<NodeId, &mut Vec<Tensor>> =
-                grads.iter_mut().map(|(k, v)| (*k, v)).collect();
-            let mut staged: Vec<(usize, &mut Tensor)> = vec![];
-            for (i, (n, si)) in order.iter().enumerate() {
-                if let Some(slots) = by_node.remove(n) {
-                    for (j, t) in slots.iter_mut().enumerate() {
-                        staged.push((i * 16 + j, t));
+        // Iterate by index: `Instr` is `Copy`, so this avoids cloning the
+        // instruction stream every step while keeping `self` free for the
+        // mutating epilogue ops.
+        let part = self.ce.partition;
+        for i in 0..self.program.rank(part).len() {
+            let instr = self.program.rank(part)[i];
+            match instr {
+                Instr::FwdCompute { node, mb } => {
+                    if let Some(h) = self.exec_fwd_node(step, mb, false, node, &mut stashes[mb])? {
+                        heads[mb] = Some(h);
                     }
-                    let _ = si;
+                }
+                Instr::SendActivation { edge, peer, mb } => {
+                    let e = &self.pt.edges[edge];
+                    let t = &stashes[mb][&e.src_node];
+                    self.ce.send_activation(t, peer, edge, mb);
+                }
+                Instr::RecvActivation { edge, peer, mb } => {
+                    let e = &self.pt.edges[edge];
+                    let t = self.ce.recv_activation(peer, edge, mb);
+                    stashes[mb].insert(e.src_node, t);
+                }
+                Instr::BwdCompute { node, mb } => {
+                    let glogits: Option<&Tensor> = heads[mb].as_ref().map(|(_, g, _)| g);
+                    self.exec_bwd_node(
+                        mb,
+                        node,
+                        &stashes[mb],
+                        glogits,
+                        &mut gouts[mb],
+                        &mut grads,
+                        &mut pending_err,
+                    )?;
+                }
+                Instr::SendError { edge, peer, mb } => {
+                    let t = pending_err
+                        .remove(&(edge, mb))
+                        .expect("backward computed the partial error before its send");
+                    self.ce.send_error(&t, peer, edge, mb);
+                }
+                Instr::RecvError { edge, peer, mb } => {
+                    let e = &self.pt.edges[edge];
+                    let err = self.ce.recv_error(peer, edge, mb);
+                    match gouts[mb].get_mut(&e.src_node) {
+                        Some(t) => t.add_assign(&err),
+                        None => {
+                            gouts[mb].insert(e.src_node, err);
+                        }
+                    }
+                }
+                Instr::DropStash { mb } => {
+                    // End of the microbatch's live interval: release the
+                    // activation stash and gradient accumulators (the 1F1B
+                    // memory bound is realized here, not just modeled).
+                    stashes[mb] = HashMap::new();
+                    gouts[mb] = HashMap::new();
+                }
+                Instr::AllreduceGrads => {
+                    // Average over microbatches, then data-parallel
+                    // allreduce (per-partition communicator, fused).
+                    let inv_m = 1.0 / m as f32;
+                    for slots in grads.values_mut() {
+                        for t in slots.iter_mut() {
+                            t.scale(inv_m);
+                        }
+                    }
+                    // Deterministic packing order across replicas.
+                    let mut by_node: HashMap<NodeId, &mut Vec<Tensor>> =
+                        grads.iter_mut().map(|(k, v)| (*k, v)).collect();
+                    let mut staged: Vec<(usize, &mut Tensor)> = vec![];
+                    for (i, (n, _si)) in self.param_order.iter().enumerate() {
+                        if let Some(slots) = by_node.remove(n) {
+                            for (j, t) in slots.iter_mut().enumerate() {
+                                staged.push((i * 16 + j, t));
+                            }
+                        }
+                    }
+                    staged.sort_by_key(|(k, _)| *k);
+                    let mut flat: Vec<&mut Tensor> = staged.into_iter().map(|(_, t)| t).collect();
+                    self.ce.allreduce_grads(&mut flat)?;
+                }
+                Instr::OptStep => {
+                    self.opt.step(&self.param_order, &mut self.params, &grads);
                 }
             }
-            staged.sort_by_key(|(k, _)| *k);
-            flat = staged.into_iter().map(|(_, t)| t).collect();
         }
-        self.ce.allreduce_grads(&mut flat)?;
-        drop(flat);
-
-        // ---- optimizer ----
-        self.opt.step(&order, &mut self.params, &grads);
 
         // ---- metrics (last partition) ----
         let mut metrics = StepMetrics {
@@ -511,15 +549,36 @@ impl<'a> Trainer<'a> {
         Ok(metrics)
     }
 
-    /// Forward-only evaluation over `batches` test microbatches.
+    /// Forward-only evaluation over `batches` test microbatches —
+    /// interprets the forward-only program per batch.
     /// Returns (loss, accuracy) on the last partition.
     pub fn evaluate(&mut self, batches: usize) -> anyhow::Result<StepMetrics> {
         let mut loss_sum = 0.0f32;
         let (mut correct, mut total) = (0usize, 0usize);
+        let instrs: Vec<Instr> = self.eval_program.rank(self.ce.partition).to_vec();
         for b in 0..batches {
-            let mut acts = HashMap::new();
-            // Use the test index space; spread replicas across it.
-            let head = self.forward_microbatch(b as u64, 0, true, &mut acts)?;
+            let mut acts: HashMap<NodeId, Tensor> = HashMap::new();
+            let mut head = None;
+            for instr in &instrs {
+                match *instr {
+                    Instr::FwdCompute { node, mb } => {
+                        if let Some(h) = self.exec_fwd_node(b as u64, mb, true, node, &mut acts)? {
+                            head = Some(h);
+                        }
+                    }
+                    Instr::SendActivation { edge, peer, mb } => {
+                        let e = &self.pt.edges[edge];
+                        let t = &acts[&e.src_node];
+                        self.ce.send_activation(t, peer, edge, mb);
+                    }
+                    Instr::RecvActivation { edge, peer, mb } => {
+                        let e = &self.pt.edges[edge];
+                        let t = self.ce.recv_activation(peer, edge, mb);
+                        acts.insert(e.src_node, t);
+                    }
+                    _ => unreachable!("forward-only program"),
+                }
+            }
             if let Some((loss, glogits, labels)) = head {
                 loss_sum += loss;
                 let (c, t) = accuracy_from_glogits(&glogits, &labels, self.cfg.microbatch);
@@ -557,7 +616,7 @@ impl<'a> Trainer<'a> {
     /// Names of the artifacts this partition executes (for warmup).
     pub fn artifact_names(&self) -> Vec<String> {
         let mut v = vec![];
-        for &n in &self.my_nodes {
+        for &n in &self.pt.parts[self.ce.partition] {
             if let Some(a) =
                 crate::graph::artifact::node_artifact(self.g, n, self.cfg.microbatch)
             {

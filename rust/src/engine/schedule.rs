@@ -8,9 +8,13 @@
 pub enum LrSchedule {
     Constant(f32),
     /// Piecewise constant: starts at `base`, multiplied by `factor` at
-    /// each boundary step. The Keras CIFAR schedule is
-    /// `keras_cifar(base, steps_per_epoch)`.
+    /// each boundary step.
     StepDecay { base: f32, boundaries: Vec<u64>, factor: f32 },
+    /// Piecewise constant with a *per-boundary* factor: at each
+    /// `(boundary, factor)` the current lr is multiplied by that factor.
+    /// This is the shape of the Keras cifar10_resnet schedule, whose final
+    /// drop (x0.5 at epoch 180) differs from the earlier x0.1 drops.
+    MultiStepDecay { base: f32, drops: Vec<(u64, f32)> },
     /// Linear warmup over `warmup` steps to `base`, then constant — the
     /// standard large-batch data-parallel recipe (Goyal et al., cited by
     /// the paper as DP practice).
@@ -19,18 +23,17 @@ pub enum LrSchedule {
 
 impl LrSchedule {
     /// The Keras cifar10_resnet schedule the paper trains with:
-    /// 1e-3, x0.1 at epoch 80, x0.1 at 120, x0.1 at 160, x0.5 at 180 —
-    /// approximated as x0.1 boundaries (the paper's accuracy plateaus come
-    /// from the first two drops).
+    /// 1e-3, x0.1 at epoch 80, x0.1 at 120, x0.1 at 160, and the final
+    /// x0.5 at 180 (the reference's `lr *= 0.5e-3` tail).
     pub fn keras_cifar(base: f32, steps_per_epoch: u64) -> LrSchedule {
-        LrSchedule::StepDecay {
+        LrSchedule::MultiStepDecay {
             base,
-            boundaries: vec![
-                80 * steps_per_epoch,
-                120 * steps_per_epoch,
-                160 * steps_per_epoch,
+            drops: vec![
+                (80 * steps_per_epoch, 0.1),
+                (120 * steps_per_epoch, 0.1),
+                (160 * steps_per_epoch, 0.1),
+                (180 * steps_per_epoch, 0.5),
             ],
-            factor: 0.1,
         }
     }
 
@@ -40,6 +43,15 @@ impl LrSchedule {
             LrSchedule::StepDecay { base, boundaries, factor } => {
                 let drops = boundaries.iter().filter(|&&b| step >= b).count() as i32;
                 base * factor.powi(drops)
+            }
+            LrSchedule::MultiStepDecay { base, drops } => {
+                let mut lr = *base;
+                for &(b, f) in drops {
+                    if step >= b {
+                        lr *= f;
+                    }
+                }
+                lr
             }
             LrSchedule::Warmup { base, warmup } => {
                 if step >= *warmup || *warmup == 0 {
@@ -78,6 +90,21 @@ mod tests {
         assert_eq!(s.at(0), 1e-3);
         assert!((s.at(80 * 100) - 1e-4).abs() < 1e-9);
         assert!((s.at(120 * 100) - 1e-5).abs() < 1e-10);
+        assert!((s.at(160 * 100) - 1e-6).abs() < 1e-11);
+        // The fourth drop: x0.5 at epoch 180 (0.5e-3 of base in total).
+        assert!((s.at(180 * 100) - 5e-7).abs() < 1e-12);
+        assert!((s.at(179 * 100 + 99) - 1e-6).abs() < 1e-11);
+    }
+
+    #[test]
+    fn multi_step_factors_compose_in_order() {
+        let s = LrSchedule::MultiStepDecay {
+            base: 1.0,
+            drops: vec![(10, 0.1), (20, 0.5)],
+        };
+        assert_eq!(s.at(9), 1.0);
+        assert!((s.at(15) - 0.1).abs() < 1e-7);
+        assert!((s.at(25) - 0.05).abs() < 1e-7);
     }
 
     #[test]

@@ -14,8 +14,8 @@
 //! `allgather`, `split`, `dup`).
 //!
 //! ```no_run
-//! // (no_run: doctest binaries miss the xla rpath; the same code runs
-//! // as `hfmpi::tests::allreduce_*`.)
+//! // (no_run: kept as documentation; the same code runs for real as
+//! // `hfmpi::tests::allreduce_*`.)
 //! use hyparflow::hfmpi::World;
 //! use hyparflow::tensor::Tensor;
 //! let outs = World::run(4, |comm| {

@@ -1,37 +1,75 @@
-//! # HyPar-Flow (Rust + JAX + Pallas reproduction)
+//! # HyPar-Flow (Rust reproduction)
 //!
 //! A user-transparent framework for **model-parallel**, **data-parallel** and
 //! **hybrid-parallel** DNN training, reproducing *HyPar-Flow: Exploiting MPI
 //! and Keras for Scalable Hybrid-Parallel DNN Training using TensorFlow*
 //! (Awan et al., 2019).
 //!
-//! The stack has three layers:
-//! - **L3 (this crate)** — the coordinator: model graph, partitioner
-//!   (Model Generator + Load Balancer), distributed trainer with grad-layer
-//!   back-propagation, communication engine over an in-process MPI fabric,
-//!   and a calibrated cluster simulator for multi-node scaling studies.
-//! - **L2 (python/compile/model.py)** — JAX layer primitives (fwd + VJP),
-//!   AOT-lowered once to HLO text artifacts.
-//! - **L1 (python/compile/kernels/)** — the Pallas matmul hot-spot kernel the
-//!   L2 primitives call into.
+//! ## Architecture
 //!
-//! Python never runs at training time: the Rust hot path loads the HLO
-//! artifacts via the PJRT C API (`xla` crate) and executes them directly.
+//! The center of the design is the **pipeline-schedule IR**
+//! ([`schedule`]): a `(ModelGraph, Partitioning, num_microbatches)` triple
+//! compiles into an explicit per-rank instruction program (`FwdCompute`,
+//! `BwdCompute`, `Send`/`RecvActivation`, `Send`/`RecvError`, `DropStash`,
+//! `AllreduceGrads`, `OptStep`) under one of two generators — `gpipe`
+//! (the paper's §5.3 fill/drain) or `one_f1b` (PipeDream-style
+//! one-forward-one-backward with bounded in-flight microbatches). Message
+//! ops are linearized by the paper's §6.3 rank-sorted deadlock-free order
+//! (the same rule as [`partition::MsgSchedule`]). Three consumers interpret
+//! the *same* program object, so no subsystem re-derives its own ordering:
+//!
+//! - **Trainer** ([`engine`]) — executes the instruction stream against
+//!   the runtime and the communication engine; grad-layer partial-error
+//!   exchange (paper Eq. 5-6) and gradient accumulation happen in
+//!   instruction order, which is what makes model-parallel training
+//!   *bitwise* equal to sequential execution under the same schedule.
+//! - **Simulator** ([`sim`]) — replays the identical program on the
+//!   calibrated cost model as a discrete-event simulation, so simulated
+//!   pipeline bubbles are properties of the program the engine actually
+//!   runs.
+//! - **Memory model** ([`mem`]) — derives peak activation residency from
+//!   the program's stash live intervals: `m` resident microbatches under
+//!   GPipe, at most the pipeline depth under 1F1B (Fig 1 / Table 3
+//!   trainability under either schedule).
+//!
+//! Supporting layers:
+//!
+//! - [`graph`] — Keras-equivalent model DAG (zoo: VGG-16, ResNet-v1/v2 to
+//!   depth 5000), shape inference, analytic cost model.
+//! - [`partition`] — the Model Generator + Load Balancer (paper §6.1):
+//!   contiguous LPP partitioning, cross-edge enumeration (boundaries and
+//!   skips, Fig 6), and the rendezvous deadlock checker for the §6.3
+//!   message order.
+//! - [`comm`] / [`hfmpi`] — the Communication Engine over an in-process
+//!   MPI fabric (threads as ranks, buffered sends, communicator-per-
+//!   partition layout, Horovod-style tensor fusion). Tag space for
+//!   (edge x microbatch) message identities is budget-checked at
+//!   `CommEngine` construction.
+//! - [`runtime`] — the primitive executor. The AOT/PJRT path (HLO
+//!   artifacts compiled by `python/compile/aot.py` from the JAX/Pallas
+//!   primitives in `python/compile/`) is replaced in the offline build by
+//!   a native CPU executor implementing the identical primitive contract;
+//!   artifact names remain the interface.
+//! - [`data`], [`mem`], [`sim`], [`figures`] — synthetic CIFAR-like
+//!   dataset, memory model, calibrated cluster simulator, and the paper's
+//!   figure/table regeneration.
 //!
 //! Entry points: [`api::TrainConfig`] / [`api::fit`] (the `hf.fit()`
-//! equivalent), or the `hyparflow` CLI.
+//! equivalent — strategy, partitions, replicas, schedule), or the
+//! `hyparflow` CLI (`train`, `inspect`, `sim`, `mem`, `calibrate`).
 
 pub mod api;
 pub mod comm;
-pub mod figures;
 pub mod data;
 pub mod engine;
+pub mod figures;
 pub mod graph;
 pub mod hfmpi;
 pub mod mem;
 pub mod partition;
 pub mod rng;
 pub mod runtime;
+pub mod schedule;
 pub mod sim;
 pub mod tensor;
 pub mod util;

@@ -51,13 +51,15 @@ fn print_usage() {
          USAGE: hyparflow <train|inspect|sim|calibrate|mem> [--key value ...]\n\
          \n\
          train:    --model M --strategy seq|model|data|hybrid --partitions P\n\
-         \x20         --replicas R --steps N --mb B --num-mb K --lr F --seed S\n\
-         \x20         --log-every N --eval N --lpp a,b,c\n\
+         \x20         --replicas R --steps N --mb B --num-mb K --sched gpipe|1f1b\n\
+         \x20         --lr F --seed S --log-every N --eval N --lpp a,b,c\n\
          inspect:  --model M [--partitions P] [--emit-registry] [--mb B]\n\
          sim:      --model M --nodes N --ppn P --partitions K --replicas R\n\
-         \x20         --mb B --num-mb K --platform skylake|epyc [--calib FILE]\n\
+         \x20         --mb B --num-mb K --sched gpipe|1f1b\n\
+         \x20         --platform skylake|epyc [--calib FILE]\n\
          calibrate: [--out FILE] [--mb B]\n\
-         mem:      --model M [--image-size S] [--mb B] [--partitions P]"
+         mem:      --model M [--mb B] [--partitions P]\n\
+         \x20         [--num-mb K --sched gpipe|1f1b]  (schedule-aware report)"
     );
 }
 
@@ -116,6 +118,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         .steps(f.get("steps", 20)?)
         .microbatch(f.get("mb", 8)?)
         .num_microbatches(f.get("num-mb", 1)?)
+        .schedule(hyparflow::schedule::ScheduleKind::parse(&f.str("sched", "gpipe"))?)
         .lr(f.get("lr", 0.05)?)
         .seed(f.get("seed", 42)?)
         .eval_batches(f.get("eval", 0)?)
@@ -247,6 +250,7 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
     cfg.ppn = f.get("ppn", (partitions * replicas).div_ceil(nodes))?;
     cfg.microbatch = f.get("mb", 4)?;
     cfg.num_microbatches = f.get("num-mb", 8)?;
+    cfg.schedule = hyparflow::schedule::ScheduleKind::parse(&f.str("sched", "gpipe"))?;
     cfg.overlap_allreduce = !f.has("no-overlap");
     if let Some(path) = f.kv.get("calib") {
         let text = std::fs::read_to_string(path)?;
@@ -255,9 +259,9 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
     let r = simulate(&g, &pt, &cfg);
     println!(
         "sim {} on {} | nodes={nodes} ppn={} P={partitions} R={replicas} \
-         mb={}x{} (EBS {})",
+         mb={}x{} (EBS {}) sched={}",
         g.name, cfg.platform.name, cfg.ppn, cfg.microbatch, cfg.num_microbatches,
-        cfg.effective_batch()
+        cfg.effective_batch(), cfg.schedule.name()
     );
     println!(
         "  {:.1} img/s | step {:.4}s | compute {:.4}s bubble {:.4}s \
@@ -315,10 +319,48 @@ fn cmd_calibrate(args: &[String]) -> anyhow::Result<()> {
 
 fn cmd_mem(args: &[String]) -> anyhow::Result<()> {
     use hyparflow::mem;
+    use hyparflow::schedule::{Program, ScheduleKind};
     let f = Flags::parse(args)?;
+    anyhow::ensure!(
+        !f.kv.contains_key("image-size"),
+        "--image-size is not supported here: model resolution is part of the \
+         zoo variant (all CLI models are 32x32); the paper's image-size sweep \
+         is `figures::fig01_memory` / `cargo bench --bench fig01_memory`"
+    );
     let g = zoo::by_name(&f.str("model", "resnet1001"))?;
     let mb: usize = f.get("mb", 1)?;
     let parts: usize = f.get("partitions", 1)?;
+    let num_mb: usize = f.get("num-mb", 0)?;
+    if num_mb > 0 {
+        // Schedule-aware report: peak residency from the program's stash
+        // live intervals — the memory-model view of the shared IR.
+        // Default matches train/sim so unflagged cross-command comparisons
+        // describe the same schedule.
+        let sched = ScheduleKind::parse(&f.str("sched", "gpipe"))?;
+        let pt = Partitioning::auto(&g, parts.max(1))?;
+        let prog = Program::compile(&g, &pt, num_mb, sched);
+        let e = mem::scheduled_memory(&g, &pt, mb, &prog);
+        println!(
+            "{} mb={mb}x{num_mb} partitions={} sched={}: peak {:.2} GB \
+             (worst-rank resident microbatches: {})",
+            g.name,
+            pt.num_partitions,
+            sched.name(),
+            e.total_gb(),
+            prog.max_peak_resident_microbatches(),
+        );
+        for (name, budget) in [
+            ("P100-16GB", mem::budgets::PASCAL_GB),
+            ("V100-32GB", mem::budgets::VOLTA_GB),
+            ("Skylake-192GB", mem::budgets::SKYLAKE_GB),
+        ] {
+            println!(
+                "  {name}: {}",
+                if mem::trainable(&e, budget) { "trainable" } else { "NOT trainable" }
+            );
+        }
+        return Ok(());
+    }
     let e = if parts <= 1 {
         mem::sequential_memory(&g, mb)
     } else {

@@ -5,7 +5,11 @@
 //! - **weights + gradients + optimizer state**: 3x params (SGD-momentum
 //!   keeps one velocity per weight),
 //! - **activations**: every node's output is stashed for backward, per
-//!   microbatch in flight,
+//!   microbatch *resident*. Residency is not assumed: it is derived from
+//!   the schedule program's stash live intervals
+//!   ([`Program::peak_resident_microbatches`]) — `m` microbatches under
+//!   GPipe, at most the pipeline depth under 1F1B. This is the PipeDream
+//!   observation that makes deep pipelines affordable.
 //! - **workspace**: the im2col patch buffer of the largest conv (transient
 //!   but counted — it dominates for large images),
 //! - fixed framework overhead per process.
@@ -18,6 +22,7 @@
 
 use crate::graph::{LayerKind, ModelGraph};
 use crate::partition::Partitioning;
+use crate::schedule::Program;
 
 /// Device memory budgets from the paper's Fig 1 platforms.
 pub mod budgets {
@@ -63,13 +68,16 @@ impl MemEstimate {
 const FRAMEWORK_BYTES: u64 = 2 * 1024 * 1024 * 1024;
 
 /// Peak memory of partition `part` when training with `mb`-sized
-/// microbatches and `num_mb` microbatches in flight.
+/// microbatches and `resident_mb` microbatch stashes simultaneously live.
+/// Callers with a compiled schedule should use
+/// [`partition_memory_scheduled`], which derives residency from the
+/// program instead of assuming it.
 pub fn partition_memory(
     g: &ModelGraph,
     pt: &Partitioning,
     part: usize,
     mb: usize,
-    num_mb: usize,
+    resident_mb: usize,
 ) -> MemEstimate {
     let mut est = MemEstimate { framework: FRAMEWORK_BYTES, ..Default::default() };
     let mut max_patch: u64 = 0;
@@ -80,7 +88,7 @@ pub fn partition_memory(
         est.gradients += params;
         est.optimizer += params;
         let act = node.out_shape.iter().product::<usize>() as u64 * 4 * mb as u64;
-        est.activations += act * num_mb as u64;
+        est.activations += act * resident_mb as u64;
         // im2col workspace: patches are C*kh*kw per output position.
         if let LayerKind::Conv3x3 { .. } | LayerKind::ConvBnRelu { .. } = node.kind {
             let cin = g.nodes[node.inputs[0]].out_shape[0] as u64;
@@ -90,6 +98,34 @@ pub fn partition_memory(
     }
     est.workspace = max_patch;
     est
+}
+
+/// Peak memory of partition `part` under a compiled schedule program:
+/// activation residency comes from the program's own stash live intervals,
+/// so the same function reports GPipe's `m`-resident footprint and 1F1B's
+/// depth-bounded one. This is the memory model's view of the shared
+/// schedule IR (the Trainer executes it, the simulator replays it).
+pub fn partition_memory_scheduled(
+    g: &ModelGraph,
+    pt: &Partitioning,
+    part: usize,
+    mb: usize,
+    program: &Program,
+) -> MemEstimate {
+    partition_memory(g, pt, part, mb, program.peak_resident_microbatches(part))
+}
+
+/// Worst-partition peak memory under a compiled schedule program.
+pub fn scheduled_memory(
+    g: &ModelGraph,
+    pt: &Partitioning,
+    mb: usize,
+    program: &Program,
+) -> MemEstimate {
+    (0..pt.num_partitions)
+        .map(|p| partition_memory_scheduled(g, pt, p, mb, program))
+        .max_by_key(|e| e.total())
+        .expect("at least one partition")
 }
 
 /// Whole-model memory under sequential training.
@@ -185,5 +221,31 @@ mod tests {
         let a = sequential_memory(&g, 8).activations;
         let b = sequential_memory(&g, 16).activations;
         assert_eq!(b, a * 2);
+    }
+
+    #[test]
+    fn scheduled_residency_gpipe_vs_one_f1b() {
+        use crate::schedule::{Program, ScheduleKind};
+        let g = zoo::resnet56_v1();
+        let pt = crate::partition::Partitioning::auto(&g, 4).unwrap();
+        let (mb, m) = (4usize, 16usize);
+        let gp = Program::compile(&g, &pt, m, ScheduleKind::GPipe);
+        let f1b = Program::compile(&g, &pt, m, ScheduleKind::OneF1B);
+        for part in 0..4 {
+            let a = partition_memory_scheduled(&g, &pt, part, mb, &gp);
+            let b = partition_memory_scheduled(&g, &pt, part, mb, &f1b);
+            // GPipe keeps all m stashes; 1F1B at most the pipeline depth.
+            assert_eq!(a.activations, partition_memory(&g, &pt, part, mb, m).activations);
+            assert!(
+                b.activations < a.activations,
+                "part {part}: 1f1b {} !< gpipe {}",
+                b.activations,
+                a.activations
+            );
+            // Weights/grads/optimizer are schedule-independent.
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.optimizer, b.optimizer);
+        }
+        assert!(scheduled_memory(&g, &pt, mb, &f1b).total() < scheduled_memory(&g, &pt, mb, &gp).total());
     }
 }

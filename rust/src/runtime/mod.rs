@@ -1,26 +1,34 @@
-//! PJRT runtime: load the AOT-compiled HLO artifacts (`artifacts/*.hlo.txt`,
-//! produced once by `python/compile/aot.py`) and execute them from the Rust
-//! hot path. This is the layer that keeps Python off the training path:
-//! after `make artifacts`, the coordinator is self-contained.
+//! Primitive runtime: execute the AOT primitive catalog from the Rust hot
+//! path.
 //!
-//! Per the AOT recipe (see /opt/xla-example/README.md): the interchange
-//! format is HLO **text** (`HloModuleProto::from_text_file`); all artifacts
-//! were lowered with `return_tuple=True`, so every execution result is a
-//! tuple we decompose.
+//! Historically this layer loaded HLO text artifacts (compiled once by
+//! `python/compile/aot.py`) through the PJRT C API. The offline build has
+//! neither the PJRT `xla` crate nor the compiled artifacts, so execution is
+//! backed by the [`native`] CPU executor, which implements the identical
+//! primitive contract (names, argument order, output order — see
+//! `python/compile/model.py`). The artifact *name* remains the interface:
+//! the engine asks for `conv3x3_n8_c16_k16_h32_w32_s1.fwd` and does not
+//! know or care which backend runs it.
 //!
-//! One `Runtime` per rank thread (the PJRT wrappers are not `Sync`);
-//! executables are compiled lazily on first use and cached, so a rank only
-//! pays for the primitives its partition actually runs.
+//! If `artifacts/manifest.txt` exists (produced by `make artifacts`), it is
+//! loaded and used for shape validation — a drift check between the Python
+//! registry and the Rust engine. Without it, shapes are synthesized from
+//! the artifact name itself ([`native::meta_of`]), so the runtime is fully
+//! self-contained.
+//!
+//! One `Runtime` per rank thread; "compilation" is name parsing + plan
+//! caching, counted in [`RuntimeStats`] so the warmup/caching behavior the
+//! benches measure is preserved.
 
 mod manifest;
+pub mod native;
 
 pub use manifest::{ArtifactMeta, Manifest};
 
-use crate::tensor::{Shape, Tensor};
+use crate::tensor::Tensor;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
 /// Execution statistics (for the perf pass and benches).
 #[derive(Clone, Debug, Default)]
@@ -33,25 +41,27 @@ pub struct RuntimeStats {
     pub d2h_bytes: u64,
 }
 
-/// Artifact registry + PJRT client + executable cache for one rank.
+/// Artifact registry + plan cache for one rank.
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: RefCell<HashMap<String, native::Plan>>,
     stats: RefCell<RuntimeStats>,
 }
 
 impl Runtime {
-    /// Open the artifact directory (reads `manifest.txt`, compiles nothing
-    /// yet) and create a PJRT CPU client.
+    /// Open the artifact directory. `manifest.txt` is loaded when present
+    /// (shape-validation contract with the Python AOT step); otherwise the
+    /// runtime synthesizes metadata from artifact names.
     pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir.join("manifest.txt"))?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+        let mpath = dir.join("manifest.txt");
+        let manifest = if mpath.exists() {
+            Manifest::load(&mpath)?
+        } else {
+            Manifest::default()
+        };
         Ok(Runtime {
-            client,
             dir,
             manifest,
             cache: RefCell::new(HashMap::new()),
@@ -67,59 +77,52 @@ impl Runtime {
         self.stats.borrow().clone()
     }
 
-    /// Does the registry hold an artifact of this name?
+    /// Is this name executable (in the manifest or parseable as a catalog
+    /// instance)?
     pub fn has(&self, name: &str) -> bool {
-        self.manifest.get(name).is_some()
+        self.manifest.get(name).is_some() || native::parse_name(name).is_some()
     }
 
-    fn executable(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(Rc::clone(e));
+    /// Parse-and-cache the execution plan for `name` (the "compile" step).
+    fn plan(&self, name: &str) -> anyhow::Result<native::Plan> {
+        if let Some(p) = self.cache.borrow().get(name) {
+            return Ok(p.clone());
         }
-        anyhow::ensure!(
-            self.manifest.get(name).is_some(),
-            "artifact '{name}' not in manifest at {:?} — run `make artifacts` \
-             after regenerating the registry (`hyparflow inspect --emit-registry`)",
-            self.dir
-        );
         let t0 = std::time::Instant::now();
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().expect("artifact path not utf-8"),
-        )
-        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        let plan = native::parse_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact '{name}' not in manifest at {:?} — not a known primitive \
+                 instance; regenerate the registry (`hyparflow inspect --emit-registry`)",
+                self.dir
+            )
+        })?;
+        self.cache.borrow_mut().insert(name.to_string(), plan.clone());
         let mut s = self.stats.borrow_mut();
         s.compiles += 1;
         s.compile_secs += t0.elapsed().as_secs_f64();
-        Ok(exe)
+        Ok(plan)
     }
 
-    /// Eagerly compile a set of artifacts (used at startup so the first
-    /// training step isn't a compile storm).
+    /// Eagerly cache a set of artifacts (kept so startup mirrors the old
+    /// compile-warmup path; validates every name early).
     pub fn warmup<'a>(&self, names: impl IntoIterator<Item = &'a str>) -> anyhow::Result<()> {
         for n in names {
-            self.executable(n)?;
+            self.plan(n)?;
         }
         Ok(())
     }
 
     /// Execute artifact `name` on host tensors, returning host tensors.
     ///
-    /// Shapes are validated against the manifest before launch so that a
-    /// registry/engine mismatch fails with names, not an XLA shape error.
+    /// Shapes are validated against the manifest (if loaded) or the
+    /// synthesized metadata before launch, so a registry/engine mismatch
+    /// fails with names, not an index error deep in a kernel.
     pub fn exec(&self, name: &str, args: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
-        let meta = self
-            .manifest
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?
-            .clone();
+        let plan = self.plan(name)?;
+        let meta = match self.manifest.get(name) {
+            Some(m) => m.clone(),
+            None => native::meta_of(name, &plan),
+        };
         anyhow::ensure!(
             args.len() == meta.in_shapes.len(),
             "{name}: expected {} args, got {}",
@@ -134,35 +137,22 @@ impl Runtime {
                 want
             );
         }
-        let exe = self.executable(name)?;
         let t0 = std::time::Instant::now();
-
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|t| tensor_to_literal(t))
-            .collect::<anyhow::Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
-        let out_literal = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result of {name}: {e:?}"))?;
-        // All artifacts are lowered with return_tuple=True.
-        let parts = out_literal
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple result of {name}: {e:?}"))?;
+        let outs = native::execute(&plan, args);
         anyhow::ensure!(
-            parts.len() == meta.out_shapes.len(),
+            outs.len() == meta.out_shapes.len(),
             "{name}: got {} outputs, manifest says {}",
-            parts.len(),
+            outs.len(),
             meta.out_shapes.len()
         );
-        let outs: Vec<Tensor> = parts
-            .iter()
-            .zip(meta.out_shapes.iter())
-            .map(|(l, shape)| literal_to_tensor(l, shape))
-            .collect::<anyhow::Result<_>>()?;
-
+        for (o, want) in outs.iter().zip(meta.out_shapes.iter()) {
+            anyhow::ensure!(
+                &o.shape == want,
+                "{name}: output shape {} != manifest {}",
+                o.shape,
+                want
+            );
+        }
         let mut s = self.stats.borrow_mut();
         s.executions += 1;
         s.exec_secs += t0.elapsed().as_secs_f64();
@@ -172,46 +162,20 @@ impl Runtime {
     }
 }
 
-fn tensor_to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
-    let lit = xla::Literal::vec1(&t.data);
-    if t.shape.rank() == 1 {
-        return Ok(lit);
-    }
-    let dims: Vec<i64> = t.shape.dims().iter().map(|&d| d as i64).collect();
-    lit.reshape(&dims)
-        .map_err(|e| anyhow::anyhow!("reshape literal to {}: {e:?}", t.shape))
-}
-
-fn literal_to_tensor(l: &xla::Literal, shape: &Shape) -> anyhow::Result<Tensor> {
-    let data = l
-        .to_vec::<f32>()
-        .map_err(|e| anyhow::anyhow!("literal to_vec: {e:?}"))?;
-    anyhow::ensure!(
-        data.len() == shape.numel(),
-        "literal has {} elements, manifest shape {} wants {}",
-        data.len(),
-        shape,
-        shape.numel()
-    );
-    Ok(Tensor::new(shape.clone(), data))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Shape;
 
-    fn artifacts_dir() -> PathBuf {
-        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        assert!(
-            d.join("manifest.txt").exists(),
-            "artifacts not built — run `make artifacts` first"
-        );
-        d
+    fn rt() -> Runtime {
+        // No artifacts directory needed: the native backend synthesizes
+        // metadata from names.
+        Runtime::open(std::env::temp_dir().join("hf_no_artifacts")).unwrap()
     }
 
     #[test]
     fn exec_dense_fwd_matches_cpu_math() {
-        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let rt = rt();
         // dense_n2_d4_m3: y = x @ w + b
         let x = Tensor::new(Shape::new(&[2, 4]), (0..8).map(|i| i as f32).collect());
         let w = Tensor::ones(&[4, 3]);
@@ -224,7 +188,7 @@ mod tests {
 
     #[test]
     fn exec_relu_fwd() {
-        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let rt = rt();
         let x = Tensor::new(Shape::new(&[2, 4]),
                             vec![-1., 2., -3., 4., 0., -0.5, 7., -8.]);
         let out = rt.exec("relu2_n2_d4.fwd", &[&x]).unwrap();
@@ -233,7 +197,7 @@ mod tests {
 
     #[test]
     fn exec_softmaxxent_two_outputs() {
-        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let rt = rt();
         let logits = Tensor::zeros(&[2, 3]);
         let mut y = Tensor::zeros(&[2, 3]);
         y.data[0] = 1.0; // class 0
@@ -246,7 +210,7 @@ mod tests {
 
     #[test]
     fn exec_dense_bwd_grads() {
-        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let rt = rt();
         let x = Tensor::ones(&[2, 4]);
         let w = Tensor::ones(&[4, 3]);
         let gy = Tensor::ones(&[2, 3]);
@@ -259,7 +223,7 @@ mod tests {
 
     #[test]
     fn shape_mismatch_is_descriptive() {
-        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let rt = rt();
         let bad = Tensor::zeros(&[3, 4]);
         let w = Tensor::ones(&[4, 3]);
         let b = Tensor::zeros(&[3]);
@@ -269,14 +233,14 @@ mod tests {
 
     #[test]
     fn missing_artifact_names_the_fix() {
-        let rt = Runtime::open(artifacts_dir()).unwrap();
+        let rt = rt();
         let err = rt.exec("conv9x9_n1_c1_k1_h1_w1_s1.fwd", &[]).unwrap_err();
         assert!(err.to_string().contains("not in manifest"), "err: {err}");
     }
 
     #[test]
-    fn executable_cache_compiles_once() {
-        let rt = Runtime::open(artifacts_dir()).unwrap();
+    fn plan_cache_compiles_once() {
+        let rt = rt();
         let x = Tensor::zeros(&[2, 4]);
         for _ in 0..3 {
             rt.exec("relu2_n2_d4.fwd", &[&x]).unwrap();
@@ -284,5 +248,23 @@ mod tests {
         let s = rt.stats();
         assert_eq!(s.compiles, 1);
         assert_eq!(s.executions, 3);
+    }
+
+    #[test]
+    fn manifest_still_validates_when_present() {
+        // A manifest entry with wrong shapes must override synthesis and
+        // fail the drift check.
+        let dir = std::env::temp_dir().join(format!("hf_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# registry-sha256=test\nrelu2_n2_d4.fwd|in=f32[9,9]|out=f32[9,9]\n",
+        )
+        .unwrap();
+        let rt = Runtime::open(&dir).unwrap();
+        let x = Tensor::zeros(&[2, 4]);
+        let err = rt.exec("relu2_n2_d4.fwd", &[&x]).unwrap_err();
+        assert!(err.to_string().contains("arg 0 shape"), "err: {err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,876 @@
+//! Native CPU executor for the primitive catalog.
+//!
+//! The original runtime loaded AOT-compiled HLO artifacts through the PJRT
+//! C API (`xla` crate). That crate (and the compiled artifacts) are not
+//! available in the offline build, so this module implements the *same
+//! primitive contract* — `python/compile/model.py`'s instance grammar,
+//! argument order and output order — directly in Rust. The artifact *names*
+//! stay the interchange format: `dense_n2_d4_m3.fwd` executes the dense
+//! forward for (n=2, d=4, m=3) whether it is backed by an HLO file or by
+//! this executor.
+//!
+//! Every kernel is deterministic (fixed accumulation order), which is what
+//! the sequential-vs-parallel bitwise-equivalence tests rely on: every rank
+//! and the sequential baseline run the exact same f32 operations in the
+//! exact same order.
+//!
+//! Math follows `python/compile/kernels/ref.py`:
+//! - conv2d: SAME padding, NCHW/OIHW, via im2col + matmul (and the
+//!   transposed matmuls + col2im scatter for backward),
+//! - batchnorm: train-mode batch statistics, eps 1e-5, closed-form VJP,
+//! - softmax cross-entropy: stable logsumexp, mean loss, glogits
+//!   `(softmax - y)/n`.
+
+use super::manifest::ArtifactMeta;
+use crate::tensor::{Shape, Tensor};
+
+const BN_EPS: f32 = 1e-5;
+
+/// Primitive kinds of the catalog (shared with python/compile/model.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimKind {
+    Conv3x3,
+    Conv1x1,
+    ConvBnRelu,
+    Bn,
+    Relu4,
+    Relu2,
+    MaxPool2,
+    Gap,
+    Dense,
+    DenseRelu,
+    SoftmaxXent,
+}
+
+/// A parsed artifact name: primitive + instance parameters + direction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub prim: PrimKind,
+    /// (n, c, k, h, w, s) for convs; (n, c, h, w) for bn/relu4/pool/gap;
+    /// (n, d, m) for dense; (n, d) for relu2; (n, c) for softmaxxent.
+    /// Unused slots stay 0.
+    pub n: usize,
+    pub c: usize,
+    pub k: usize,
+    pub h: usize,
+    pub w: usize,
+    pub s: usize,
+    pub d: usize,
+    pub m: usize,
+    pub bwd: bool,
+}
+
+/// Parse `conv3x3_n8_c16_k16_h32_w32_s1.fwd`-style names. Returns `None`
+/// for names outside the catalog (the caller reports "not in manifest").
+pub fn parse_name(name: &str) -> Option<Plan> {
+    let (base, bwd) = if let Some(b) = name.strip_suffix(".fwd") {
+        (b, false)
+    } else if let Some(b) = name.strip_suffix(".bwd") {
+        (b, true)
+    } else {
+        return None;
+    };
+    let mut parts = base.split('_');
+    let prim = match parts.next()? {
+        "conv3x3" => PrimKind::Conv3x3,
+        "conv1x1" => PrimKind::Conv1x1,
+        "convbnrelu" => PrimKind::ConvBnRelu,
+        "bn" => PrimKind::Bn,
+        "relu4" => PrimKind::Relu4,
+        "relu2" => PrimKind::Relu2,
+        "maxpool2" => PrimKind::MaxPool2,
+        "gap" => PrimKind::Gap,
+        "dense" => PrimKind::Dense,
+        "denserelu" => PrimKind::DenseRelu,
+        "softmaxxent" => PrimKind::SoftmaxXent,
+        _ => return None,
+    };
+    if bwd && prim == PrimKind::SoftmaxXent {
+        return None; // loss has no separate bwd artifact
+    }
+    let mut plan = Plan {
+        prim, n: 0, c: 0, k: 0, h: 0, w: 0, s: 0, d: 0, m: 0, bwd,
+    };
+    let order: &[char] = match prim {
+        PrimKind::Conv3x3 | PrimKind::Conv1x1 | PrimKind::ConvBnRelu => {
+            &['n', 'c', 'k', 'h', 'w', 's']
+        }
+        PrimKind::Bn | PrimKind::Relu4 | PrimKind::MaxPool2 | PrimKind::Gap => {
+            &['n', 'c', 'h', 'w']
+        }
+        PrimKind::Dense | PrimKind::DenseRelu => &['n', 'd', 'm'],
+        PrimKind::Relu2 => &['n', 'd'],
+        PrimKind::SoftmaxXent => &['n', 'c'],
+    };
+    for &key in order {
+        let tok = parts.next()?;
+        if tok.len() < 2 || !tok.is_ascii() {
+            return None;
+        }
+        let (tk, tv) = tok.split_at(1);
+        if tk.chars().next()? != key {
+            return None;
+        }
+        let v: usize = tv.parse().ok()?;
+        match key {
+            'n' => plan.n = v,
+            'c' => plan.c = v,
+            'k' => plan.k = v,
+            'h' => plan.h = v,
+            'w' => plan.w = v,
+            's' => plan.s = v,
+            'd' => plan.d = v,
+            'm' => plan.m = v,
+            _ => unreachable!(),
+        }
+    }
+    if parts.next().is_some() {
+        return None;
+    }
+    Some(plan)
+}
+
+fn shp(dims: &[usize]) -> Shape {
+    Shape::new(dims)
+}
+
+/// Input/output shapes of a plan — the synthesized manifest entry
+/// (identical to what `python/compile/aot.py` would have written).
+pub fn meta_of(name: &str, p: &Plan) -> ArtifactMeta {
+    let (ins, outs): (Vec<Shape>, Vec<Shape>) = match p.prim {
+        PrimKind::Conv3x3 | PrimKind::Conv1x1 => {
+            let kk = if p.prim == PrimKind::Conv3x3 { 3 } else { 1 };
+            let (ho, wo) = (p.h.div_ceil(p.s), p.w.div_ceil(p.s));
+            let x = shp(&[p.n, p.c, p.h, p.w]);
+            let w = shp(&[p.k, p.c, kk, kk]);
+            let gy = shp(&[p.n, p.k, ho, wo]);
+            if p.bwd {
+                (vec![x.clone(), w.clone(), gy], vec![x, w])
+            } else {
+                (vec![x, w], vec![gy])
+            }
+        }
+        PrimKind::ConvBnRelu => {
+            let (ho, wo) = (p.h.div_ceil(p.s), p.w.div_ceil(p.s));
+            let x = shp(&[p.n, p.c, p.h, p.w]);
+            let w = shp(&[p.k, p.c, 3, 3]);
+            let g = shp(&[p.k]);
+            let y = shp(&[p.n, p.k, ho, wo]);
+            if p.bwd {
+                (
+                    vec![x.clone(), w.clone(), g.clone(), g.clone(), y],
+                    vec![x, w, g.clone(), g],
+                )
+            } else {
+                (vec![x, w, g.clone(), g], vec![y])
+            }
+        }
+        PrimKind::Bn => {
+            let x = shp(&[p.n, p.c, p.h, p.w]);
+            let g = shp(&[p.c]);
+            if p.bwd {
+                (vec![x.clone(), g.clone(), x.clone()], vec![x, g.clone(), g])
+            } else {
+                (vec![x.clone(), g.clone(), g], vec![x])
+            }
+        }
+        PrimKind::Relu4 => {
+            let x = shp(&[p.n, p.c, p.h, p.w]);
+            if p.bwd {
+                (vec![x.clone(), x.clone()], vec![x])
+            } else {
+                (vec![x.clone()], vec![x])
+            }
+        }
+        PrimKind::Relu2 => {
+            let x = shp(&[p.n, p.d]);
+            if p.bwd {
+                (vec![x.clone(), x.clone()], vec![x])
+            } else {
+                (vec![x.clone()], vec![x])
+            }
+        }
+        PrimKind::MaxPool2 => {
+            let x = shp(&[p.n, p.c, p.h, p.w]);
+            let y = shp(&[p.n, p.c, p.h / 2, p.w / 2]);
+            if p.bwd {
+                (vec![x.clone(), y], vec![x])
+            } else {
+                (vec![x], vec![y])
+            }
+        }
+        PrimKind::Gap => {
+            let x = shp(&[p.n, p.c, p.h, p.w]);
+            let y = shp(&[p.n, p.c]);
+            if p.bwd {
+                (vec![y], vec![x])
+            } else {
+                (vec![x], vec![y])
+            }
+        }
+        PrimKind::Dense | PrimKind::DenseRelu => {
+            let x = shp(&[p.n, p.d]);
+            let w = shp(&[p.d, p.m]);
+            let b = shp(&[p.m]);
+            let y = shp(&[p.n, p.m]);
+            if p.bwd {
+                if p.prim == PrimKind::DenseRelu {
+                    (vec![x.clone(), w.clone(), b.clone(), y], vec![x, w, b])
+                } else {
+                    (vec![x.clone(), w.clone(), y], vec![x, w, b])
+                }
+            } else {
+                (vec![x, w, b], vec![y])
+            }
+        }
+        PrimKind::SoftmaxXent => {
+            let l = shp(&[p.n, p.c]);
+            (vec![l.clone(), l.clone()], vec![shp(&[]), l])
+        }
+    };
+    ArtifactMeta { name: name.to_string(), in_shapes: ins, out_shapes: outs }
+}
+
+/// Execute a plan on host tensors. Shapes were validated by the caller.
+pub fn execute(p: &Plan, args: &[&Tensor]) -> Vec<Tensor> {
+    match (p.prim, p.bwd) {
+        (PrimKind::Conv3x3, false) => vec![conv2d_fwd(args[0], args[1], 3, p.s)],
+        (PrimKind::Conv1x1, false) => vec![conv2d_fwd(args[0], args[1], 1, p.s)],
+        (PrimKind::Conv3x3, true) => {
+            let (gx, gw) = conv2d_bwd(args[0], args[1], args[2], 3, p.s);
+            vec![gx, gw]
+        }
+        (PrimKind::Conv1x1, true) => {
+            let (gx, gw) = conv2d_bwd(args[0], args[1], args[2], 1, p.s);
+            vec![gx, gw]
+        }
+        (PrimKind::ConvBnRelu, false) => {
+            let y = conv2d_fwd(args[0], args[1], 3, p.s);
+            let z = bn_fwd(&y, args[2], args[3]);
+            vec![relu_fwd(&z)]
+        }
+        (PrimKind::ConvBnRelu, true) => {
+            // Recompute y and z from (x, w, gamma, beta), chain the bwds.
+            let (x, w, gamma, _beta, gy) = (args[0], args[1], args[2], args[3], args[4]);
+            let y = conv2d_fwd(x, w, 3, p.s);
+            let z = bn_fwd(&y, gamma, args[3]);
+            let gz = relu_bwd(&z, gy);
+            let (gyy, ggamma, gbeta) = bn_bwd(&y, gamma, &gz);
+            let (gx, gw) = conv2d_bwd(x, w, &gyy, 3, p.s);
+            vec![gx, gw, ggamma, gbeta]
+        }
+        (PrimKind::Bn, false) => vec![bn_fwd(args[0], args[1], args[2])],
+        (PrimKind::Bn, true) => {
+            let (gx, gg, gb) = bn_bwd(args[0], args[1], args[2]);
+            vec![gx, gg, gb]
+        }
+        (PrimKind::Relu4, false) | (PrimKind::Relu2, false) => vec![relu_fwd(args[0])],
+        (PrimKind::Relu4, true) | (PrimKind::Relu2, true) => {
+            vec![relu_bwd(args[0], args[1])]
+        }
+        (PrimKind::MaxPool2, false) => vec![maxpool2_fwd(args[0])],
+        (PrimKind::MaxPool2, true) => vec![maxpool2_bwd(args[0], args[1])],
+        (PrimKind::Gap, false) => vec![gap_fwd(args[0])],
+        (PrimKind::Gap, true) => vec![gap_bwd(args[0], p.h, p.w)],
+        (PrimKind::Dense, false) => vec![dense_fwd(args[0], args[1], args[2], false)],
+        (PrimKind::DenseRelu, false) => vec![dense_fwd(args[0], args[1], args[2], true)],
+        (PrimKind::Dense, true) => {
+            let (gx, gw, gb) = dense_bwd(args[0], args[1], args[2]);
+            vec![gx, gw, gb]
+        }
+        (PrimKind::DenseRelu, true) => {
+            // Recompute the pre-activation mask, then plain dense backward.
+            let (x, w, b, gy) = (args[0], args[1], args[2], args[3]);
+            let y = dense_fwd(x, w, b, false);
+            let g = relu_bwd(&y, gy);
+            let (gx, gw, gb) = dense_bwd(x, w, &g);
+            vec![gx, gw, gb]
+        }
+        (PrimKind::SoftmaxXent, false) => {
+            let (loss, glogits) = softmax_xent(args[0], args[1]);
+            vec![loss, glogits]
+        }
+        (PrimKind::SoftmaxXent, true) => unreachable!("softmaxxent has no bwd"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matmul (the hot spot) + transposed variant
+// ---------------------------------------------------------------------------
+
+/// `a [m,k] @ b [k,n]` with i-k-j loop order (deterministic, vectorizable).
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `a^T @ b` for `a [m,k]`, `b [m,n]` -> `[k,n]` (accumulates over rows of
+/// both, ascending — deterministic).
+fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            let orow = &mut out[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// conv2d via im2col (SAME padding, odd square kernel, NCHW/OIHW)
+// ---------------------------------------------------------------------------
+
+/// Patch matrix [N*Ho*Wo, C*kk*kk]; feature index = (c*kk + dy)*kk + dx —
+/// the OIHW-flatten ordering `model.py::_patches` produces.
+fn im2col(x: &Tensor, kk: usize, stride: usize) -> (Vec<f32>, usize, usize) {
+    let d = x.shape.dims();
+    let (n, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let pad = kk / 2;
+    let (ho, wo) = (h.div_ceil(stride), w.div_ceil(stride));
+    let f = c * kk * kk;
+    let mut out = vec![0.0f32; n * ho * wo * f];
+    for nn in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((nn * ho + oy) * wo + ox) * f;
+                for ci in 0..c {
+                    for dy in 0..kk {
+                        let iy = (oy * stride + dy) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        let xbase = ((nn * c + ci) * h + iy as usize) * w;
+                        for dx in 0..kk {
+                            let ix = (ox * stride + dx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            out[row + (ci * kk + dy) * kk + dx] = x.data[xbase + ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+/// Scatter-add the patch-matrix gradient back into input layout (the VJP of
+/// `im2col`). Deterministic ascending iteration.
+fn col2im(gp: &[f32], n: usize, c: usize, h: usize, w: usize, kk: usize, stride: usize) -> Tensor {
+    let pad = kk / 2;
+    let (ho, wo) = (h.div_ceil(stride), w.div_ceil(stride));
+    let f = c * kk * kk;
+    let mut gx = vec![0.0f32; n * c * h * w];
+    for nn in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((nn * ho + oy) * wo + ox) * f;
+                for ci in 0..c {
+                    for dy in 0..kk {
+                        let iy = (oy * stride + dy) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        let xbase = ((nn * c + ci) * h + iy as usize) * w;
+                        for dx in 0..kk {
+                            let ix = (ox * stride + dx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            gx[xbase + ix as usize] += gp[row + (ci * kk + dy) * kk + dx];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(Shape::new(&[n, c, h, w]), gx)
+}
+
+fn conv2d_fwd(x: &Tensor, w: &Tensor, kk: usize, stride: usize) -> Tensor {
+    let xd = x.shape.dims();
+    let (n, c) = (xd[0], xd[1]);
+    let kout = w.shape.dims()[0];
+    let f = c * kk * kk;
+    let (pmat, ho, wo) = im2col(x, kk, stride);
+    // wmat = w.reshape(k, f).T -> [f, k]
+    let mut wt = vec![0.0f32; f * kout];
+    for ko in 0..kout {
+        for fi in 0..f {
+            wt[fi * kout + ko] = w.data[ko * f + fi];
+        }
+    }
+    let ymat = matmul(&pmat, &wt, n * ho * wo, f, kout); // [M, K]
+    // [M, K] -> NCHW
+    let mut y = vec![0.0f32; n * kout * ho * wo];
+    for nn in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((nn * ho + oy) * wo + ox) * kout;
+                for ko in 0..kout {
+                    y[((nn * kout + ko) * ho + oy) * wo + ox] = ymat[row + ko];
+                }
+            }
+        }
+    }
+    Tensor::new(Shape::new(&[n, kout, ho, wo]), y)
+}
+
+fn conv2d_bwd(x: &Tensor, w: &Tensor, gy: &Tensor, kk: usize, stride: usize) -> (Tensor, Tensor) {
+    let xd = x.shape.dims();
+    let (n, c, h, wd) = (xd[0], xd[1], xd[2], xd[3]);
+    let kout = w.shape.dims()[0];
+    let f = c * kk * kk;
+    let gyd = gy.shape.dims();
+    let (ho, wo) = (gyd[2], gyd[3]);
+    let mrows = n * ho * wo;
+    let (pmat, _, _) = im2col(x, kk, stride);
+    // gy NCHW -> [M, K]
+    let mut gymat = vec![0.0f32; mrows * kout];
+    for nn in 0..n {
+        for ko in 0..kout {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    gymat[(((nn * ho + oy) * wo + ox) * kout) + ko] =
+                        gy.data[((nn * kout + ko) * ho + oy) * wo + ox];
+                }
+            }
+        }
+    }
+    // gw = pmat^T @ gymat : [F, K] -> transpose-reshape to [K, C, kk, kk].
+    let gwmat = matmul_tn(&pmat, &gymat, mrows, f, kout);
+    let mut gw = vec![0.0f32; kout * f];
+    for fi in 0..f {
+        for ko in 0..kout {
+            gw[ko * f + fi] = gwmat[fi * kout + ko];
+        }
+    }
+    // gpatches = gymat @ w.reshape(k, f) : [M, F] -> col2im.
+    let gpmat = matmul(&gymat, &w.data, mrows, kout, f);
+    let gx = col2im(&gpmat, n, c, h, wd, kk, stride);
+    (gx, Tensor::new(w.shape.clone(), gw))
+}
+
+// ---------------------------------------------------------------------------
+// batchnorm (train mode, batch statistics over N, H, W per channel)
+// ---------------------------------------------------------------------------
+
+/// Per-channel (mean, inverse std) of a [N,C,H,W] tensor.
+fn bn_stats(x: &Tensor) -> (Vec<f32>, Vec<f32>) {
+    let d = x.shape.dims();
+    let (n, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let m = (n * h * w) as f32;
+    let mut mean = vec![0.0f32; c];
+    let mut istd = vec![0.0f32; c];
+    for ci in 0..c {
+        let mut sum = 0.0f32;
+        for nn in 0..n {
+            let base = ((nn * c + ci) * h) * w;
+            for v in &x.data[base..base + h * w] {
+                sum += v;
+            }
+        }
+        let mu = sum / m;
+        let mut var = 0.0f32;
+        for nn in 0..n {
+            let base = ((nn * c + ci) * h) * w;
+            for v in &x.data[base..base + h * w] {
+                let dv = v - mu;
+                var += dv * dv;
+            }
+        }
+        mean[ci] = mu;
+        istd[ci] = 1.0 / (var / m + BN_EPS).sqrt();
+    }
+    (mean, istd)
+}
+
+fn bn_fwd(x: &Tensor, gamma: &Tensor, beta: &Tensor) -> Tensor {
+    let d = x.shape.dims();
+    let (n, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let (mean, istd) = bn_stats(x);
+    let mut y = vec![0.0f32; x.numel()];
+    for nn in 0..n {
+        for ci in 0..c {
+            let base = ((nn * c + ci) * h) * w;
+            let (mu, is, g, b) = (mean[ci], istd[ci], gamma.data[ci], beta.data[ci]);
+            for i in base..base + h * w {
+                y[i] = (x.data[i] - mu) * is * g + b;
+            }
+        }
+    }
+    Tensor::new(x.shape.clone(), y)
+}
+
+/// Closed-form train-mode BN backward: (gx, ggamma, gbeta).
+fn bn_bwd(x: &Tensor, gamma: &Tensor, gy: &Tensor) -> (Tensor, Tensor, Tensor) {
+    let d = x.shape.dims();
+    let (n, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let m = (n * h * w) as f32;
+    let (mean, istd) = bn_stats(x);
+    let mut ggamma = vec![0.0f32; c];
+    let mut gbeta = vec![0.0f32; c];
+    let mut gx = vec![0.0f32; x.numel()];
+    for ci in 0..c {
+        let (mu, is, g) = (mean[ci], istd[ci], gamma.data[ci]);
+        // First pass: sum(gy) and sum(gy * xhat) for the channel.
+        let (mut sg, mut sgx) = (0.0f32, 0.0f32);
+        for nn in 0..n {
+            let base = ((nn * c + ci) * h) * w;
+            for i in base..base + h * w {
+                let xhat = (x.data[i] - mu) * is;
+                sg += gy.data[i];
+                sgx += gy.data[i] * xhat;
+            }
+        }
+        gbeta[ci] = sg;
+        ggamma[ci] = sgx;
+        // gx = (gamma * istd / m) * (m*gy - sum(gy) - xhat * sum(gy*xhat))
+        let scale = g * is / m;
+        for nn in 0..n {
+            let base = ((nn * c + ci) * h) * w;
+            for i in base..base + h * w {
+                let xhat = (x.data[i] - mu) * is;
+                gx[i] = scale * (m * gy.data[i] - sg - xhat * sgx);
+            }
+        }
+    }
+    (
+        Tensor::new(x.shape.clone(), gx),
+        Tensor::new(Shape::new(&[c]), ggamma),
+        Tensor::new(Shape::new(&[c]), gbeta),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// relu / maxpool2 / gap
+// ---------------------------------------------------------------------------
+
+fn relu_fwd(x: &Tensor) -> Tensor {
+    let data = x.data.iter().map(|&v| v.max(0.0)).collect();
+    Tensor::new(x.shape.clone(), data)
+}
+
+fn relu_bwd(x: &Tensor, gy: &Tensor) -> Tensor {
+    let data = x
+        .data
+        .iter()
+        .zip(gy.data.iter())
+        .map(|(&v, &g)| if v > 0.0 { g } else { 0.0 })
+        .collect();
+    Tensor::new(x.shape.clone(), data)
+}
+
+fn maxpool2_fwd(x: &Tensor) -> Tensor {
+    let d = x.shape.dims();
+    let (n, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let (ho, wo) = (h / 2, w / 2);
+    let mut y = vec![0.0f32; n * c * ho * wo];
+    for nc in 0..n * c {
+        let xb = nc * h * w;
+        let yb = nc * ho * wo;
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let i = xb + (2 * oy) * w + 2 * ox;
+                let v = x.data[i]
+                    .max(x.data[i + 1])
+                    .max(x.data[i + w])
+                    .max(x.data[i + w + 1]);
+                y[yb + oy * wo + ox] = v;
+            }
+        }
+    }
+    Tensor::new(Shape::new(&[n, c, ho, wo]), y)
+}
+
+/// Max-pool backward: the gradient flows to the first maximal element of
+/// each 2x2 window (deterministic tie-break; ties are measure-zero on the
+/// continuous synthetic data).
+fn maxpool2_bwd(x: &Tensor, gy: &Tensor) -> Tensor {
+    let d = x.shape.dims();
+    let (n, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let (ho, wo) = (h / 2, w / 2);
+    let mut gx = vec![0.0f32; x.numel()];
+    for nc in 0..n * c {
+        let xb = nc * h * w;
+        let yb = nc * ho * wo;
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let i = xb + (2 * oy) * w + 2 * ox;
+                let idxs = [i, i + 1, i + w, i + w + 1];
+                let mut best = idxs[0];
+                for &j in &idxs[1..] {
+                    if x.data[j] > x.data[best] {
+                        best = j;
+                    }
+                }
+                gx[best] += gy.data[yb + oy * wo + ox];
+            }
+        }
+    }
+    Tensor::new(x.shape.clone(), gx)
+}
+
+fn gap_fwd(x: &Tensor) -> Tensor {
+    let d = x.shape.dims();
+    let (n, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let hw = (h * w) as f32;
+    let mut y = vec![0.0f32; n * c];
+    for nc in 0..n * c {
+        let mut sum = 0.0f32;
+        for v in &x.data[nc * h * w..(nc + 1) * h * w] {
+            sum += v;
+        }
+        y[nc] = sum / hw;
+    }
+    Tensor::new(Shape::new(&[n, c]), y)
+}
+
+fn gap_bwd(gy: &Tensor, h: usize, w: usize) -> Tensor {
+    let d = gy.shape.dims();
+    let (n, c) = (d[0], d[1]);
+    let hw = (h * w) as f32;
+    let mut gx = vec![0.0f32; n * c * h * w];
+    for nc in 0..n * c {
+        let g = gy.data[nc] / hw;
+        for v in &mut gx[nc * h * w..(nc + 1) * h * w] {
+            *v = g;
+        }
+    }
+    Tensor::new(Shape::new(&[n, c, h, w]), gx)
+}
+
+// ---------------------------------------------------------------------------
+// dense / softmax cross-entropy
+// ---------------------------------------------------------------------------
+
+fn dense_fwd(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Tensor {
+    let (n, d) = (x.shape.dims()[0], x.shape.dims()[1]);
+    let m = w.shape.dims()[1];
+    let mut y = matmul(&x.data, &w.data, n, d, m);
+    for row in 0..n {
+        for j in 0..m {
+            let v = y[row * m + j] + b.data[j];
+            y[row * m + j] = if relu { v.max(0.0) } else { v };
+        }
+    }
+    Tensor::new(Shape::new(&[n, m]), y)
+}
+
+fn dense_bwd(x: &Tensor, w: &Tensor, gy: &Tensor) -> (Tensor, Tensor, Tensor) {
+    let (n, d) = (x.shape.dims()[0], x.shape.dims()[1]);
+    let m = w.shape.dims()[1];
+    // gx = gy @ w^T : [N, D]
+    let mut wt = vec![0.0f32; m * d];
+    for di in 0..d {
+        for mi in 0..m {
+            wt[mi * d + di] = w.data[di * m + mi];
+        }
+    }
+    let gx = matmul(&gy.data, &wt, n, m, d);
+    // gw = x^T @ gy : [D, M]
+    let gw = matmul_tn(&x.data, &gy.data, n, d, m);
+    // gb = column sums of gy.
+    let mut gb = vec![0.0f32; m];
+    for row in 0..n {
+        for j in 0..m {
+            gb[j] += gy.data[row * m + j];
+        }
+    }
+    (
+        Tensor::new(Shape::new(&[n, d]), gx),
+        Tensor::new(Shape::new(&[d, m]), gw),
+        Tensor::new(Shape::new(&[m]), gb),
+    )
+}
+
+/// Mean softmax cross-entropy: (scalar loss, dloss/dlogits).
+fn softmax_xent(logits: &Tensor, y_onehot: &Tensor) -> (Tensor, Tensor) {
+    let (n, c) = (logits.shape.dims()[0], logits.shape.dims()[1]);
+    let mut glogits = vec![0.0f32; n * c];
+    let mut loss = 0.0f32;
+    for i in 0..n {
+        let row = &logits.data[i * c..(i + 1) * c];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - mx).exp();
+        }
+        let lse = mx + sum.ln();
+        for j in 0..c {
+            let logp = row[j] - lse;
+            let yv = y_onehot.data[i * c + j];
+            loss -= yv * logp;
+            glogits[i * c + j] = (logp.exp() - yv) / n as f32;
+        }
+    }
+    (
+        Tensor::scalar(loss / n as f32),
+        Tensor::new(Shape::new(&[n, c]), glogits),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_conv_name() {
+        let p = parse_name("conv3x3_n8_c16_k32_h32_w32_s2.bwd").unwrap();
+        assert_eq!(p.prim, PrimKind::Conv3x3);
+        assert_eq!((p.n, p.c, p.k, p.h, p.w, p.s), (8, 16, 32, 32, 32, 2));
+        assert!(p.bwd);
+        assert!(parse_name("conv9x9_n1_c1_k1_h1_w1_s1.fwd").is_none());
+        assert!(parse_name("softmaxxent_n2_c3.bwd").is_none());
+        assert!(parse_name("dense_n2_d4_m3").is_none());
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weights reproduces the input.
+        let x = Tensor::new(Shape::new(&[1, 2, 2, 2]), (0..8).map(|i| i as f32).collect());
+        let mut w = Tensor::zeros(&[2, 2, 1, 1]);
+        w.data[0] = 1.0; // out0 <- in0
+        w.data[3] = 1.0; // out1 <- in1
+        let y = conv2d_fwd(&x, &w, 1, 1);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv_same_padding_sums() {
+        // All-ones 3x3 kernel on all-ones input: interior pixels see 9,
+        // edges 6, corners 4.
+        let x = Tensor::ones(&[1, 1, 3, 3]);
+        let w = Tensor::ones(&[1, 1, 3, 3]);
+        let y = conv2d_fwd(&x, &w, 3, 1);
+        assert_eq!(y.shape.dims(), &[1, 1, 3, 3]);
+        assert_eq!(y.data[4], 9.0);
+        assert_eq!(y.data[0], 4.0);
+        assert_eq!(y.data[1], 6.0);
+    }
+
+    #[test]
+    fn conv_grad_check() {
+        // Finite-difference check of conv2d_bwd on a tiny instance.
+        use crate::rng::Rng;
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[2, 2, 4, 4], 1.0, &mut rng);
+        let w = Tensor::randn(&[3, 2, 3, 3], 0.5, &mut rng);
+        let gy = Tensor::randn(&[2, 3, 4, 4], 1.0, &mut rng);
+        let (gx, gw) = conv2d_bwd(&x, &w, &gy, 3, 1);
+        let loss = |x: &Tensor, w: &Tensor| -> f32 {
+            let y = conv2d_fwd(x, w, 3, 1);
+            y.data.iter().zip(gy.data.iter()).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-2f32;
+        for &i in &[0usize, 7, 33] {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let num = (loss(&xp, &w) - loss(&xm, &w)) / (2.0 * eps);
+            assert!((num - gx.data[i]).abs() < 2e-2, "gx[{i}]: {num} vs {}", gx.data[i]);
+        }
+        for &i in &[0usize, 10, 50] {
+            let mut wp = w.clone();
+            wp.data[i] += eps;
+            let mut wm = w.clone();
+            wm.data[i] -= eps;
+            let num = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps);
+            assert!((num - gw.data[i]).abs() < 3e-2, "gw[{i}]: {num} vs {}", gw.data[i]);
+        }
+    }
+
+    #[test]
+    fn bn_normalizes() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[4, 3, 5, 5], 2.5, &mut rng);
+        let y = bn_fwd(&x, &Tensor::ones(&[3]), &Tensor::zeros(&[3]));
+        // Each channel of the output is ~zero-mean, ~unit-variance.
+        let (mean, istd) = bn_stats(&y);
+        for c in 0..3 {
+            assert!(mean[c].abs() < 1e-4, "mean {}", mean[c]);
+            assert!((1.0 / istd[c] - 1.0).abs() < 1e-2, "std {}", 1.0 / istd[c]);
+        }
+    }
+
+    #[test]
+    fn bn_grad_check() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(7);
+        let x = Tensor::randn(&[2, 2, 3, 3], 1.0, &mut rng);
+        let gamma = Tensor::new(Shape::new(&[2]), vec![1.3, 0.7]);
+        let gy = Tensor::randn(&[2, 2, 3, 3], 1.0, &mut rng);
+        let (gx, gg, gb) = bn_bwd(&x, &gamma, &gy);
+        let loss = |x: &Tensor, gamma: &Tensor, beta: &Tensor| -> f32 {
+            let y = bn_fwd(x, gamma, beta);
+            y.data.iter().zip(gy.data.iter()).map(|(a, b)| a * b).sum()
+        };
+        let beta = Tensor::zeros(&[2]);
+        let eps = 1e-2f32;
+        for &i in &[0usize, 5, 17] {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let num = (loss(&xp, &gamma, &beta) - loss(&xm, &gamma, &beta)) / (2.0 * eps);
+            assert!((num - gx.data[i]).abs() < 2e-2, "gx[{i}]: {num} vs {}", gx.data[i]);
+        }
+        for i in 0..2 {
+            let mut gp = gamma.clone();
+            gp.data[i] += eps;
+            let mut gm = gamma.clone();
+            gm.data[i] -= eps;
+            let num = (loss(&x, &gp, &beta) - loss(&x, &gm, &beta)) / (2.0 * eps);
+            assert!((num - gg.data[i]).abs() < 2e-2, "ggamma[{i}]: {num} vs {}", gg.data[i]);
+            let mut bp = beta.clone();
+            bp.data[i] += eps;
+            let mut bm = beta.clone();
+            bm.data[i] -= eps;
+            let num = (loss(&x, &gamma, &bp) - loss(&x, &gamma, &bm)) / (2.0 * eps);
+            assert!((num - gb.data[i]).abs() < 2e-2, "gbeta[{i}]: {num} vs {}", gb.data[i]);
+        }
+    }
+
+    #[test]
+    fn maxpool_routes_gradient_to_max() {
+        let x = Tensor::new(
+            Shape::new(&[1, 1, 2, 2]),
+            vec![1.0, 5.0, 3.0, 2.0],
+        );
+        let y = maxpool2_fwd(&x);
+        assert_eq!(y.data, vec![5.0]);
+        let gx = maxpool2_bwd(&x, &Tensor::full(&[1, 1, 1, 1], 2.0));
+        assert_eq!(gx.data, vec![0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_xent_uniform() {
+        let logits = Tensor::zeros(&[2, 3]);
+        let mut y = Tensor::zeros(&[2, 3]);
+        y.data[0] = 1.0;
+        y.data[5] = 1.0;
+        let (loss, g) = softmax_xent(&logits, &y);
+        assert!((loss.data[0] - 3f32.ln()).abs() < 1e-6);
+        // glogits rows sum to zero.
+        let s: f32 = g.data[..3].iter().sum();
+        assert!(s.abs() < 1e-6);
+    }
+}

@@ -1,0 +1,626 @@
+//! The unified pipeline-schedule IR.
+//!
+//! One `(ModelGraph, Partitioning, num_microbatches)` triple compiles into
+//! an explicit per-rank **instruction program** — compute ops
+//! ([`Instr::FwdCompute`]/[`Instr::BwdCompute`]), message ops
+//! (`Send`/`RecvActivation`, `Send`/`RecvError`), stash lifetime markers
+//! ([`Instr::DropStash`]) and the step epilogue
+//! ([`Instr::AllreduceGrads`], [`Instr::OptStep`]). Three consumers
+//! interpret the *same* [`Program`] object:
+//!
+//! - the **Trainer** (`crate::engine`) executes it op by op against the
+//!   runtime and the communication engine,
+//! - the **simulator** (`crate::sim::pipeline`) replays it on the cost
+//!   model, so simulated pipeline bubbles correspond to the instruction
+//!   stream the engine actually runs,
+//! - the **memory model** (`crate::mem`) derives peak activation residency
+//!   from the program's stash live intervals
+//!   ([`Program::peak_resident_microbatches`]) instead of assuming all
+//!   microbatches stay resident.
+//!
+//! Two generators are provided:
+//!
+//! - [`ScheduleKind::GPipe`] — the paper's §5.3 fill/drain: all forwards
+//!   (microbatch ascending), then all backwards (descending). Reproduces
+//!   the original hand-rolled Trainer loop bitwise: same per-node compute
+//!   order, same gradient-accumulation order, same message contents.
+//! - [`ScheduleKind::OneF1B`] — PipeDream-style one-forward-one-backward
+//!   with flush: stage `i` of `P` runs `min(P-1-i, m)` warmup forwards,
+//!   then alternates forward/backward, then drains. At most `P - i`
+//!   microbatch stashes are ever live on stage `i` (vs `m` under GPipe),
+//!   which is what makes high `num_microbatches` affordable at fixed
+//!   memory.
+//!
+//! **Message linearization.** Within one microbatch, message ops are
+//! ordered by the same global key as `partition::MsgSchedule` (forward by
+//! `(consumer node, producer node)`, backward by the mirrored reverse) —
+//! the paper's §6.3 rank-sorted, deadlock-free order — with compute ops
+//! interleaved at their dependency-minimal positions. GPipe programs are
+//! therefore safe even under *rendezvous* (unbuffered synchronous) send
+//! semantics, checked by [`Program::check`] and fuzzed in
+//! `rust/tests/proptests.rs`.
+//!
+//! **1F1B requires buffered sends.** Under rendezvous semantics 1F1B can
+//! deadlock even on a plain chain: stage `i` must get through its forward
+//! send of microbatch `k+1` before posting the receive for stage `i+1`'s
+//! error of microbatch `k`, while stage `i+1` symmetrically blocks on that
+//! error send — two sends facing each other. Real pipelined systems
+//! (PipeDream, Megatron) use asynchronous/buffered communication for
+//! exactly this reason, and the hfmpi fabric buffers sends (MPI_Bsend
+//! semantics), so the engine executes 1F1B safely. The checker models both:
+//! [`SendSemantics::Rendezvous`] for the paper-faithful GPipe claim, and
+//! [`SendSemantics::Buffered`] (sends complete immediately, receives wait
+//! for a matching completed send) to validate that a program is executable
+//! on the actual fabric. `one_f1b_needs_buffered_sends` in the tests below
+//! pins the deadlock demonstration.
+
+use crate::graph::{LayerKind, ModelGraph, NodeId};
+use crate::partition::Partitioning;
+use std::collections::HashMap;
+
+/// Which pipeline schedule to compile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ScheduleKind {
+    /// Fill/drain (paper §5.3): all forwards, then all backwards.
+    #[default]
+    GPipe,
+    /// One-forward-one-backward with flush (PipeDream-style).
+    OneF1B,
+}
+
+impl ScheduleKind {
+    pub fn parse(s: &str) -> anyhow::Result<ScheduleKind> {
+        Ok(match s {
+            "gpipe" => ScheduleKind::GPipe,
+            "1f1b" | "one_f1b" | "onef1b" => ScheduleKind::OneF1B,
+            _ => anyhow::bail!("unknown schedule '{s}' (gpipe|1f1b)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::GPipe => "gpipe",
+            ScheduleKind::OneF1B => "1f1b",
+        }
+    }
+}
+
+/// One instruction of a rank's program. `edge` indexes `Partitioning::edges`
+/// (also the message-tag component); `peer` is the partner partition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instr {
+    /// Run the forward of `node` for microbatch `mb` (inputs are in the
+    /// stash: local producers computed earlier, remote ones received).
+    FwdCompute { node: NodeId, mb: usize },
+    /// Run the backward of `node` for microbatch `mb` (output-gradient
+    /// already accumulated from local consumers and received errors).
+    BwdCompute { node: NodeId, mb: usize },
+    /// Ship the producer's stashed activation along a cross edge.
+    SendActivation { edge: usize, peer: usize, mb: usize },
+    /// Receive a remote activation; stashed under the producer node id.
+    RecvActivation { edge: usize, peer: usize, mb: usize },
+    /// Ship the partial error (grad-layer payload, paper Eq. 6) back along
+    /// a cross edge.
+    SendError { edge: usize, peer: usize, mb: usize },
+    /// Receive a partial error; accumulated into the producer's
+    /// output-gradient.
+    RecvError { edge: usize, peer: usize, mb: usize },
+    /// Microbatch `mb`'s backward is complete on this rank: its activation
+    /// stash and gradient accumulators are dead. The memory model reads
+    /// stash lifetime from (first `FwdCompute`/`RecvActivation`, this).
+    DropStash { mb: usize },
+    /// Average accumulated gradients over microbatches and allreduce
+    /// across replicas (one fused call per partition communicator).
+    AllreduceGrads,
+    /// Apply the optimizer update.
+    OptStep,
+}
+
+impl Instr {
+    /// Message identity for the deadlock checkers: (edge, mb, class) with
+    /// class 0 = activation, 1 = error. `None` for non-message ops.
+    fn msg_key(&self) -> Option<(usize, usize, u8, bool /*is_send*/, usize /*peer*/)> {
+        match *self {
+            Instr::SendActivation { edge, peer, mb } => Some((edge, mb, 0, true, peer)),
+            Instr::RecvActivation { edge, peer, mb } => Some((edge, mb, 0, false, peer)),
+            Instr::SendError { edge, peer, mb } => Some((edge, mb, 1, true, peer)),
+            Instr::RecvError { edge, peer, mb } => Some((edge, mb, 1, false, peer)),
+            _ => None,
+        }
+    }
+}
+
+/// Send-completion semantics for [`Program::check`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendSemantics {
+    /// Synchronous (unbuffered) sends: a send completes only when the
+    /// matching receive is at the head of the peer's program — the paper's
+    /// §6.3 setting.
+    Rendezvous,
+    /// Buffered sends (MPI_Bsend — what the hfmpi fabric implements): a
+    /// send completes immediately; a receive waits until the matching send
+    /// has executed.
+    Buffered,
+}
+
+/// A compiled per-rank instruction program for one training step.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub kind: ScheduleKind,
+    pub num_microbatches: usize,
+    pub num_partitions: usize,
+    ranks: Vec<Vec<Instr>>,
+}
+
+impl Program {
+    /// Compile the schedule for `(g, pt, m)` under `kind`.
+    pub fn compile(
+        g: &ModelGraph,
+        pt: &Partitioning,
+        num_microbatches: usize,
+        kind: ScheduleKind,
+    ) -> Program {
+        assert!(num_microbatches >= 1, "need at least one microbatch");
+        let p = pt.num_partitions;
+        let m = num_microbatches;
+        let mut ranks = Vec::with_capacity(p);
+        for part in 0..p {
+            let mut prog = vec![];
+            match kind {
+                ScheduleKind::GPipe => {
+                    for mb in 0..m {
+                        fwd_phase(pt, part, mb, &mut prog);
+                    }
+                    for mb in (0..m).rev() {
+                        bwd_phase(g, pt, part, mb, &mut prog);
+                    }
+                }
+                ScheduleKind::OneF1B => {
+                    // Warmup depth: how many forwards stage `part` runs
+                    // before its first backward. Bounds in-flight stashes
+                    // to w+1 <= P - part.
+                    let w = (p - 1 - part).min(m);
+                    for mb in 0..w {
+                        fwd_phase(pt, part, mb, &mut prog);
+                    }
+                    for k in 0..m - w {
+                        fwd_phase(pt, part, w + k, &mut prog);
+                        bwd_phase(g, pt, part, k, &mut prog);
+                    }
+                    for k in m - w..m {
+                        bwd_phase(g, pt, part, k, &mut prog);
+                    }
+                }
+            }
+            prog.push(Instr::AllreduceGrads);
+            prog.push(Instr::OptStep);
+            ranks.push(prog);
+        }
+        Program { kind, num_microbatches: m, num_partitions: p, ranks }
+    }
+
+    /// A forward-only single-microbatch program (evaluation path).
+    pub fn forward_only(pt: &Partitioning) -> Program {
+        let p = pt.num_partitions;
+        let mut ranks = Vec::with_capacity(p);
+        for part in 0..p {
+            let mut prog = vec![];
+            fwd_phase(pt, part, 0, &mut prog);
+            ranks.push(prog);
+        }
+        Program {
+            kind: ScheduleKind::GPipe,
+            num_microbatches: 1,
+            num_partitions: p,
+            ranks,
+        }
+    }
+
+    /// The instruction stream of one rank (== partition index).
+    pub fn rank(&self, part: usize) -> &[Instr] {
+        &self.ranks[part]
+    }
+
+    /// Peak number of microbatch stashes simultaneously live on `part`,
+    /// from the program's own live intervals (first touch -> `DropStash`).
+    /// GPipe yields `m`; 1F1B yields `min(P - part, m)`.
+    pub fn peak_resident_microbatches(&self, part: usize) -> usize {
+        let mut touched: Vec<bool> = vec![false; self.num_microbatches];
+        let mut live = 0usize;
+        let mut peak = 0usize;
+        for instr in &self.ranks[part] {
+            match *instr {
+                Instr::FwdCompute { mb, .. } | Instr::RecvActivation { mb, .. } => {
+                    if !touched[mb] {
+                        touched[mb] = true;
+                        live += 1;
+                        peak = peak.max(live);
+                    }
+                }
+                Instr::DropStash { mb } => {
+                    if touched[mb] {
+                        touched[mb] = false;
+                        live -= 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        peak
+    }
+
+    /// Worst peak residency across all ranks.
+    pub fn max_peak_resident_microbatches(&self) -> usize {
+        (0..self.num_partitions)
+            .map(|p| self.peak_resident_microbatches(p))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Simulate the program's message ops under the given send semantics.
+    /// Returns `Ok(matched message pairs)` if every rank completes, or
+    /// `Err(stuck rank ids)` on deadlock. Compute/stash/epilogue ops never
+    /// block and are skipped over.
+    pub fn check(&self, sem: SendSemantics) -> Result<usize, Vec<usize>> {
+        let p = self.ranks.len();
+        let mut pc = vec![0usize; p];
+        // Advance past non-message instructions.
+        let skip = |rank: usize, pc: &mut [usize]| {
+            while pc[rank] < self.ranks[rank].len()
+                && self.ranks[rank][pc[rank]].msg_key().is_none()
+            {
+                pc[rank] += 1;
+            }
+        };
+        for r in 0..p {
+            skip(r, &mut pc);
+        }
+        let mut steps = 0usize;
+        match sem {
+            SendSemantics::Rendezvous => loop {
+                let mut progressed = false;
+                for a in 0..p {
+                    if pc[a] >= self.ranks[a].len() {
+                        continue;
+                    }
+                    let (edge, mb, class, is_send, peer) =
+                        self.ranks[a][pc[a]].msg_key().unwrap();
+                    if pc[peer] >= self.ranks[peer].len() {
+                        continue;
+                    }
+                    let Some((e2, mb2, c2, send2, peer2)) =
+                        self.ranks[peer][pc[peer]].msg_key()
+                    else {
+                        continue;
+                    };
+                    if peer2 == a && e2 == edge && mb2 == mb && c2 == class && send2 != is_send
+                    {
+                        pc[a] += 1;
+                        pc[peer] += 1;
+                        skip(a, &mut pc);
+                        skip(peer, &mut pc);
+                        steps += 1;
+                        progressed = true;
+                    }
+                }
+                if (0..p).all(|r| pc[r] >= self.ranks[r].len()) {
+                    return Ok(steps);
+                }
+                if !progressed {
+                    return Err((0..p).filter(|&r| pc[r] < self.ranks[r].len()).collect());
+                }
+            },
+            SendSemantics::Buffered => {
+                // sent[(edge, mb, class)] = completed sends not yet received.
+                let mut sent: HashMap<(usize, usize, u8), usize> = HashMap::new();
+                loop {
+                    let mut progressed = false;
+                    for a in 0..p {
+                        loop {
+                            skip(a, &mut pc);
+                            if pc[a] >= self.ranks[a].len() {
+                                break;
+                            }
+                            let (edge, mb, class, is_send, _peer) =
+                                self.ranks[a][pc[a]].msg_key().unwrap();
+                            if is_send {
+                                *sent.entry((edge, mb, class)).or_insert(0) += 1;
+                                pc[a] += 1;
+                                progressed = true;
+                            } else {
+                                let slot = sent.entry((edge, mb, class)).or_insert(0);
+                                if *slot > 0 {
+                                    *slot -= 1;
+                                    pc[a] += 1;
+                                    steps += 1;
+                                    progressed = true;
+                                } else {
+                                    break; // blocked on a send not yet issued
+                                }
+                            }
+                        }
+                    }
+                    if (0..p).all(|r| pc[r] >= self.ranks[r].len()) {
+                        return Ok(steps);
+                    }
+                    if !progressed {
+                        return Err((0..p).filter(|&r| pc[r] < self.ranks[r].len()).collect());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Forward phase of one microbatch on one partition: message ops in the
+/// §6.3 global order `(consumer node, producer node)` — the same
+/// linearization `partition::MsgSchedule::build` produces — with
+/// `FwdCompute` ops inserted at their dependency-minimal slots (a node's
+/// compute goes after all messages keyed below it, so its receives precede
+/// it and its sends follow it).
+fn fwd_phase(pt: &Partitioning, part: usize, mb: usize, out: &mut Vec<Instr>) {
+    let mut msgs: Vec<(usize, usize, Instr)> = vec![];
+    for e in &pt.edges {
+        if e.src_part == part {
+            msgs.push((
+                e.dst_node,
+                e.src_node,
+                Instr::SendActivation { edge: e.id, peer: e.dst_part, mb },
+            ));
+        }
+        if e.dst_part == part {
+            msgs.push((
+                e.dst_node,
+                e.src_node,
+                Instr::RecvActivation { edge: e.id, peer: e.src_part, mb },
+            ));
+        }
+    }
+    msgs.sort_by_key(|&(d, s, _)| (d, s));
+    let nodes = &pt.parts[part];
+    let mut ni = 0usize;
+    for (d, _s, m) in msgs {
+        // Every local node strictly below the message key is computable
+        // now; in particular a send's producer (s < d) and not yet the
+        // receive's consumer (== d).
+        while ni < nodes.len() && nodes[ni] < d {
+            out.push(Instr::FwdCompute { node: nodes[ni], mb });
+            ni += 1;
+        }
+        out.push(m);
+    }
+    while ni < nodes.len() {
+        out.push(Instr::FwdCompute { node: nodes[ni], mb });
+        ni += 1;
+    }
+}
+
+/// Backward phase of one microbatch on one partition: the mirror
+/// linearization, keyed `(Reverse(producer), Reverse(consumer))`, with
+/// `BwdCompute` ops interleaved in reverse topological order and a final
+/// `DropStash` marking the end of the microbatch's stash live interval.
+fn bwd_phase(g: &ModelGraph, pt: &Partitioning, part: usize, mb: usize, out: &mut Vec<Instr>) {
+    let mut msgs: Vec<(usize, usize, Instr)> = vec![];
+    for e in &pt.edges {
+        if e.dst_part == part {
+            msgs.push((
+                e.src_node,
+                e.dst_node,
+                Instr::SendError { edge: e.id, peer: e.src_part, mb },
+            ));
+        }
+        if e.src_part == part {
+            msgs.push((
+                e.src_node,
+                e.dst_node,
+                Instr::RecvError { edge: e.id, peer: e.dst_part, mb },
+            ));
+        }
+    }
+    msgs.sort_by_key(|&(s, d, _)| (std::cmp::Reverse(s), std::cmp::Reverse(d)));
+    let nodes = &pt.parts[part];
+    let mut ni = 0usize; // index into nodes traversed in reverse
+    let rev = |i: usize| nodes[nodes.len() - 1 - i];
+    let mut emit = |node: NodeId, out: &mut Vec<Instr>| {
+        if !matches!(g.nodes[node].kind, LayerKind::Input) {
+            out.push(Instr::BwdCompute { node, mb });
+        }
+    };
+    for (s, _d, m) in msgs {
+        // Every local node strictly above the producer key runs its
+        // backward now; in particular an error-send's consumer (d > s) and
+        // not yet the error-receive's producer (== s).
+        while ni < nodes.len() && rev(ni) > s {
+            emit(rev(ni), out);
+            ni += 1;
+        }
+        out.push(m);
+    }
+    while ni < nodes.len() {
+        emit(rev(ni), out);
+        ni += 1;
+    }
+    out.push(Instr::DropStash { mb });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    fn program(parts: usize, m: usize, kind: ScheduleKind) -> (Partitioning, Program) {
+        let g = zoo::resnet20_v1();
+        let pt = Partitioning::auto(&g, parts).unwrap();
+        let prog = Program::compile(&g, &pt, m, kind);
+        (pt, prog)
+    }
+
+    #[test]
+    fn gpipe_is_rendezvous_safe_and_covers_all_edges() {
+        let (pt, prog) = program(4, 3, ScheduleKind::GPipe);
+        let steps = prog.check(SendSemantics::Rendezvous).unwrap();
+        assert_eq!(steps, pt.edges.len() * 2 * 3, "act+err per edge per mb");
+        // Buffered semantics can only be more permissive.
+        assert_eq!(prog.check(SendSemantics::Buffered).unwrap(), steps);
+    }
+
+    #[test]
+    fn one_f1b_passes_buffered_check() {
+        let (pt, prog) = program(4, 8, ScheduleKind::OneF1B);
+        let steps = prog.check(SendSemantics::Buffered).unwrap();
+        assert_eq!(steps, pt.edges.len() * 2 * 8);
+    }
+
+    #[test]
+    fn one_f1b_needs_buffered_sends() {
+        // The documented limitation: 1F1B over >1 stage deadlocks under
+        // rendezvous semantics (facing sends), which is why pipelined
+        // systems use buffered/asynchronous communication. If this ever
+        // starts passing, the generator changed — revisit the module docs.
+        let (_, prog) = program(3, 6, ScheduleKind::OneF1B);
+        assert!(prog.check(SendSemantics::Rendezvous).is_err());
+    }
+
+    #[test]
+    fn gpipe_residency_is_m() {
+        let (_, prog) = program(4, 6, ScheduleKind::GPipe);
+        for part in 0..4 {
+            assert_eq!(prog.peak_resident_microbatches(part), 6);
+        }
+    }
+
+    #[test]
+    fn one_f1b_residency_bounded_by_depth() {
+        let (_, prog) = program(4, 16, ScheduleKind::OneF1B);
+        for part in 0..4 {
+            assert_eq!(prog.peak_resident_microbatches(part), 4 - part);
+        }
+        // And never exceeds m when the pipeline is shallow vs m.
+        let (_, small) = program(4, 2, ScheduleKind::OneF1B);
+        assert!(small.max_peak_resident_microbatches() <= 2);
+    }
+
+    #[test]
+    fn single_partition_one_f1b_interleaves() {
+        // P=1 degenerates to fwd/bwd per microbatch, ascending.
+        let g = zoo::mlp(8, &[8, 8], 4);
+        let pt = Partitioning::auto(&g, 1).unwrap();
+        let prog = Program::compile(&g, &pt, 3, ScheduleKind::OneF1B);
+        let mut seen = vec![];
+        for i in prog.rank(0) {
+            match *i {
+                Instr::FwdCompute { mb, node } if node == 0 => seen.push(('f', mb)),
+                Instr::DropStash { mb } => seen.push(('d', mb)),
+                _ => {}
+            }
+        }
+        assert_eq!(seen, vec![('f', 0), ('d', 0), ('f', 1), ('d', 1), ('f', 2), ('d', 2)]);
+        assert_eq!(prog.peak_resident_microbatches(0), 1);
+    }
+
+    #[test]
+    fn compute_ops_respect_dependencies() {
+        // In every rank's stream: a node's FwdCompute comes after the
+        // RecvActivation of each of its remote inputs and before the
+        // SendActivation of each of its out-edges (same microbatch).
+        let g = zoo::resnet56_v1();
+        let pt = Partitioning::auto(&g, 4).unwrap();
+        let prog = Program::compile(&g, &pt, 2, ScheduleKind::OneF1B);
+        for part in 0..4 {
+            let stream = prog.rank(part);
+            let pos = |pred: &dyn Fn(&Instr) -> bool| -> usize {
+                stream.iter().position(|i| pred(i)).unwrap()
+            };
+            for e in &pt.edges {
+                for mb in 0..2 {
+                    if e.dst_part == part {
+                        let recv = pos(&|i: &Instr| {
+                            matches!(i, Instr::RecvActivation { edge, mb: m, .. }
+                                     if *edge == e.id && *m == mb)
+                        });
+                        let consume = pos(&|i: &Instr| {
+                            matches!(i, Instr::FwdCompute { node, mb: m }
+                                     if *node == e.dst_node && *m == mb)
+                        });
+                        assert!(recv < consume, "part {part} edge {} mb {mb}", e.id);
+                    }
+                    if e.src_part == part {
+                        let produce = pos(&|i: &Instr| {
+                            matches!(i, Instr::FwdCompute { node, mb: m }
+                                     if *node == e.src_node && *m == mb)
+                        });
+                        let send = pos(&|i: &Instr| {
+                            matches!(i, Instr::SendActivation { edge, mb: m, .. }
+                                     if *edge == e.id && *m == mb)
+                        });
+                        assert!(produce < send, "part {part} edge {} mb {mb}", e.id);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn epilogue_present_once_per_rank() {
+        let (_, prog) = program(3, 4, ScheduleKind::OneF1B);
+        for part in 0..3 {
+            let n_ar = prog
+                .rank(part)
+                .iter()
+                .filter(|i| matches!(i, Instr::AllreduceGrads))
+                .count();
+            let n_opt = prog
+                .rank(part)
+                .iter()
+                .filter(|i| matches!(i, Instr::OptStep))
+                .count();
+            assert_eq!((n_ar, n_opt), (1, 1));
+        }
+    }
+
+    #[test]
+    fn ir_message_order_matches_msg_schedule() {
+        // The IR's per-microbatch message linearization and
+        // `partition::MsgSchedule::build` implement the same §6.3 rule.
+        // Pin them against divergence: the message ops of a one-microbatch
+        // GPipe program must equal MsgSchedule's program op-for-op.
+        use crate::partition::{MsgDir, MsgSchedule};
+        let g = zoo::resnet56_v1();
+        let pt = Partitioning::auto(&g, 4).unwrap();
+        let prog = Program::compile(&g, &pt, 1, ScheduleKind::GPipe);
+        let ms = MsgSchedule::build(&pt);
+        for part in 0..4 {
+            let got: Vec<(MsgDir, usize, usize)> = prog
+                .rank(part)
+                .iter()
+                .filter_map(|i| match *i {
+                    Instr::SendActivation { edge, peer, .. } => {
+                        Some((MsgDir::SendActivation, peer, edge))
+                    }
+                    Instr::RecvActivation { edge, peer, .. } => {
+                        Some((MsgDir::RecvActivation, peer, edge))
+                    }
+                    Instr::SendError { edge, peer, .. } => {
+                        Some((MsgDir::SendError, peer, edge))
+                    }
+                    Instr::RecvError { edge, peer, .. } => {
+                        Some((MsgDir::RecvError, peer, edge))
+                    }
+                    _ => None,
+                })
+                .collect();
+            let want: Vec<(MsgDir, usize, usize)> = ms.programs[part]
+                .iter()
+                .map(|m| (m.dir, m.peer, m.edge))
+                .collect();
+            assert_eq!(got, want, "partition {part} diverged from MsgSchedule");
+        }
+    }
+
+    #[test]
+    fn schedule_kind_parses() {
+        assert_eq!(ScheduleKind::parse("gpipe").unwrap(), ScheduleKind::GPipe);
+        assert_eq!(ScheduleKind::parse("1f1b").unwrap(), ScheduleKind::OneF1B);
+        assert!(ScheduleKind::parse("zigzag").is_err());
+    }
+}

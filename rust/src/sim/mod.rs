@@ -14,9 +14,10 @@
 //!   intra-node vs inter-node; ring allreduce across replicas, one
 //!   concurrent allreduce per model-partition (paper §5.3), overlapped
 //!   with the other partitions' compute.
-//! - **schedule**: the exact fill/drain microbatch pipeline the Trainer
-//!   executes, replayed per partition with boundary + skip-edge payloads
-//!   from the real `Partitioning`.
+//! - **schedule**: the exact per-rank instruction program the Trainer
+//!   interprets (`crate::schedule::Program`, GPipe or 1F1B), replayed as a
+//!   discrete-event simulation with boundary + skip-edge payloads from the
+//!   real `Partitioning`.
 //!
 //! Constants are anchored by `hyparflow calibrate` (PJRT measurements on
 //! this host, scaled to platform profiles); the *shapes* of the figures
@@ -26,10 +27,11 @@ mod cost;
 mod pipeline;
 
 pub use cost::{CostModel, PRIM_DISPATCH_DEFAULT};
-pub use pipeline::{simulate_step, SimBreakdown};
+pub use pipeline::{simulate_program, simulate_step, SimBreakdown};
 
 use crate::graph::ModelGraph;
 use crate::partition::Partitioning;
+use crate::schedule::ScheduleKind;
 
 /// Hardware profile for one cluster flavor.
 #[derive(Clone, Debug)]
@@ -150,6 +152,8 @@ pub struct SimConfig {
     /// (the paper's design). Off = single global allreduce after backward
     /// (plain Horovod DP behavior).
     pub overlap_allreduce: bool,
+    /// Pipeline schedule to compile and replay (same IR the Trainer runs).
+    pub schedule: ScheduleKind,
     pub cost: CostModel,
 }
 
@@ -165,6 +169,7 @@ impl SimConfig {
             microbatch: 8,
             num_microbatches: 4,
             overlap_allreduce: true,
+            schedule: ScheduleKind::default(),
             cost,
         }
     }

@@ -1,12 +1,24 @@
-//! Replay of the Trainer's fill/drain microbatch schedule on the cost
-//! model: per-partition forward/backward stage times, boundary (and skip)
-//! edge transfers on alpha-beta links, and the per-partition gradient
-//! allreduce across replicas — overlapped with other partitions' compute
-//! when `overlap_allreduce` is set (the paper's §5.3 design).
+//! Replay of the **schedule IR** on the cost model: the simulator
+//! interprets the exact per-rank [`Program`](crate::schedule::Program) the
+//! Trainer executes — same instruction streams, same message linearization
+//! — as a discrete-event simulation: compute ops advance a rank's clock by
+//! the cost-model time, sends publish message-availability times over
+//! alpha-beta links (buffered, like the hfmpi fabric), receives wait for
+//! them. The per-partition gradient allreduce across replicas is applied
+//! at the program's `AllreduceGrads` op — overlapped with other
+//! partitions' compute when `overlap_allreduce` is set (the paper's §5.3
+//! design).
+//!
+//! Because simulation and execution share one schedule object, a simulated
+//! bubble is by construction a property of the program the engine runs,
+//! under either generator (GPipe fill/drain or 1F1B); peak memory comes
+//! from the same program's stash live intervals (`crate::mem`).
 
-use super::{SimConfig};
+use super::SimConfig;
 use crate::graph::ModelGraph;
 use crate::partition::Partitioning;
+use crate::schedule::{Instr, Program};
+use std::collections::HashMap;
 
 /// Where the simulated step time went.
 #[derive(Clone, Debug, Default)]
@@ -21,14 +33,20 @@ pub struct SimBreakdown {
     /// step - compute of the bottleneck stage = pipeline bubble + comm
     /// exposed on the critical path.
     pub bubble_secs: f64,
-    /// Peak per-rank memory estimate, bytes (for trainability gating).
+    /// Peak per-rank memory estimate, bytes (for trainability gating),
+    /// derived from the schedule program's stash live intervals.
     pub mem_bytes: u64,
 }
 
-/// Simulate one synchronous step; returns the time breakdown.
-pub fn simulate_step(g: &ModelGraph, pt: &Partitioning, cfg: &SimConfig) -> SimBreakdown {
+/// Simulate one synchronous step of `program`; returns the time breakdown.
+pub fn simulate_program(
+    g: &ModelGraph,
+    pt: &Partitioning,
+    cfg: &SimConfig,
+    program: &Program,
+) -> SimBreakdown {
     let p = pt.num_partitions;
-    let m = cfg.num_microbatches.max(1);
+    let m = program.num_microbatches;
     let cores = cfg.cores_per_rank();
     // Memory bandwidth is a node-shared resource: concurrent ranks split
     // the node's intra-op scaling ceiling in proportion to their core
@@ -39,93 +57,82 @@ pub fn simulate_step(g: &ModelGraph, pt: &Partitioning, cfg: &SimConfig) -> SimB
     cm.max_speedup = (cm.max_speedup * share).max(1.0);
     let cm = &cm;
 
-    // Per-partition stage times for one microbatch.
-    let f: Vec<f64> = (0..p)
-        .map(|i| {
-            pt.parts[i]
-                .iter()
-                .map(|&n| cm.node_fwd(g, n, cfg.microbatch, cores))
-                .sum()
+    // Edge transfer times (per microbatch). Placement decides intra- vs
+    // inter-node (replica 0 is representative: all replicas are placed
+    // identically modulo node offset).
+    let edge_secs: Vec<f64> = pt
+        .edges
+        .iter()
+        .map(|e| {
+            let bytes = (g.nodes[e.src_node].out_shape.iter().product::<usize>()
+                * 4
+                * cfg.microbatch) as f64;
+            let inter = cfg.node_of(0, e.src_part) != cfg.node_of(0, e.dst_part);
+            cfg.platform.p2p(bytes, inter)
         })
         .collect();
-    let b: Vec<f64> = (0..p)
-        .map(|i| {
-            pt.parts[i]
-                .iter()
-                .map(|&n| cm.node_bwd(g, n, cfg.microbatch, cores))
-                .sum()
-        })
-        .collect();
+    let total_wire: f64 = edge_secs.iter().sum();
 
-    // Edge transfer times (per microbatch), grouped by consumer partition.
-    // Placement decides intra- vs inter-node (replica 0 is representative:
-    // all replicas are placed identically modulo node offset).
-    let edge_time = |src_part: usize, dst_part: usize, bytes: f64| -> f64 {
-        let inter = cfg.node_of(0, src_part) != cfg.node_of(0, dst_part);
-        cfg.platform.p2p(bytes, inter)
-    };
-    // in_comm[i] = per-mb inbound transfer time to partition i (forward);
-    // the same edges reversed carry errors backward.
-    let mut in_comm = vec![0.0f64; p];
-    let mut out_comm = vec![0.0f64; p];
-    let mut total_wire = 0.0;
-    for e in &pt.edges {
-        let bytes =
-            (g.nodes[e.src_node].out_shape.iter().product::<usize>() * 4 * cfg.microbatch) as f64;
-        let t = edge_time(e.src_part, e.dst_part, bytes);
-        in_comm[e.dst_part] += t;
-        out_comm[e.src_part] += t;
-        total_wire += t;
-    }
-
-    // ---- forward fill ----
-    // fwd_end[i][k]: partition i finishes microbatch k's forward.
-    let mut fwd_end = vec![vec![0.0f64; m]; p];
-    for k in 0..m {
-        for i in 0..p {
-            let stage_free = if k > 0 { fwd_end[i][k - 1] } else { 0.0 };
-            // Upstream dependencies: any partition j<i feeding i must have
-            // finished microbatch k and shipped the boundary tensors.
-            let mut dep: f64 = 0.0;
-            for e in pt.recvs_of(i) {
-                let bytes = (g.nodes[e.src_node].out_shape.iter().product::<usize>()
-                    * 4
-                    * cfg.microbatch) as f64;
-                let t = edge_time(e.src_part, e.dst_part, bytes);
-                dep = dep.max(fwd_end[e.src_part][k] + t);
+    // ---- event-driven replay of the per-rank instruction streams ----
+    // Sends are buffered (never block the sender); the payload becomes
+    // available to the receiver after the link time. Receives wait.
+    let mut pc = vec![0usize; p];
+    let mut clock = vec![0.0f64; p];
+    // (edge, mb, class 0=act 1=err) -> availability time.
+    let mut avail: HashMap<(usize, usize, u8), f64> = HashMap::new();
+    loop {
+        let mut progressed = false;
+        let mut done = true;
+        for r in 0..p {
+            let prog = program.rank(r);
+            while pc[r] < prog.len() {
+                match prog[pc[r]] {
+                    Instr::FwdCompute { node, .. } => {
+                        clock[r] += cm.node_fwd(g, node, cfg.microbatch, cores);
+                    }
+                    Instr::BwdCompute { node, .. } => {
+                        clock[r] += cm.node_bwd(g, node, cfg.microbatch, cores);
+                    }
+                    Instr::SendActivation { edge, mb, .. } => {
+                        avail.insert((edge, mb, 0), clock[r] + edge_secs[edge]);
+                    }
+                    Instr::SendError { edge, mb, .. } => {
+                        // Error payloads retrace the edge in reverse; same
+                        // bytes, same link class.
+                        avail.insert((edge, mb, 1), clock[r] + edge_secs[edge]);
+                    }
+                    Instr::RecvActivation { edge, mb, .. } => {
+                        let Some(&t) = avail.get(&(edge, mb, 0)) else { break };
+                        clock[r] = clock[r].max(t);
+                    }
+                    Instr::RecvError { edge, mb, .. } => {
+                        let Some(&t) = avail.get(&(edge, mb, 1)) else { break };
+                        clock[r] = clock[r].max(t);
+                    }
+                    Instr::DropStash { .. }
+                    | Instr::AllreduceGrads
+                    | Instr::OptStep => {}
+                }
+                pc[r] += 1;
+                progressed = true;
             }
-            let start = stage_free.max(dep);
-            fwd_end[i][k] = start + f[i];
-        }
-    }
-
-    // ---- backward drain (microbatches in reverse, after local fwd) ----
-    let mut bwd_end = vec![vec![0.0f64; m]; p];
-    for (ki, k) in (0..m).rev().enumerate() {
-        for i in (0..p).rev() {
-            let stage_free = if ki > 0 {
-                bwd_end[i][k + 1] // previous processed microbatch (k+1)
-            } else {
-                fwd_end[i][m - 1] // engine finishes all fwd before bwd
-            };
-            let mut dep: f64 = 0.0;
-            for e in pt.sends_of(i) {
-                // Error for edge (i -> d) comes back from d.
-                let bytes = (g.nodes[e.src_node].out_shape.iter().product::<usize>()
-                    * 4
-                    * cfg.microbatch) as f64;
-                let t = edge_time(e.dst_part, e.src_part, bytes);
-                dep = dep.max(bwd_end[e.dst_part][k] + t);
+            if pc[r] < prog.len() {
+                done = false;
             }
-            let start = stage_free.max(dep);
-            bwd_end[i][k] = start + b[i];
         }
+        if done {
+            break;
+        }
+        assert!(
+            progressed,
+            "schedule program stalled in simulation (receive without a \
+             reachable send) — the buffered-send checker should have caught this"
+        );
     }
 
     // ---- gradient allreduce across replicas ----
-    // One communicator per partition (paper §5.3); replicas of partition i
-    // sit ppn apart, so they span nodes whenever a replica doesn't fit in
-    // one node times... placement check: node_of(r, i) varies with r.
+    // One communicator per partition (paper §5.3); inter-node when a
+    // partition's replicas span nodes.
     let mut ar = vec![0.0f64; p];
     if cfg.replicas > 1 {
         for i in 0..p {
@@ -139,25 +146,36 @@ pub fn simulate_step(g: &ModelGraph, pt: &Partitioning, cfg: &SimConfig) -> SimB
         }
     }
 
-    let global_bwd_end = (0..p).map(|i| bwd_end[i][0]).fold(0.0, f64::max);
     let step = if cfg.overlap_allreduce {
         // Each partition launches its allreduce as soon as its own backward
         // drains — overlapping with slower partitions' compute.
-        (0..p).map(|i| bwd_end[i][0] + ar[i]).fold(0.0, f64::max)
+        (0..p).map(|i| clock[i] + ar[i]).fold(0.0, f64::max)
     } else {
         // Plain DP: single fused allreduce of the whole model after the
         // global backward.
+        let global_end = clock.iter().cloned().fold(0.0, f64::max);
         let total_bytes: f64 = (0..p).map(|i| (pt.params_of(g, i) * 4) as f64).sum();
         let inter = cfg.nodes > 1;
-        global_bwd_end + cfg.platform.allreduce(total_bytes, cfg.replicas, inter)
+        global_end + cfg.platform.allreduce(total_bytes, cfg.replicas, inter)
     };
 
+    // Per-partition pure compute totals (for the bubble accounting).
     let bottleneck_compute = (0..p)
-        .map(|i| (f[i] + b[i]) * m as f64)
+        .map(|i| {
+            pt.parts[i]
+                .iter()
+                .map(|&n| {
+                    cm.node_fwd(g, n, cfg.microbatch, cores)
+                        + cm.node_bwd(g, n, cfg.microbatch, cores)
+                })
+                .sum::<f64>()
+                * m as f64
+        })
         .fold(0.0, f64::max);
+
     let mem = (0..p)
         .map(|i| {
-            crate::mem::partition_memory(g, pt, i, cfg.microbatch, m).total()
+            crate::mem::partition_memory_scheduled(g, pt, i, cfg.microbatch, program).total()
         })
         .max()
         .unwrap_or(0);
@@ -172,10 +190,17 @@ pub fn simulate_step(g: &ModelGraph, pt: &Partitioning, cfg: &SimConfig) -> SimB
     }
 }
 
+/// Compile the configured schedule and simulate one step.
+pub fn simulate_step(g: &ModelGraph, pt: &Partitioning, cfg: &SimConfig) -> SimBreakdown {
+    let program = Program::compile(g, pt, cfg.num_microbatches.max(1), cfg.schedule);
+    simulate_program(g, pt, cfg, &program)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::zoo;
+    use crate::schedule::ScheduleKind;
     use crate::sim::Platform;
 
     fn base(parts: usize, m: usize) -> (ModelGraph, Partitioning, SimConfig) {
@@ -246,5 +271,42 @@ mod tests {
         let (g, pt, cfg) = base(2, 4);
         let r = simulate_step(&g, &pt, &cfg);
         assert!(r.mem_bytes > 0);
+    }
+
+    #[test]
+    fn one_f1b_cuts_peak_memory_at_deep_pipelines() {
+        // The acceptance criterion of the schedule-IR refactor: with
+        // num_microbatches > num_partitions, 1F1B's bounded in-flight
+        // window gives strictly lower peak memory than GPipe, while both
+        // replay the same per-microbatch compute.
+        let (g, pt, mut cfg) = base(4, 16);
+        cfg.schedule = ScheduleKind::GPipe;
+        let gp = simulate_step(&g, &pt, &cfg);
+        cfg.schedule = ScheduleKind::OneF1B;
+        let f1b = simulate_step(&g, &pt, &cfg);
+        assert!(
+            f1b.mem_bytes < gp.mem_bytes,
+            "1f1b peak {} must undercut gpipe {}",
+            f1b.mem_bytes,
+            gp.mem_bytes
+        );
+        assert_eq!(f1b.compute_secs, gp.compute_secs, "same work either way");
+    }
+
+    #[test]
+    fn one_f1b_step_time_is_comparable_to_gpipe() {
+        // Both are flush schedules with the same (P-1)-slot bubble; step
+        // times should be within a few percent of each other.
+        let (g, pt, mut cfg) = base(4, 8);
+        let gp = simulate_step(&g, &pt, &cfg);
+        cfg.schedule = ScheduleKind::OneF1B;
+        let f1b = simulate_step(&g, &pt, &cfg);
+        let ratio = f1b.step_secs / gp.step_secs;
+        assert!(
+            (0.8..1.3).contains(&ratio),
+            "1f1b/gpipe step ratio {ratio:.3} ({:.5}s vs {:.5}s)",
+            f1b.step_secs,
+            gp.step_secs
+        );
     }
 }

@@ -10,6 +10,7 @@
 
 use hyparflow::api::{fit, FitResult, Strategy, TrainConfig};
 use hyparflow::graph::zoo;
+use hyparflow::schedule::ScheduleKind;
 
 fn mlp_cfg(strategy: Strategy) -> TrainConfig {
     TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), strategy)
@@ -87,6 +88,66 @@ fn microbatched_mp_matches_microbatched_seq() {
     let seq = fit(&mlp_cfg(Strategy::Sequential).num_microbatches(3)).unwrap();
     let mp = fit(&mlp_cfg(Strategy::Model).partitions(3).num_microbatches(3)).unwrap();
     assert_eq!(max_param_diff(&seq, &mp), 0.0);
+}
+
+#[test]
+fn one_f1b_matches_sequential_exactly() {
+    // Under the 1F1B generator (P=1 degenerates to forward/backward
+    // interleaved per microbatch, ascending), gradient accumulation order
+    // is ascending-microbatch on every stage — so model-parallel 1F1B must
+    // be bitwise equal to sequential execution under the same schedule.
+    let seq = fit(
+        &mlp_cfg(Strategy::Sequential)
+            .num_microbatches(4)
+            .schedule(ScheduleKind::OneF1B),
+    )
+    .unwrap();
+    for p in [2, 3, 4] {
+        let mp = fit(
+            &mlp_cfg(Strategy::Model)
+                .partitions(p)
+                .num_microbatches(4)
+                .schedule(ScheduleKind::OneF1B),
+        )
+        .unwrap();
+        assert_eq!(
+            loss_history(&seq),
+            loss_history(&mp),
+            "1F1B loss history diverged at P={p}"
+        );
+        let d = max_param_diff(&seq, &mp);
+        assert_eq!(d, 0.0, "1F1B P={p}: max param diff {d} (must be bitwise equal)");
+    }
+}
+
+#[test]
+fn one_f1b_resnet_with_skips_matches_sequential_exactly() {
+    // Conv + BN + skip connections crossing partitions, pipelined 1F1B.
+    let seq = fit(
+        &resnet_cfg(Strategy::Sequential)
+            .num_microbatches(3)
+            .schedule(ScheduleKind::OneF1B),
+    )
+    .unwrap();
+    let mp = fit(
+        &resnet_cfg(Strategy::Model)
+            .partitions(4)
+            .num_microbatches(3)
+            .schedule(ScheduleKind::OneF1B),
+    )
+    .unwrap();
+    assert_eq!(loss_history(&seq), loss_history(&mp));
+    assert_eq!(max_param_diff(&seq, &mp), 0.0);
+}
+
+#[test]
+fn schedules_agree_at_single_microbatch() {
+    // With one microbatch there is nothing to reorder: GPipe and 1F1B
+    // compile to the same compute sequence and must produce identical
+    // weights.
+    let a = fit(&mlp_cfg(Strategy::Model).partitions(3).schedule(ScheduleKind::GPipe)).unwrap();
+    let b = fit(&mlp_cfg(Strategy::Model).partitions(3).schedule(ScheduleKind::OneF1B)).unwrap();
+    assert_eq!(max_param_diff(&a, &b), 0.0);
 }
 
 #[test]

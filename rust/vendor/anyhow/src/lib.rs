@@ -1,0 +1,109 @@
+//! Minimal offline stand-in for the `anyhow` crate, covering exactly the
+//! API subset this repository uses: [`Error`], [`Result`], and the
+//! `anyhow!` / `bail!` / `ensure!` macros. The build is fully offline
+//! (no crates.io access), so the real crate cannot be fetched; this
+//! drop-in keeps every call site unchanged.
+//!
+//! Differences from the real crate: no backtraces, no downcasting, no
+//! `Context` trait (unused here). `Error` stores a formatted message and
+//! converts from any `std::error::Error` via `From`, which is what makes
+//! the `?` operator work on io/parse errors throughout the crate.
+
+use std::fmt;
+
+/// A string-backed error type with the `anyhow::Error` surface this repo
+/// needs. Intentionally does NOT implement `std::error::Error`, so the
+/// blanket `From` below cannot conflict with the identity `From<T> for T`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from an already-formatted message (used by the
+    /// `anyhow!` macro).
+    pub fn from_msg(msg: String) -> Error {
+        Error { msg }
+    }
+
+    /// Mirror of `anyhow::Error::msg`.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both print the message (no cause chain here).
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result` with the defaulted error parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::from_msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macro_roundtrip() {
+        fn f(x: i32) -> crate::Result<i32> {
+            crate::ensure!(x > 0, "x must be positive, got {x}");
+            if x == 13 {
+                crate::bail!("unlucky {x}");
+            }
+            Ok(x * 2)
+        }
+        assert_eq!(f(2).unwrap(), 4);
+        assert_eq!(f(-1).unwrap_err().to_string(), "x must be positive, got -1");
+        assert_eq!(f(13).unwrap_err().to_string(), "unlucky 13");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> crate::Result<usize> {
+            let n: usize = "12".parse()?;
+            Ok(n)
+        }
+        assert_eq!(f().unwrap(), 12);
+    }
+}
