@@ -1,0 +1,34 @@
+//! `cargo bench --bench kernel_bench` — scalar vs blocked matmul GFLOP/s
+//! on the ResNet layer shapes behind the simulator's cost model, at 1/2/4
+//! worker threads. Writes `BENCH_kernels.json` (override the path with
+//! `HF_BENCH_OUT`) so the perf trajectory is tracked across PRs.
+//!
+//! Acceptance headline: >= 4x single-thread blocked-over-scalar speedup on
+//! the 256x2304x256 flagship shape, near-linear scaling to 4 threads
+//! (thread scaling is only visible when the machine has the cores — the
+//! JSON records `threads_available` so a 1-core runner's flat curve is
+//! interpretable).
+
+use hyparflow::figures;
+
+fn main() {
+    println!("=== kernel_bench — scalar vs blocked native kernels ===");
+    let cases = figures::kernel_bench(&[1, 2, 4]);
+    figures::kernel_bench_table(&cases).print();
+    if let Some(flag) = cases.iter().find(|c| c.shape.name.contains("flagship")) {
+        println!(
+            "flagship {}: scalar {:.1} GF/s, 1T speedup {:.2}x (target >= 4x)",
+            c_name(flag),
+            flag.scalar_gflops,
+            flag.speedup_1t()
+        );
+    }
+    let json = figures::kernel_bench_json(&cases);
+    let out = std::env::var("HF_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".into());
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("wrote {out}");
+}
+
+fn c_name(c: &figures::KernelBenchCase) -> String {
+    format!("{}x{}x{}", c.shape.m, c.shape.k, c.shape.n)
+}

@@ -62,6 +62,23 @@ fn bench_runtime() {
         rt.exec("denserelu_n16_d4096_m4096.fwd", &[&mx, &mw, &mb]).unwrap();
     });
     t.row(&["denserelu 4096x4096 fwd".into(), fmt_secs(dt), format!("{:.1}", mflops / dt / 1e9)]);
+
+    // Blocked-vs-scalar flagship matmul (the BENCH_kernels.json headline;
+    // full sweep: `cargo bench --bench kernel_bench`).
+    use hyparflow::rng::Rng;
+    use hyparflow::runtime::kernels;
+    let mut rng = Rng::new(1);
+    let ka: Vec<f32> = (0..256 * 2304).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let kb: Vec<f32> = (0..2304 * 256).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let kflops = 2.0 * 256.0 * 2304.0 * 256.0;
+    let dt = time_n(2, || {
+        let _ = kernels::scalar::matmul(&ka, &kb, 256, 2304, 256);
+    });
+    t.row(&["matmul 256x2304x256 scalar".into(), fmt_secs(dt), format!("{:.1}", kflops / dt / 1e9)]);
+    let dt = time_n(8, || {
+        let _ = kernels::matmul(&ka, &kb, 256, 2304, 256);
+    });
+    t.row(&["matmul 256x2304x256 blocked".into(), fmt_secs(dt), format!("{:.1}", kflops / dt / 1e9)]);
     t.print();
 }
 

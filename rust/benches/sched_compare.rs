@@ -1,0 +1,21 @@
+//! `cargo bench --bench sched_compare` — GPipe vs 1F1B on the shared
+//! schedule IR: step time, bubble fraction and peak memory for the default
+//! ResNet-110 scenario (P=4, mb=4, 16 microbatches). Writes
+//! `BENCH_sched.json` (override the path with `HF_BENCH_OUT`); the
+//! narrative lives in EXPERIMENTS.md.
+
+use hyparflow::figures;
+use hyparflow::graph::zoo;
+use hyparflow::sim::Platform;
+
+fn main() {
+    println!("=== sched_compare — GPipe vs 1F1B (simulated, shared IR) ===");
+    let g = zoo::resnet110_v1();
+    let (partitions, mb, num_mb) = (4usize, 4usize, 16usize);
+    let pts = figures::sched_compare_data(&g, &Platform::skylake48(), partitions, mb, num_mb);
+    figures::sched_table(&pts).print();
+    let json = figures::sched_compare_json(&g.name, partitions, mb, num_mb, &pts);
+    let out = std::env::var("HF_BENCH_OUT").unwrap_or_else(|_| "BENCH_sched.json".into());
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("wrote {out}");
+}

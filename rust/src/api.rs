@@ -74,6 +74,10 @@ pub struct TrainConfig {
     /// Dataset override (defaults to a synthetic set matching the model's
     /// input shape and class count).
     pub dataset: Option<SyntheticDataset>,
+    /// Worker threads for the native compute kernels (None = resolve from
+    /// `HF_NATIVE_THREADS`, else an equal share of the machine per rank).
+    /// Kernels are bitwise deterministic in the thread count.
+    pub native_threads: Option<usize>,
 }
 
 impl TrainConfig {
@@ -92,6 +96,7 @@ impl TrainConfig {
             allreduce_algo: AllreduceAlgo::Auto,
             log_every: 0,
             dataset: None,
+            native_threads: None,
         }
     }
 
@@ -161,6 +166,14 @@ impl TrainConfig {
 
     pub fn dataset(mut self, d: SyntheticDataset) -> Self {
         self.dataset = Some(d);
+        self
+    }
+
+    /// Worker threads for the native compute kernels (default: one equal
+    /// share of the machine per rank; `HF_NATIVE_THREADS` overrides the
+    /// default). Results are bitwise identical at any thread count.
+    pub fn native_threads(mut self, t: usize) -> Self {
+        self.native_threads = Some(t);
         self
     }
 
@@ -244,6 +257,17 @@ pub fn fit(cfg: &TrainConfig) -> anyhow::Result<FitResult> {
 
     let t0 = std::time::Instant::now();
     let world_n = p * r;
+    // Kernel worker threads: explicit config > HF_NATIVE_THREADS env > an
+    // equal share of the machine per rank. Thread count never changes
+    // results (kernels are bitwise deterministic), only speed.
+    let threads = cfg
+        .native_threads
+        .or_else(crate::runtime::pool::env_threads)
+        .unwrap_or_else(|| {
+            let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+            (avail / world_n).max(1)
+        });
+    crate::runtime::pool::set_num_threads(threads);
     let outputs: Vec<anyhow::Result<RankOutput>> =
         World::run(world_n, |world| run_rank(cfg, &pt, world, p, &dataset));
     let wall = t0.elapsed().as_secs_f64();

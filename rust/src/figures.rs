@@ -16,12 +16,15 @@
 use crate::graph::{zoo, ModelGraph};
 use crate::mem;
 use crate::partition::Partitioning;
+use crate::rng::Rng;
+use crate::runtime::{kernels, pool};
 use crate::schedule::ScheduleKind;
 use crate::sim::{simulate, simulate_sequential, Platform, SimConfig, SimResult};
-use crate::util::Table;
+use crate::util::{json_array, JsonObj, Table};
 
 /// Best model-parallel configuration for a (model, platform, batch) within
 /// one node-set: sweeps partitions and microbatch size.
+#[allow(clippy::unnecessary_map_or)] // `is_none_or` needs a newer MSRV
 pub fn best_mp(
     g: &ModelGraph,
     platform: &Platform,
@@ -53,6 +56,7 @@ pub fn best_mp(
 
 /// Best data-parallel configuration at equal effective batch: sweeps
 /// replicas over socket/NUMA granularities.
+#[allow(clippy::unnecessary_map_or)] // `is_none_or` needs a newer MSRV
 pub fn best_dp(
     g: &ModelGraph,
     platform: &Platform,
@@ -279,6 +283,19 @@ pub fn fig13_hybrid_128nodes() -> Table {
 // Schedule comparison — GPipe vs 1F1B on the shared IR
 // ---------------------------------------------------------------------------
 
+/// One schedule's row of the GPipe-vs-1F1B comparison (raw values, so the
+/// bench harness can emit them as `BENCH_sched.json` while the table
+/// formatter renders the human view from the same numbers).
+pub struct SchedPoint {
+    pub schedule: &'static str,
+    pub img_per_sec: f64,
+    pub step_secs: f64,
+    pub bubble_secs: f64,
+    pub bubble_frac: f64,
+    pub peak_mem_bytes: u64,
+    pub resident_microbatches: usize,
+}
+
 /// Step time, bubble and peak memory for the same `(model, P, mb, m)` under
 /// both schedule generators. All three numbers come from the *same*
 /// compiled `schedule::Program` the Trainer would execute: the simulator
@@ -286,17 +303,15 @@ pub fn fig13_hybrid_128nodes() -> Table {
 /// the figure that makes the 1F1B memory win visible: identical compute,
 /// identical bubble class, peak activations bounded by pipeline depth
 /// instead of `num_microbatches`.
-pub fn sched_compare(
+pub fn sched_compare_data(
     g: &ModelGraph,
     platform: &Platform,
     partitions: usize,
     mb: usize,
     num_mb: usize,
-) -> Table {
+) -> Vec<SchedPoint> {
     let pt = Partitioning::auto(g, partitions).expect("partitionable");
-    let mut t = Table::new(&[
-        "schedule", "img/s", "step (s)", "bubble (s)", "peak mem", "resident mb",
-    ]);
+    let mut points = vec![];
     for sched in [ScheduleKind::GPipe, ScheduleKind::OneF1B] {
         let mut cfg = SimConfig::new(platform.clone(), partitions, 1);
         cfg.ppn = partitions;
@@ -307,22 +322,276 @@ pub fn sched_compare(
         // the residency column, so the row cannot mix two compilations.
         let prog = crate::schedule::Program::compile(g, &pt, num_mb, sched);
         let b = crate::sim::simulate_program(g, &pt, &cfg, &prog);
+        points.push(SchedPoint {
+            schedule: sched.name(),
+            img_per_sec: cfg.effective_batch() as f64 / b.step_secs,
+            step_secs: b.step_secs,
+            bubble_secs: b.bubble_secs,
+            bubble_frac: b.bubble_secs / b.step_secs.max(1e-30),
+            peak_mem_bytes: b.mem_bytes,
+            resident_microbatches: prog.max_peak_resident_microbatches(),
+        });
+    }
+    points
+}
+
+/// Render [`sched_compare_data`] points as the comparison table.
+pub fn sched_table(points: &[SchedPoint]) -> Table {
+    let mut t = Table::new(&[
+        "schedule", "img/s", "step (s)", "bubble (s)", "peak mem", "resident mb",
+    ]);
+    for p in points {
         t.row(&[
-            sched.name().into(),
-            f1(cfg.effective_batch() as f64 / b.step_secs),
-            format!("{:.4}", b.step_secs),
-            format!("{:.4}", b.bubble_secs),
-            crate::util::fmt_bytes(b.mem_bytes),
-            prog.max_peak_resident_microbatches().to_string(),
+            p.schedule.into(),
+            f1(p.img_per_sec),
+            format!("{:.4}", p.step_secs),
+            format!("{:.4}", p.bubble_secs),
+            crate::util::fmt_bytes(p.peak_mem_bytes),
+            p.resident_microbatches.to_string(),
         ]);
     }
     t
+}
+
+/// Table form of the schedule comparison (data + formatting in one call).
+pub fn sched_compare(
+    g: &ModelGraph,
+    platform: &Platform,
+    partitions: usize,
+    mb: usize,
+    num_mb: usize,
+) -> Table {
+    sched_table(&sched_compare_data(g, platform, partitions, mb, num_mb))
+}
+
+/// `BENCH_sched.json` payload for a set of schedule points.
+pub fn sched_compare_json(
+    model: &str,
+    partitions: usize,
+    mb: usize,
+    num_mb: usize,
+    points: &[SchedPoint],
+) -> String {
+    let rows = json_array(points.iter().map(|p| {
+        JsonObj::new()
+            .str("schedule", p.schedule)
+            .num("img_per_sec", p.img_per_sec)
+            .num("step_secs", p.step_secs)
+            .num("bubble_secs", p.bubble_secs)
+            .num("bubble_frac", p.bubble_frac)
+            .int("peak_mem_bytes", p.peak_mem_bytes)
+            .int("resident_microbatches", p.resident_microbatches as u64)
+            .build()
+    }));
+    JsonObj::new()
+        .str("bench", "sched_compare")
+        .str("model", model)
+        .int("partitions", partitions as u64)
+        .int("microbatch", mb as u64)
+        .int("num_microbatches", num_mb as u64)
+        .raw("rows", &rows)
+        .build()
 }
 
 /// Default schedule-comparison scenario: ResNet-110, 4 partitions, deep
 /// pipeline (num_microbatches = 4 x partitions).
 pub fn fig_sched_memory() -> Table {
     sched_compare(&zoo::resnet110_v1(), &Platform::skylake48(), 4, 4, 16)
+}
+
+// ---------------------------------------------------------------------------
+// Kernel benchmark — scalar vs blocked GFLOP/s on ResNet layer shapes
+// ---------------------------------------------------------------------------
+
+/// One im2col-matmul shape: `[m, k] @ [k, n]` where `m = N*Ho*Wo`,
+/// `k = C*kk*kk` (patch features), `n = K` (output channels).
+pub struct KernelShape {
+    pub name: &'static str,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// The matmul shapes behind the simulator's cost model: the three
+/// conv3x3 stages of ResNet-110 on 32x32 inputs at microbatch 8, plus the
+/// flagship 256x2304x256 shape (a 3x3 conv at 256 channels on a 16x16
+/// feature map, mb=1) the acceptance criterion tracks across PRs.
+pub fn kernel_bench_shapes() -> Vec<KernelShape> {
+    vec![
+        KernelShape { name: "resnet110 conv3x3 c16 32x32 mb8", m: 8192, k: 144, n: 16 },
+        KernelShape { name: "resnet110 conv3x3 c32 16x16 mb8", m: 2048, k: 288, n: 32 },
+        KernelShape { name: "resnet110 conv3x3 c64 8x8 mb8", m: 512, k: 576, n: 64 },
+        KernelShape { name: "flagship conv3x3 c256 16x16 mb1", m: 256, k: 2304, n: 256 },
+    ]
+}
+
+/// Measured rates for one shape: the scalar baseline and the blocked
+/// kernel at each requested thread count.
+pub struct KernelBenchCase {
+    pub shape: KernelShape,
+    pub flops: f64,
+    pub scalar_gflops: f64,
+    /// (threads, GFLOP/s) per requested thread count.
+    pub blocked_gflops: Vec<(usize, f64)>,
+}
+
+impl KernelBenchCase {
+    /// Single-thread blocked speedup over the scalar baseline (the
+    /// acceptance metric: >= 4x on the flagship shape).
+    pub fn speedup_1t(&self) -> f64 {
+        self.blocked_gflops
+            .iter()
+            .find(|p| p.0 == 1)
+            .map(|p| p.1 / self.scalar_gflops)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Best-of-3 wall time per call for a closure (after one warmup call).
+fn time_best(reps: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup: page in buffers, settle the branch predictors
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / reps as f64);
+    }
+    best
+}
+
+/// Measure scalar-vs-blocked matmul GFLOP/s over [`kernel_bench_shapes`]
+/// at each thread count in `thread_counts`. Restores the pool's previous
+/// thread setting before returning.
+pub fn kernel_bench(thread_counts: &[usize]) -> Vec<KernelBenchCase> {
+    let prev = pool::num_threads();
+    let mut cases = vec![];
+    for shape in kernel_bench_shapes() {
+        let (m, k, n) = (shape.m, shape.k, shape.n);
+        let mut rng = Rng::new(0x6b65726e);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let flops = 2.0 * (m * k * n) as f64;
+        // Aim each timing loop at ~0.2 GFLOP of work so small shapes get
+        // enough reps to be measurable without stalling large ones.
+        let reps = ((2e8 / flops).ceil() as usize).clamp(1, 64);
+        pool::set_num_threads(1);
+        let dt = time_best(reps, || {
+            let _ = kernels::scalar::matmul(&a, &b, m, k, n);
+        });
+        let scalar_gflops = flops / dt / 1e9;
+        let mut blocked_gflops = vec![];
+        for &t in thread_counts {
+            pool::set_num_threads(t);
+            let dt = time_best(reps, || {
+                let _ = kernels::matmul(&a, &b, m, k, n);
+            });
+            blocked_gflops.push((t, flops / dt / 1e9));
+        }
+        cases.push(KernelBenchCase { shape, flops, scalar_gflops, blocked_gflops });
+    }
+    pool::set_num_threads(prev);
+    cases
+}
+
+/// Render kernel-bench cases as a table (one speedup column per measured
+/// thread count).
+pub fn kernel_bench_table(cases: &[KernelBenchCase]) -> Table {
+    let mut headers: Vec<String> = vec!["shape".into(), "m x k x n".into(), "scalar GF/s".into()];
+    if let Some(first) = cases.first() {
+        for (t, _) in &first.blocked_gflops {
+            headers.push(format!("blocked@{t}T"));
+        }
+    }
+    headers.push("1T speedup".into());
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    for c in cases {
+        let mut row = vec![
+            c.shape.name.to_string(),
+            format!("{}x{}x{}", c.shape.m, c.shape.k, c.shape.n),
+            f1(c.scalar_gflops),
+        ];
+        for (_, gf) in &c.blocked_gflops {
+            row.push(f1(*gf));
+        }
+        row.push(format!("{:.2}x", c.speedup_1t()));
+        t.row(&row);
+    }
+    t
+}
+
+/// `BENCH_kernels.json` payload: GFLOP/s per shape per thread count, the
+/// SIMD backend in use, and the machine's available parallelism (so a
+/// 1-core CI runner's flat scaling curve is interpretable).
+pub fn kernel_bench_json(cases: &[KernelBenchCase]) -> String {
+    let threads_available =
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let cases_json = json_array(cases.iter().map(|c| {
+        let blocked = json_array(c.blocked_gflops.iter().map(|(t, gf)| {
+            JsonObj::new().int("threads", *t as u64).num("gflops", *gf).build()
+        }));
+        JsonObj::new()
+            .str("name", c.shape.name)
+            .int("m", c.shape.m as u64)
+            .int("k", c.shape.k as u64)
+            .int("n", c.shape.n as u64)
+            .num("flops", c.flops)
+            .num("scalar_gflops", c.scalar_gflops)
+            .raw("blocked", &blocked)
+            .num("speedup_1t", c.speedup_1t())
+            .build()
+    }));
+    JsonObj::new()
+        .str("bench", "kernels")
+        .str("simd", kernels::simd_backend())
+        .int("threads_available", threads_available as u64)
+        .raw("cases", &cases_json)
+        .build()
+}
+
+// ---------------------------------------------------------------------------
+// Cost-model calibration — measure this host's kernels for the simulator
+// ---------------------------------------------------------------------------
+
+/// Measure the dispatch floor and sustained conv rate of the native
+/// executor on this host and return the calibration table text consumed by
+/// `sim::CostModel::apply_calibration` (`hyparflow calibrate`, and
+/// `hyparflow sim --calibrate` which feeds it straight into the run).
+pub fn measure_calibration() -> anyhow::Result<String> {
+    use crate::runtime::Runtime;
+    use crate::tensor::Tensor;
+    let rt = Runtime::open(crate::api::default_artifacts_dir())?;
+
+    // Dispatch floor: tiny op, many reps.
+    let x = Tensor::zeros(&[2, 4]);
+    rt.exec("relu2_n2_d4.fwd", &[&x])?;
+    let t0 = std::time::Instant::now();
+    let n = 300;
+    for _ in 0..n {
+        rt.exec("relu2_n2_d4.fwd", &[&x])?;
+    }
+    let dispatch = t0.elapsed().as_secs_f64() / n as f64;
+
+    // Sustained rate from the ResNet workhorse conv (mb=8).
+    let cx = Tensor::zeros(&[8, 16, 32, 32]);
+    let cw = Tensor::zeros(&[16, 16, 3, 3]);
+    let flops = 2.0 * 16.0 * 16.0 * 9.0 * 32.0 * 32.0 * 8.0;
+    rt.exec("conv3x3_n8_c16_k16_h32_w32_s1.fwd", &[&cx, &cw])?;
+    let t0 = std::time::Instant::now();
+    let n = 30;
+    for _ in 0..n {
+        rt.exec("conv3x3_n8_c16_k16_h32_w32_s1.fwd", &[&cx, &cw])?;
+    }
+    let per = t0.elapsed().as_secs_f64() / n as f64;
+    let core_rate = flops / (per - dispatch).max(1e-9);
+
+    Ok(format!(
+        "# hyparflow calibration (native-kernel measurements on this host)\n\
+         # dispatch: tiny-op round trip; core_rate: conv3x3 16ch mb8\n\
+         dispatch {dispatch:.6e}\ncore_rate {core_rate:.6e}\n"
+    ))
 }
 
 // ---------------------------------------------------------------------------
@@ -421,6 +690,57 @@ mod tests {
         cfg.schedule = ScheduleKind::OneF1B;
         let b = simulate(&g, &pt, &cfg).breakdown.mem_bytes;
         assert!(b < a, "1f1b {b} !< gpipe {a}");
+    }
+
+    #[test]
+    fn kernel_bench_shapes_include_flagship() {
+        let shapes = kernel_bench_shapes();
+        assert!(
+            shapes.iter().any(|s| (s.m, s.k, s.n) == (256, 2304, 256)),
+            "the 256x2304x256 acceptance shape must be tracked"
+        );
+    }
+
+    // Formatting-only checks on hand-built cases: the measuring
+    // `kernel_bench` run lives in `cargo bench --bench kernel_bench`
+    // (it drives the global thread knob, which unit tests must not).
+    fn fake_case() -> KernelBenchCase {
+        KernelBenchCase {
+            shape: KernelShape { name: "flagship conv3x3 c256 16x16 mb1", m: 256, k: 2304, n: 256 },
+            flops: 2.0 * 256.0 * 2304.0 * 256.0,
+            scalar_gflops: 2.0,
+            blocked_gflops: vec![(1, 9.0), (2, 17.0), (4, 33.0)],
+        }
+    }
+
+    #[test]
+    fn kernel_bench_formatting() {
+        let cases = [fake_case()];
+        assert!((cases[0].speedup_1t() - 4.5).abs() < 1e-12);
+        let s = kernel_bench_table(&cases).to_string();
+        assert!(s.contains("blocked@4T"), "{s}");
+        assert!(s.contains("4.50x"), "{s}");
+        let j = kernel_bench_json(&cases);
+        assert!(j.contains("\"bench\":\"kernels\""), "{j}");
+        assert!(j.contains("\"m\":256"), "{j}");
+        assert!(j.contains("\"threads\":4"), "{j}");
+        assert!(j.contains("\"speedup_1t\":4.5"), "{j}");
+    }
+
+    #[test]
+    fn sched_json_has_expected_keys() {
+        let pts = sched_compare_data(&zoo::resnet110_v1(), &Platform::skylake48(), 4, 4, 16);
+        let j = sched_compare_json("resnet110", 4, 4, 16, &pts);
+        for key in [
+            "\"bench\":\"sched_compare\"",
+            "\"schedule\":\"gpipe\"",
+            "\"schedule\":\"1f1b\"",
+            "\"bubble_frac\"",
+            "\"peak_mem_bytes\"",
+            "\"resident_microbatches\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
     }
 
     #[test]

@@ -49,7 +49,16 @@
 //!   artifacts compiled by `python/compile/aot.py` from the JAX/Pallas
 //!   primitives in `python/compile/`) is replaced in the offline build by
 //!   a native CPU executor implementing the identical primitive contract;
-//!   artifact names remain the interface.
+//!   artifact names remain the interface. Its hot math lives in
+//!   [`runtime::kernels`]: cache-blocked, register-tiled matmul (packed B
+//!   panels, 6x16 microkernel, runtime-detected AVX2 with a portable
+//!   autovectorized fallback) and row-/plane-parallel im2col/conv/dense
+//!   over the scoped-thread [`runtime::pool`]. Thread count is a knob
+//!   (`TrainConfig::native_threads` / `--threads` / `HF_NATIVE_THREADS`),
+//!   never a result-changer: every kernel is bitwise identical to its
+//!   scalar reference at any thread count (no FMA, accumulation order
+//!   preserved per output element — the determinism contract the
+//!   equivalence tests stand on).
 //! - [`data`], [`mem`], [`sim`], [`figures`] — synthetic CIFAR-like
 //!   dataset, memory model, calibrated cluster simulator, and the paper's
 //!   figure/table regeneration.

@@ -53,10 +53,12 @@ fn print_usage() {
          train:    --model M --strategy seq|model|data|hybrid --partitions P\n\
          \x20         --replicas R --steps N --mb B --num-mb K --sched gpipe|1f1b\n\
          \x20         --lr F --seed S --log-every N --eval N --lpp a,b,c\n\
+         \x20         --threads T (kernel worker threads; HF_NATIVE_THREADS)\n\
          inspect:  --model M [--partitions P] [--emit-registry] [--mb B]\n\
          sim:      --model M --nodes N --ppn P --partitions K --replicas R\n\
          \x20         --mb B --num-mb K --sched gpipe|1f1b\n\
          \x20         --platform skylake|epyc [--calib FILE]\n\
+         \x20         [--calibrate [--calib-out FILE]]  (measure, then simulate)\n\
          calibrate: [--out FILE] [--mb B]\n\
          mem:      --model M [--mb B] [--partitions P]\n\
          \x20         [--num-mb K --sched gpipe|1f1b]  (schedule-aware report)"
@@ -130,6 +132,10 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
             .collect::<Result<_, _>>()
             .map_err(|e| anyhow::anyhow!("--lpp: {e}"))?;
         cfg = cfg.lpp(v);
+    }
+    if let Some(t) = f.kv.get("threads") {
+        cfg = cfg
+            .native_threads(t.parse().map_err(|e| anyhow::anyhow!("--threads {t}: {e}"))?);
     }
     let (p, r) = cfg.effective_topology();
     println!(
@@ -252,7 +258,17 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
     cfg.num_microbatches = f.get("num-mb", 8)?;
     cfg.schedule = hyparflow::schedule::ScheduleKind::parse(&f.str("sched", "gpipe"))?;
     cfg.overlap_allreduce = !f.has("no-overlap");
-    if let Some(path) = f.kv.get("calib") {
+    if f.has("calibrate") {
+        // Measure this host's kernels, persist the cost table, and feed it
+        // straight into the simulation (satellite of the kernel-perf PR:
+        // simulator constants track the real executor).
+        let text = hyparflow::figures::measure_calibration()?;
+        let out = f.str("calib-out", "calibration.txt");
+        std::fs::write(&out, &text)?;
+        print!("{text}");
+        println!("wrote {out}");
+        cfg.cost.apply_calibration(&text)?;
+    } else if let Some(path) = f.kv.get("calib") {
         let text = std::fs::read_to_string(path)?;
         cfg.cost.apply_calibration(&text)?;
     }
@@ -278,40 +294,9 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_calibrate(args: &[String]) -> anyhow::Result<()> {
-    use hyparflow::runtime::Runtime;
-    use hyparflow::tensor::Tensor;
     let f = Flags::parse(args)?;
     let out = f.str("out", "calibration.txt");
-    let rt = Runtime::open(hyparflow::api::default_artifacts_dir())?;
-
-    // Dispatch floor: tiny op, many reps.
-    let x = Tensor::zeros(&[2, 4]);
-    rt.exec("relu2_n2_d4.fwd", &[&x])?;
-    let t0 = std::time::Instant::now();
-    let n = 300;
-    for _ in 0..n {
-        rt.exec("relu2_n2_d4.fwd", &[&x])?;
-    }
-    let dispatch = t0.elapsed().as_secs_f64() / n as f64;
-
-    // Sustained rate from the ResNet workhorse conv (mb=8).
-    let cx = Tensor::zeros(&[8, 16, 32, 32]);
-    let cw = Tensor::zeros(&[16, 16, 3, 3]);
-    let flops = 2.0 * 16.0 * 16.0 * 9.0 * 32.0 * 32.0 * 8.0;
-    rt.exec("conv3x3_n8_c16_k16_h32_w32_s1.fwd", &[&cx, &cw])?;
-    let t0 = std::time::Instant::now();
-    let n = 30;
-    for _ in 0..n {
-        rt.exec("conv3x3_n8_c16_k16_h32_w32_s1.fwd", &[&cx, &cw])?;
-    }
-    let per = t0.elapsed().as_secs_f64() / n as f64;
-    let core_rate = flops / (per - dispatch).max(1e-9);
-
-    let text = format!(
-        "# hyparflow calibration (host PJRT-CPU measurements)\n\
-         # dispatch: tiny-op round trip; core_rate: conv3x3 16ch mb8\n\
-         dispatch {dispatch:.6e}\ncore_rate {core_rate:.6e}\n"
-    );
+    let text = hyparflow::figures::measure_calibration()?;
     std::fs::write(&out, &text)?;
     println!("{text}wrote {out}");
     Ok(())

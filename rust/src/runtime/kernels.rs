@@ -1,0 +1,839 @@
+//! Blocked, register-tiled, multi-threaded compute kernels for the native
+//! executor — the single hottest path in the crate (every FwdCompute /
+//! BwdCompute in the schedule IR bottoms out here).
+//!
+//! # Blocking strategy
+//!
+//! `matmul` is a GotoBLAS-style panel kernel: B is packed once into
+//! KC-row, NR-column panels (one panel is `KC*NR*4` = 16 KiB, L1-resident
+//! while a row tile streams over it), and an MR x NR register-tiled
+//! microkernel accumulates `plen` rank-1 updates per k-block. The generic
+//! microkernel is written so LLVM keeps the MR x NR accumulator tile in
+//! vector registers (const-generic row count, fixed NR lanes); on x86-64
+//! an explicit AVX2 6x16 microkernel is selected by runtime CPU detection,
+//! with the autovectorized generic path as the fallback on older CPUs and
+//! other architectures. `matmul_tn` (`a^T @ b`) is a cache-blocked
+//! transpose followed by the same blocked `matmul`. `im2col`, `col2im`,
+//! the conv layout permutes, and the dense epilogues are parallelized over
+//! rows / planes via [`super::pool`].
+//!
+//! # Determinism contract (load-bearing)
+//!
+//! Every kernel is **bitwise identical** to the scalar reference in
+//! [`scalar`] at any thread count. The sequential-vs-parallel training
+//! equivalence tests stand on this. Three rules make it hold:
+//!
+//! 1. **Accumulation order per output element never changes.** The
+//!    microkernel loads its accumulator tile *from the current output*,
+//!    adds the k-block's contributions in ascending-k order, and stores it
+//!    back; k-blocks run in ascending order. Each output element therefore
+//!    sees the exact `((0 + a0*b0) + a1*b1) + ...` chain of the scalar
+//!    i-k-j loop. (Zero-init + add-back would reassociate — forbidden.)
+//! 2. **No FMA.** Rust never contracts `a * b + c`, and the AVX2 path uses
+//!    `_mm256_mul_ps` + `_mm256_add_ps` rather than `_mm256_fmadd_ps`: a
+//!    fused multiply-add rounds once where the scalar reference rounds
+//!    twice, which would break bit-parity.
+//! 3. **Parallelism only over disjoint outputs.** Threads own disjoint
+//!    row/plane spans of the output; SIMD lanes map to distinct columns.
+//!    Nothing ever splits a single element's reduction.
+//!
+//! Small problems run serially (see `PAR_MIN_*`): the cutoff depends only
+//! on the problem size, never on data or thread count, so it is part of
+//! the deterministic contract rather than a violation of it.
+
+use super::pool;
+use crate::tensor::{Shape, Tensor};
+
+/// Microkernel register tile: MR output rows x NR output columns.
+/// 6 x 16 f32 = twelve 8-lane vectors of accumulator — with a broadcast
+/// register and two panel loads this exactly fills the 16 ymm registers
+/// of an AVX2 core (the classic 6x16 sgemm tile).
+pub const MR: usize = 6;
+pub const NR: usize = 16;
+/// k-dimension block: one packed panel is `KC * NR` floats (16 KiB).
+pub const KC: usize = 256;
+
+/// Minimum `m*k*n` for a threaded matmul; below this the spawn cost
+/// (tens of microseconds) exceeds the work. Size-only: deterministic.
+const PAR_MIN_FLOPS: usize = 1 << 18;
+/// Minimum element count for threaded copy/permute/scatter passes.
+const PAR_MIN_ELEMS: usize = 1 << 16;
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernels
+// ---------------------------------------------------------------------------
+
+/// The original single-threaded scalar kernels, kept verbatim as the
+/// bitwise reference for the blocked implementations (equivalence tests in
+/// `rust/tests/kernel_equivalence.rs`) and as the baseline the kernel
+/// benchmark measures speedups against.
+pub mod scalar {
+    use crate::tensor::{Shape, Tensor};
+
+    /// `a [m,k] @ b [k,n]` with i-k-j loop order (deterministic).
+    pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `a^T @ b` for `a [m,k]`, `b [m,n]` -> `[k,n]` (accumulates over
+    /// rows of both, ascending).
+    pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; k * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                let orow = &mut out[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Patch matrix [N*Ho*Wo, C*kk*kk]; feature index = (c*kk + dy)*kk + dx
+    /// — the OIHW-flatten ordering `model.py::_patches` produces.
+    pub fn im2col(x: &Tensor, kk: usize, stride: usize) -> (Vec<f32>, usize, usize) {
+        let d = x.shape.dims();
+        let (n, c, h, w) = (d[0], d[1], d[2], d[3]);
+        let pad = kk / 2;
+        let (ho, wo) = (h.div_ceil(stride), w.div_ceil(stride));
+        let f = c * kk * kk;
+        let mut out = vec![0.0f32; n * ho * wo * f];
+        for nn in 0..n {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let row = ((nn * ho + oy) * wo + ox) * f;
+                    for ci in 0..c {
+                        for dy in 0..kk {
+                            let iy = (oy * stride + dy) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let xbase = ((nn * c + ci) * h + iy as usize) * w;
+                            for dx in 0..kk {
+                                let ix = (ox * stride + dx) as isize - pad as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                out[row + (ci * kk + dy) * kk + dx] = x.data[xbase + ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (out, ho, wo)
+    }
+
+    /// Scatter-add the patch-matrix gradient back into input layout (the
+    /// VJP of `im2col`). Deterministic ascending iteration.
+    pub fn col2im(
+        gp: &[f32],
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        kk: usize,
+        stride: usize,
+    ) -> Tensor {
+        let pad = kk / 2;
+        let (ho, wo) = (h.div_ceil(stride), w.div_ceil(stride));
+        let f = c * kk * kk;
+        let mut gx = vec![0.0f32; n * c * h * w];
+        for nn in 0..n {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let row = ((nn * ho + oy) * wo + ox) * f;
+                    for ci in 0..c {
+                        for dy in 0..kk {
+                            let iy = (oy * stride + dy) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            let xbase = ((nn * c + ci) * h + iy as usize) * w;
+                            for dx in 0..kk {
+                                let ix = (ox * stride + dx) as isize - pad as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                gx[xbase + ix as usize] += gp[row + (ci * kk + dy) * kk + dx];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::new(Shape::new(&[n, c, h, w]), gx)
+    }
+
+    pub fn conv2d_fwd(x: &Tensor, w: &Tensor, kk: usize, stride: usize) -> Tensor {
+        let xd = x.shape.dims();
+        let (n, c) = (xd[0], xd[1]);
+        let kout = w.shape.dims()[0];
+        let f = c * kk * kk;
+        let (pmat, ho, wo) = im2col(x, kk, stride);
+        // wmat = w.reshape(k, f).T -> [f, k]
+        let mut wt = vec![0.0f32; f * kout];
+        for ko in 0..kout {
+            for fi in 0..f {
+                wt[fi * kout + ko] = w.data[ko * f + fi];
+            }
+        }
+        let ymat = matmul(&pmat, &wt, n * ho * wo, f, kout); // [M, K]
+        // [M, K] -> NCHW
+        let mut y = vec![0.0f32; n * kout * ho * wo];
+        for nn in 0..n {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let row = ((nn * ho + oy) * wo + ox) * kout;
+                    for ko in 0..kout {
+                        y[((nn * kout + ko) * ho + oy) * wo + ox] = ymat[row + ko];
+                    }
+                }
+            }
+        }
+        Tensor::new(Shape::new(&[n, kout, ho, wo]), y)
+    }
+
+    pub fn conv2d_bwd(
+        x: &Tensor,
+        w: &Tensor,
+        gy: &Tensor,
+        kk: usize,
+        stride: usize,
+    ) -> (Tensor, Tensor) {
+        let xd = x.shape.dims();
+        let (n, c, h, wd) = (xd[0], xd[1], xd[2], xd[3]);
+        let kout = w.shape.dims()[0];
+        let f = c * kk * kk;
+        let gyd = gy.shape.dims();
+        let (ho, wo) = (gyd[2], gyd[3]);
+        let mrows = n * ho * wo;
+        let (pmat, _, _) = im2col(x, kk, stride);
+        // gy NCHW -> [M, K]
+        let mut gymat = vec![0.0f32; mrows * kout];
+        for nn in 0..n {
+            for ko in 0..kout {
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        gymat[(((nn * ho + oy) * wo + ox) * kout) + ko] =
+                            gy.data[((nn * kout + ko) * ho + oy) * wo + ox];
+                    }
+                }
+            }
+        }
+        // gw = pmat^T @ gymat : [F, K] -> transpose-reshape to [K, C, kk, kk].
+        let gwmat = matmul_tn(&pmat, &gymat, mrows, f, kout);
+        let mut gw = vec![0.0f32; kout * f];
+        for fi in 0..f {
+            for ko in 0..kout {
+                gw[ko * f + fi] = gwmat[fi * kout + ko];
+            }
+        }
+        // gpatches = gymat @ w.reshape(k, f) : [M, F] -> col2im.
+        let gpmat = matmul(&gymat, &w.data, mrows, kout, f);
+        let gx = col2im(&gpmat, n, c, h, wd, kk, stride);
+        (gx, Tensor::new(w.shape.clone(), gw))
+    }
+
+    pub fn dense_fwd(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Tensor {
+        let (n, d) = (x.shape.dims()[0], x.shape.dims()[1]);
+        let m = w.shape.dims()[1];
+        let mut y = matmul(&x.data, &w.data, n, d, m);
+        for row in 0..n {
+            for j in 0..m {
+                let v = y[row * m + j] + b.data[j];
+                y[row * m + j] = if relu { v.max(0.0) } else { v };
+            }
+        }
+        Tensor::new(Shape::new(&[n, m]), y)
+    }
+
+    pub fn dense_bwd(x: &Tensor, w: &Tensor, gy: &Tensor) -> (Tensor, Tensor, Tensor) {
+        let (n, d) = (x.shape.dims()[0], x.shape.dims()[1]);
+        let m = w.shape.dims()[1];
+        // gx = gy @ w^T : [N, D]
+        let mut wt = vec![0.0f32; m * d];
+        for di in 0..d {
+            for mi in 0..m {
+                wt[mi * d + di] = w.data[di * m + mi];
+            }
+        }
+        let gx = matmul(&gy.data, &wt, n, m, d);
+        // gw = x^T @ gy : [D, M]
+        let gw = matmul_tn(&x.data, &gy.data, n, d, m);
+        // gb = column sums of gy.
+        let mut gb = vec![0.0f32; m];
+        for row in 0..n {
+            for j in 0..m {
+                gb[j] += gy.data[row * m + j];
+            }
+        }
+        (
+            Tensor::new(Shape::new(&[n, d]), gx),
+            Tensor::new(Shape::new(&[d, m]), gw),
+            Tensor::new(Shape::new(&[m]), gb),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD backend selection
+// ---------------------------------------------------------------------------
+
+/// Is the AVX2 microkernel usable on this CPU? (Runtime detection; the
+/// result is cached by the std macro.)
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_enabled() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+/// Non-x86-64 targets always use the portable autovectorized microkernel.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_enabled() -> bool {
+    false
+}
+
+/// Human-readable name of the active microkernel backend (for bench JSON).
+pub fn simd_backend() -> &'static str {
+    if avx2_enabled() {
+        "avx2"
+    } else {
+        "portable"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packing and microkernels
+// ---------------------------------------------------------------------------
+
+/// Cache-blocked out-of-place transpose: `src [rows, cols]` -> `[cols, rows]`.
+fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    const TB: usize = 32;
+    let mut dst = vec![0.0f32; rows * cols];
+    for rb in (0..rows).step_by(TB) {
+        for cb in (0..cols).step_by(TB) {
+            for r in rb..rows.min(rb + TB) {
+                for c in cb..cols.min(cb + TB) {
+                    dst[c * rows + r] = src[r * cols + c];
+                }
+            }
+        }
+    }
+    dst
+}
+
+/// Pack `b [k,n]` into KC-blocked, NR-wide panels: element (p, j) of
+/// k-block `kb`, panel `jp` lives at `((kb*npanels + jp)*KC + p)*NR + j`.
+/// Column tails are zero-padded to NR (the microkernel computes the padded
+/// lanes but never stores them); row tails are simply not iterated.
+fn pack_b(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    let npanels = n.div_ceil(NR);
+    let nblocks = k.div_ceil(KC);
+    let mut out = vec![0.0f32; nblocks * npanels * KC * NR];
+    for kb in 0..nblocks {
+        let p0 = kb * KC;
+        let plen = KC.min(k - p0);
+        for jp in 0..npanels {
+            let j0 = jp * NR;
+            let jlen = NR.min(n - j0);
+            let base = (kb * npanels + jp) * (KC * NR);
+            for p in 0..plen {
+                let src = &b[(p0 + p) * n + j0..(p0 + p) * n + j0 + jlen];
+                out[base + p * NR..base + p * NR + jlen].copy_from_slice(src);
+            }
+        }
+    }
+    out
+}
+
+/// Portable microkernel: accumulate `plen` rank-1 updates into a
+/// ROWS x NR register tile. The accumulator is initialized *from the
+/// current output* and stored back, so the per-element addition chain is
+/// exactly the scalar one (rule 1 of the determinism contract). Lanes
+/// beyond `jlen` accumulate against the panel's zero padding and are
+/// never stored. `ar0` indexes rows of `a` (absolute); `or0` indexes rows
+/// of `out` (chunk-local).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn mk_generic<const ROWS: usize>(
+    a: &[f32],
+    lda: usize,
+    ar0: usize,
+    p0: usize,
+    plen: usize,
+    panel: &[f32],
+    out: &mut [f32],
+    ldo: usize,
+    or0: usize,
+    j0: usize,
+    jlen: usize,
+) {
+    let mut acc = [[0.0f32; NR]; ROWS];
+    for r in 0..ROWS {
+        let orow = &out[(or0 + r) * ldo + j0..(or0 + r) * ldo + j0 + jlen];
+        acc[r][..jlen].copy_from_slice(orow);
+    }
+    for p in 0..plen {
+        let prow = &panel[p * NR..(p + 1) * NR];
+        for r in 0..ROWS {
+            let av = a[(ar0 + r) * lda + p0 + p];
+            for (o, &bv) in acc[r].iter_mut().zip(prow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    for r in 0..ROWS {
+        out[(or0 + r) * ldo + j0..(or0 + r) * ldo + j0 + jlen].copy_from_slice(&acc[r][..jlen]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{MR, NR};
+    use std::arch::x86_64::*;
+
+    /// AVX2 MR x 16 microkernel (full tiles only). Uses separate
+    /// `_mm256_mul_ps` + `_mm256_add_ps` — never `_mm256_fmadd_ps` — so
+    /// each lane performs the same round-twice mul-then-add as the scalar
+    /// reference (rule 2 of the determinism contract).
+    ///
+    /// # Safety
+    ///
+    /// Caller must guarantee AVX2 is available (runtime-detected), rows
+    /// `ar0..ar0+MR` x cols `p0..p0+plen` are in bounds of `a` (row stride
+    /// `lda`), `panel` holds at least `plen * NR` floats, and rows
+    /// `or0..or0+MR` x cols `j0..j0+NR` are in bounds of `out` (row
+    /// stride `ldo`).
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mk_avx2(
+        a: &[f32],
+        lda: usize,
+        ar0: usize,
+        p0: usize,
+        plen: usize,
+        panel: &[f32],
+        out: &mut [f32],
+        ldo: usize,
+        or0: usize,
+        j0: usize,
+    ) {
+        let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+        for r in 0..MR {
+            let o = out.as_ptr().add((or0 + r) * ldo + j0);
+            acc[r][0] = _mm256_loadu_ps(o);
+            acc[r][1] = _mm256_loadu_ps(o.add(8));
+        }
+        let ap = a.as_ptr();
+        let pp = panel.as_ptr();
+        for p in 0..plen {
+            let b0 = _mm256_loadu_ps(pp.add(p * NR));
+            let b1 = _mm256_loadu_ps(pp.add(p * NR + 8));
+            for r in 0..MR {
+                let av = _mm256_set1_ps(*ap.add((ar0 + r) * lda + p0 + p));
+                acc[r][0] = _mm256_add_ps(acc[r][0], _mm256_mul_ps(av, b0));
+                acc[r][1] = _mm256_add_ps(acc[r][1], _mm256_mul_ps(av, b1));
+            }
+        }
+        for r in 0..MR {
+            let o = out.as_mut_ptr().add((or0 + r) * ldo + j0);
+            _mm256_storeu_ps(o, acc[r][0]);
+            _mm256_storeu_ps(o.add(8), acc[r][1]);
+        }
+    }
+}
+
+/// Dispatch one output tile to the best microkernel: AVX2 for full
+/// MR x NR tiles when available, else the const-generic portable kernel.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn mk_tile(
+    a: &[f32],
+    lda: usize,
+    ar0: usize,
+    p0: usize,
+    plen: usize,
+    panel: &[f32],
+    out: &mut [f32],
+    ldo: usize,
+    or0: usize,
+    j0: usize,
+    jlen: usize,
+    rows: usize,
+    avx2: bool,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2 && rows == MR && jlen == NR {
+            // SAFETY: AVX2 was runtime-detected by the caller; the driver
+            // only requests full tiles whose rows/cols are in bounds.
+            unsafe { x86::mk_avx2(a, lda, ar0, p0, plen, panel, out, ldo, or0, j0) };
+            return;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = avx2;
+    match rows {
+        6 => mk_generic::<6>(a, lda, ar0, p0, plen, panel, out, ldo, or0, j0, jlen),
+        5 => mk_generic::<5>(a, lda, ar0, p0, plen, panel, out, ldo, or0, j0, jlen),
+        4 => mk_generic::<4>(a, lda, ar0, p0, plen, panel, out, ldo, or0, j0, jlen),
+        3 => mk_generic::<3>(a, lda, ar0, p0, plen, panel, out, ldo, or0, j0, jlen),
+        2 => mk_generic::<2>(a, lda, ar0, p0, plen, panel, out, ldo, or0, j0, jlen),
+        _ => mk_generic::<1>(a, lda, ar0, p0, plen, panel, out, ldo, or0, j0, jlen),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked drivers
+// ---------------------------------------------------------------------------
+
+/// Blocked, multi-threaded `a [m,k] @ b [k,n]`. Bitwise identical to
+/// [`scalar::matmul`] at any thread count (see the module docs).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    matmul_into(a, b, &mut out, m, k, n);
+    out
+}
+
+fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    let packed = pack_b(b, k, n);
+    let npanels = n.div_ceil(NR);
+    let nblocks = k.div_ceil(KC);
+    let avx2 = avx2_enabled();
+    let threads = if m * k * n >= PAR_MIN_FLOPS { pool::num_threads() } else { 1 };
+    // Each worker owns a contiguous MR-aligned span of output rows; within
+    // it, k-blocks run ascending (outermost) so rule 1 holds, and each
+    // packed panel stays hot across the span's row tiles.
+    let chunk_rows = m.div_ceil(MR).div_ceil(threads).max(1) * MR;
+    pool::par_chunks_mut_with(out, chunk_rows * n, threads, |ci, chunk| {
+        let row0 = ci * chunk_rows;
+        let rows = chunk.len() / n;
+        for kb in 0..nblocks {
+            let p0 = kb * KC;
+            let plen = KC.min(k - p0);
+            for jp in 0..npanels {
+                let j0 = jp * NR;
+                let jlen = NR.min(n - j0);
+                let panel = &packed[(kb * npanels + jp) * (KC * NR)..][..plen * NR];
+                let mut r = 0;
+                while r < rows {
+                    let tr = MR.min(rows - r);
+                    mk_tile(a, k, row0 + r, p0, plen, panel, chunk, n, r, j0, jlen, tr, avx2);
+                    r += MR;
+                }
+            }
+        }
+    });
+}
+
+/// Blocked `a^T @ b` for `a [m,k]`, `b [m,n]` -> `[k,n]`: a cache-blocked
+/// transpose of A followed by the blocked [`matmul`]. The accumulation
+/// dimension is the same ascending row index `i` either way, so this is
+/// bitwise identical to [`scalar::matmul_tn`].
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k * n];
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let at = transpose(a, m, k); // [k, m]
+    matmul_into(&at, b, &mut out, k, m, n);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// conv2d via im2col (SAME padding, odd square kernel, NCHW/OIHW)
+// ---------------------------------------------------------------------------
+
+/// Row-parallel im2col: one patch row per output position; rows are
+/// disjoint output spans, so this is trivially bitwise-safe.
+pub fn im2col(x: &Tensor, kk: usize, stride: usize) -> (Vec<f32>, usize, usize) {
+    let d = x.shape.dims();
+    let (n, c, h, w) = (d[0], d[1], d[2], d[3]);
+    let pad = kk / 2;
+    let (ho, wo) = (h.div_ceil(stride), w.div_ceil(stride));
+    let f = c * kk * kk;
+    let mut out = vec![0.0f32; n * ho * wo * f];
+    let threads = if out.len() >= PAR_MIN_ELEMS { pool::num_threads() } else { 1 };
+    pool::par_chunks_mut_with(&mut out, f, threads, |row, dst| {
+        let nn = row / (ho * wo);
+        let oy = (row / wo) % ho;
+        let ox = row % wo;
+        for ci in 0..c {
+            for dy in 0..kk {
+                let iy = (oy * stride + dy) as isize - pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                let xbase = ((nn * c + ci) * h + iy as usize) * w;
+                for dx in 0..kk {
+                    let ix = (ox * stride + dx) as isize - pad as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    dst[(ci * kk + dy) * kk + dx] = x.data[xbase + ix as usize];
+                }
+            }
+        }
+    });
+    (out, ho, wo)
+}
+
+/// Plane-parallel col2im scatter-add (the VJP of [`im2col`]). Each worker
+/// owns whole (image, channel) planes of `gx`; within a plane the
+/// contributions to each element arrive in the scalar kernel's ascending
+/// (oy, ox, dy, dx) order — the channel loop in the scalar nest only
+/// *selects* elements of other planes, it never reorders contributions
+/// within one — so the result is bitwise identical at any thread count.
+pub fn col2im(
+    gp: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kk: usize,
+    stride: usize,
+) -> Tensor {
+    let pad = kk / 2;
+    let (ho, wo) = (h.div_ceil(stride), w.div_ceil(stride));
+    let f = c * kk * kk;
+    let mut gx = vec![0.0f32; n * c * h * w];
+    let threads = if gp.len() >= PAR_MIN_ELEMS { pool::num_threads() } else { 1 };
+    pool::par_chunks_mut_with(&mut gx, h * w, threads, |plane, dst| {
+        let nn = plane / c;
+        let ci = plane % c;
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((nn * ho + oy) * wo + ox) * f;
+                for dy in 0..kk {
+                    let iy = (oy * stride + dy) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let dbase = iy as usize * w;
+                    for dx in 0..kk {
+                        let ix = (ox * stride + dx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        dst[dbase + ix as usize] += gp[row + (ci * kk + dy) * kk + dx];
+                    }
+                }
+            }
+        }
+    });
+    Tensor::new(Shape::new(&[n, c, h, w]), gx)
+}
+
+pub fn conv2d_fwd(x: &Tensor, w: &Tensor, kk: usize, stride: usize) -> Tensor {
+    let xd = x.shape.dims();
+    let (n, c) = (xd[0], xd[1]);
+    let kout = w.shape.dims()[0];
+    let f = c * kk * kk;
+    let (pmat, ho, wo) = im2col(x, kk, stride);
+    let wt = transpose(&w.data, kout, f); // w.reshape(k, f).T -> [f, k]
+    let ymat = matmul(&pmat, &wt, n * ho * wo, f, kout); // [M, K]
+    // [M, K] -> NCHW, one (image, out-channel) plane per chunk.
+    let mut y = vec![0.0f32; n * kout * ho * wo];
+    let threads = if y.len() >= PAR_MIN_ELEMS { pool::num_threads() } else { 1 };
+    pool::par_chunks_mut_with(&mut y, ho * wo, threads, |plane, dst| {
+        let nn = plane / kout;
+        let ko = plane % kout;
+        for oy in 0..ho {
+            for ox in 0..wo {
+                dst[oy * wo + ox] = ymat[((nn * ho + oy) * wo + ox) * kout + ko];
+            }
+        }
+    });
+    Tensor::new(Shape::new(&[n, kout, ho, wo]), y)
+}
+
+pub fn conv2d_bwd(
+    x: &Tensor,
+    w: &Tensor,
+    gy: &Tensor,
+    kk: usize,
+    stride: usize,
+) -> (Tensor, Tensor) {
+    let xd = x.shape.dims();
+    let (n, c, h, wd) = (xd[0], xd[1], xd[2], xd[3]);
+    let kout = w.shape.dims()[0];
+    let f = c * kk * kk;
+    let gyd = gy.shape.dims();
+    let (ho, wo) = (gyd[2], gyd[3]);
+    let mrows = n * ho * wo;
+    let (pmat, _, _) = im2col(x, kk, stride);
+    // gy NCHW -> [M, K], one patch row per chunk (pure copies: any
+    // iteration order gives identical bytes).
+    let mut gymat = vec![0.0f32; mrows * kout];
+    let threads = if gymat.len() >= PAR_MIN_ELEMS { pool::num_threads() } else { 1 };
+    pool::par_chunks_mut_with(&mut gymat, kout, threads, |row, dst| {
+        let nn = row / (ho * wo);
+        let oy = (row / wo) % ho;
+        let ox = row % wo;
+        for (ko, d) in dst.iter_mut().enumerate() {
+            *d = gy.data[((nn * kout + ko) * ho + oy) * wo + ox];
+        }
+    });
+    // gw = pmat^T @ gymat : [F, K] -> transpose-reshape to [K, C, kk, kk].
+    let gwmat = matmul_tn(&pmat, &gymat, mrows, f, kout);
+    let gw = transpose(&gwmat, f, kout); // [K, f] == OIHW-flat
+    // gpatches = gymat @ w.reshape(k, f) : [M, F] -> col2im.
+    let gpmat = matmul(&gymat, &w.data, mrows, kout, f);
+    let gx = col2im(&gpmat, n, c, h, wd, kk, stride);
+    (gx, Tensor::new(w.shape.clone(), gw))
+}
+
+// ---------------------------------------------------------------------------
+// dense
+// ---------------------------------------------------------------------------
+
+pub fn dense_fwd(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Tensor {
+    let (n, d) = (x.shape.dims()[0], x.shape.dims()[1]);
+    let m = w.shape.dims()[1];
+    let mut y = matmul(&x.data, &w.data, n, d, m);
+    // Bias + activation epilogue, row-parallel (same per-element ops and
+    // order as the scalar reference).
+    let threads = if y.len() >= PAR_MIN_ELEMS { pool::num_threads() } else { 1 };
+    pool::par_chunks_mut_with(&mut y, m, threads, |_row, yr| {
+        for (v, &bv) in yr.iter_mut().zip(b.data.iter()) {
+            let s = *v + bv;
+            *v = if relu { s.max(0.0) } else { s };
+        }
+    });
+    Tensor::new(Shape::new(&[n, m]), y)
+}
+
+pub fn dense_bwd(x: &Tensor, w: &Tensor, gy: &Tensor) -> (Tensor, Tensor, Tensor) {
+    let (n, d) = (x.shape.dims()[0], x.shape.dims()[1]);
+    let m = w.shape.dims()[1];
+    // gx = gy @ w^T : [N, D]
+    let wt = transpose(&w.data, d, m); // [m, d]
+    let gx = matmul(&gy.data, &wt, n, m, d);
+    // gw = x^T @ gy : [D, M]
+    let gw = matmul_tn(&x.data, &gy.data, n, d, m);
+    // gb = column sums of gy, ascending rows (small; serial).
+    let mut gb = vec![0.0f32; m];
+    for row in 0..n {
+        for (g, &v) in gb.iter_mut().zip(gy.data[row * m..(row + 1) * m].iter()) {
+            *g += v;
+        }
+    }
+    (
+        Tensor::new(Shape::new(&[n, d]), gx),
+        Tensor::new(Shape::new(&[d, m]), gw),
+        Tensor::new(Shape::new(&[m]), gb),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    // The heavy proptest-style sweeps (random shapes x thread counts) live
+    // in rust/tests/kernel_equivalence.rs, a separate process, so they can
+    // drive the global thread knob without racing other lib tests. These
+    // in-module tests pin down the packing/microkernel math at the current
+    // thread setting.
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_matches_scalar_bitwise() {
+        let mut rng = Rng::new(42);
+        for (m, k, n) in [
+            (1usize, 1usize, 1usize),
+            (6, 256, 16),  // exactly one tile / panel / k-block
+            (7, 257, 17),  // one past every boundary
+            (5, 255, 15),  // one short of every boundary
+            (13, 500, 40),
+            (64, 300, 33),
+        ] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let want = scalar::matmul(&a, &b, m, k, n);
+            let got = matmul(&a, &b, m, k, n);
+            assert_bits_eq(&want, &got, &format!("matmul {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_tn_matches_scalar_bitwise() {
+        let mut rng = Rng::new(43);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (37, 19, 23), (300, 18, 40)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, m * n);
+            let want = scalar::matmul_tn(&a, &b, m, k, n);
+            let got = matmul_tn(&a, &b, m, k, n);
+            assert_bits_eq(&want, &got, &format!("matmul_tn {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(44);
+        let src = randv(&mut rng, 37 * 65);
+        let t = transpose(&src, 37, 65);
+        let back = transpose(&t, 65, 37);
+        assert_bits_eq(&src, &back, "transpose roundtrip");
+        assert_eq!(t[5 * 37 + 3], src[3 * 65 + 5]);
+    }
+
+    #[test]
+    fn conv_and_dense_match_scalar_bitwise() {
+        let mut rng = Rng::new(45);
+        let x = Tensor::randn(&[2, 3, 8, 8], 1.0, &mut rng);
+        let w = Tensor::randn(&[4, 3, 3, 3], 0.5, &mut rng);
+        let gy = Tensor::randn(&[2, 4, 8, 8], 1.0, &mut rng);
+        assert_bits_eq(
+            &scalar::conv2d_fwd(&x, &w, 3, 1).data,
+            &conv2d_fwd(&x, &w, 3, 1).data,
+            "conv fwd",
+        );
+        let (gx0, gw0) = scalar::conv2d_bwd(&x, &w, &gy, 3, 1);
+        let (gx1, gw1) = conv2d_bwd(&x, &w, &gy, 3, 1);
+        assert_bits_eq(&gx0.data, &gx1.data, "conv bwd gx");
+        assert_bits_eq(&gw0.data, &gw1.data, "conv bwd gw");
+
+        let dx = Tensor::randn(&[5, 33], 1.0, &mut rng);
+        let dw = Tensor::randn(&[33, 17], 0.5, &mut rng);
+        let db = Tensor::randn(&[17], 0.1, &mut rng);
+        let dgy = Tensor::randn(&[5, 17], 1.0, &mut rng);
+        assert_bits_eq(
+            &scalar::dense_fwd(&dx, &dw, &db, true).data,
+            &dense_fwd(&dx, &dw, &db, true).data,
+            "dense fwd",
+        );
+        let (a0, b0, c0) = scalar::dense_bwd(&dx, &dw, &dgy);
+        let (a1, b1, c1) = dense_bwd(&dx, &dw, &dgy);
+        assert_bits_eq(&a0.data, &a1.data, "dense bwd gx");
+        assert_bits_eq(&b0.data, &b1.data, "dense bwd gw");
+        assert_bits_eq(&c0.data, &c1.data, "dense bwd gb");
+    }
+}

@@ -19,9 +19,15 @@
 //! One `Runtime` per rank thread; "compilation" is name parsing + plan
 //! caching, counted in [`RuntimeStats`] so the warmup/caching behavior the
 //! benches measure is preserved.
+//!
+//! The hot math lives in [`kernels`] (blocked, register-tiled,
+//! multi-threaded matmul/conv/dense — bitwise identical to their scalar
+//! references at any thread count) on top of the scoped-thread [`pool`].
 
+pub mod kernels;
 mod manifest;
 pub mod native;
+pub mod pool;
 
 pub use manifest::{ArtifactMeta, Manifest};
 

@@ -12,7 +12,10 @@
 //! Every kernel is deterministic (fixed accumulation order), which is what
 //! the sequential-vs-parallel bitwise-equivalence tests rely on: every rank
 //! and the sequential baseline run the exact same f32 operations in the
-//! exact same order.
+//! exact same order. The hot paths (conv/dense, i.e. matmul + im2col)
+//! delegate to the blocked, multi-threaded kernels in [`super::kernels`],
+//! which are bitwise identical to the scalar references at any thread
+//! count — see that module's determinism contract.
 //!
 //! Math follows `python/compile/kernels/ref.py`:
 //! - conv2d: SAME padding, NCHW/OIHW, via im2col + matmul (and the
@@ -21,6 +24,7 @@
 //! - softmax cross-entropy: stable logsumexp, mean loss, glogits
 //!   `(softmax - y)/n`.
 
+use super::kernels::{conv2d_bwd, conv2d_fwd, dense_bwd, dense_fwd};
 use super::manifest::ArtifactMeta;
 use crate::tensor::{Shape, Tensor};
 
@@ -295,179 +299,6 @@ pub fn execute(p: &Plan, args: &[&Tensor]) -> Vec<Tensor> {
 }
 
 // ---------------------------------------------------------------------------
-// matmul (the hot spot) + transposed variant
-// ---------------------------------------------------------------------------
-
-/// `a [m,k] @ b [k,n]` with i-k-j loop order (deterministic, vectorizable).
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += av * bv;
-            }
-        }
-    }
-    out
-}
-
-/// `a^T @ b` for `a [m,k]`, `b [m,n]` -> `[k,n]` (accumulates over rows of
-/// both, ascending — deterministic).
-fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; k * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            let orow = &mut out[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                *o += av * bv;
-            }
-        }
-    }
-    out
-}
-
-// ---------------------------------------------------------------------------
-// conv2d via im2col (SAME padding, odd square kernel, NCHW/OIHW)
-// ---------------------------------------------------------------------------
-
-/// Patch matrix [N*Ho*Wo, C*kk*kk]; feature index = (c*kk + dy)*kk + dx —
-/// the OIHW-flatten ordering `model.py::_patches` produces.
-fn im2col(x: &Tensor, kk: usize, stride: usize) -> (Vec<f32>, usize, usize) {
-    let d = x.shape.dims();
-    let (n, c, h, w) = (d[0], d[1], d[2], d[3]);
-    let pad = kk / 2;
-    let (ho, wo) = (h.div_ceil(stride), w.div_ceil(stride));
-    let f = c * kk * kk;
-    let mut out = vec![0.0f32; n * ho * wo * f];
-    for nn in 0..n {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let row = ((nn * ho + oy) * wo + ox) * f;
-                for ci in 0..c {
-                    for dy in 0..kk {
-                        let iy = (oy * stride + dy) as isize - pad as isize;
-                        if iy < 0 || iy >= h as isize {
-                            continue;
-                        }
-                        let xbase = ((nn * c + ci) * h + iy as usize) * w;
-                        for dx in 0..kk {
-                            let ix = (ox * stride + dx) as isize - pad as isize;
-                            if ix < 0 || ix >= w as isize {
-                                continue;
-                            }
-                            out[row + (ci * kk + dy) * kk + dx] = x.data[xbase + ix as usize];
-                        }
-                    }
-                }
-            }
-        }
-    }
-    (out, ho, wo)
-}
-
-/// Scatter-add the patch-matrix gradient back into input layout (the VJP of
-/// `im2col`). Deterministic ascending iteration.
-fn col2im(gp: &[f32], n: usize, c: usize, h: usize, w: usize, kk: usize, stride: usize) -> Tensor {
-    let pad = kk / 2;
-    let (ho, wo) = (h.div_ceil(stride), w.div_ceil(stride));
-    let f = c * kk * kk;
-    let mut gx = vec![0.0f32; n * c * h * w];
-    for nn in 0..n {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let row = ((nn * ho + oy) * wo + ox) * f;
-                for ci in 0..c {
-                    for dy in 0..kk {
-                        let iy = (oy * stride + dy) as isize - pad as isize;
-                        if iy < 0 || iy >= h as isize {
-                            continue;
-                        }
-                        let xbase = ((nn * c + ci) * h + iy as usize) * w;
-                        for dx in 0..kk {
-                            let ix = (ox * stride + dx) as isize - pad as isize;
-                            if ix < 0 || ix >= w as isize {
-                                continue;
-                            }
-                            gx[xbase + ix as usize] += gp[row + (ci * kk + dy) * kk + dx];
-                        }
-                    }
-                }
-            }
-        }
-    }
-    Tensor::new(Shape::new(&[n, c, h, w]), gx)
-}
-
-fn conv2d_fwd(x: &Tensor, w: &Tensor, kk: usize, stride: usize) -> Tensor {
-    let xd = x.shape.dims();
-    let (n, c) = (xd[0], xd[1]);
-    let kout = w.shape.dims()[0];
-    let f = c * kk * kk;
-    let (pmat, ho, wo) = im2col(x, kk, stride);
-    // wmat = w.reshape(k, f).T -> [f, k]
-    let mut wt = vec![0.0f32; f * kout];
-    for ko in 0..kout {
-        for fi in 0..f {
-            wt[fi * kout + ko] = w.data[ko * f + fi];
-        }
-    }
-    let ymat = matmul(&pmat, &wt, n * ho * wo, f, kout); // [M, K]
-    // [M, K] -> NCHW
-    let mut y = vec![0.0f32; n * kout * ho * wo];
-    for nn in 0..n {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let row = ((nn * ho + oy) * wo + ox) * kout;
-                for ko in 0..kout {
-                    y[((nn * kout + ko) * ho + oy) * wo + ox] = ymat[row + ko];
-                }
-            }
-        }
-    }
-    Tensor::new(Shape::new(&[n, kout, ho, wo]), y)
-}
-
-fn conv2d_bwd(x: &Tensor, w: &Tensor, gy: &Tensor, kk: usize, stride: usize) -> (Tensor, Tensor) {
-    let xd = x.shape.dims();
-    let (n, c, h, wd) = (xd[0], xd[1], xd[2], xd[3]);
-    let kout = w.shape.dims()[0];
-    let f = c * kk * kk;
-    let gyd = gy.shape.dims();
-    let (ho, wo) = (gyd[2], gyd[3]);
-    let mrows = n * ho * wo;
-    let (pmat, _, _) = im2col(x, kk, stride);
-    // gy NCHW -> [M, K]
-    let mut gymat = vec![0.0f32; mrows * kout];
-    for nn in 0..n {
-        for ko in 0..kout {
-            for oy in 0..ho {
-                for ox in 0..wo {
-                    gymat[(((nn * ho + oy) * wo + ox) * kout) + ko] =
-                        gy.data[((nn * kout + ko) * ho + oy) * wo + ox];
-                }
-            }
-        }
-    }
-    // gw = pmat^T @ gymat : [F, K] -> transpose-reshape to [K, C, kk, kk].
-    let gwmat = matmul_tn(&pmat, &gymat, mrows, f, kout);
-    let mut gw = vec![0.0f32; kout * f];
-    for fi in 0..f {
-        for ko in 0..kout {
-            gw[ko * f + fi] = gwmat[fi * kout + ko];
-        }
-    }
-    // gpatches = gymat @ w.reshape(k, f) : [M, F] -> col2im.
-    let gpmat = matmul(&gymat, &w.data, mrows, kout, f);
-    let gx = col2im(&gpmat, n, c, h, wd, kk, stride);
-    (gx, Tensor::new(w.shape.clone(), gw))
-}
-
-// ---------------------------------------------------------------------------
 // batchnorm (train mode, batch statistics over N, H, W per channel)
 // ---------------------------------------------------------------------------
 
@@ -657,48 +488,8 @@ fn gap_bwd(gy: &Tensor, h: usize, w: usize) -> Tensor {
 }
 
 // ---------------------------------------------------------------------------
-// dense / softmax cross-entropy
+// softmax cross-entropy (dense/conv live in `super::kernels`)
 // ---------------------------------------------------------------------------
-
-fn dense_fwd(x: &Tensor, w: &Tensor, b: &Tensor, relu: bool) -> Tensor {
-    let (n, d) = (x.shape.dims()[0], x.shape.dims()[1]);
-    let m = w.shape.dims()[1];
-    let mut y = matmul(&x.data, &w.data, n, d, m);
-    for row in 0..n {
-        for j in 0..m {
-            let v = y[row * m + j] + b.data[j];
-            y[row * m + j] = if relu { v.max(0.0) } else { v };
-        }
-    }
-    Tensor::new(Shape::new(&[n, m]), y)
-}
-
-fn dense_bwd(x: &Tensor, w: &Tensor, gy: &Tensor) -> (Tensor, Tensor, Tensor) {
-    let (n, d) = (x.shape.dims()[0], x.shape.dims()[1]);
-    let m = w.shape.dims()[1];
-    // gx = gy @ w^T : [N, D]
-    let mut wt = vec![0.0f32; m * d];
-    for di in 0..d {
-        for mi in 0..m {
-            wt[mi * d + di] = w.data[di * m + mi];
-        }
-    }
-    let gx = matmul(&gy.data, &wt, n, m, d);
-    // gw = x^T @ gy : [D, M]
-    let gw = matmul_tn(&x.data, &gy.data, n, d, m);
-    // gb = column sums of gy.
-    let mut gb = vec![0.0f32; m];
-    for row in 0..n {
-        for j in 0..m {
-            gb[j] += gy.data[row * m + j];
-        }
-    }
-    (
-        Tensor::new(Shape::new(&[n, d]), gx),
-        Tensor::new(Shape::new(&[d, m]), gw),
-        Tensor::new(Shape::new(&[m]), gb),
-    )
-}
 
 /// Mean softmax cross-entropy: (scalar loss, dloss/dlogits).
 fn softmax_xent(logits: &Tensor, y_onehot: &Tensor) -> (Tensor, Tensor) {

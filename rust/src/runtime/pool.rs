@@ -1,0 +1,140 @@
+//! Scoped-thread worker pool for the native kernels.
+//!
+//! Offline build: no rayon, no crossbeam — workers are `std::thread::scope`
+//! threads (stable since 1.63) spawned per parallel region. Kernels hand
+//! each worker a *disjoint* `&mut` span of the output, so parallelism can
+//! never change any output element's floating-point accumulation order:
+//! results are bitwise identical at every thread count. The knob only
+//! trades wall-clock for cores.
+//!
+//! Thread-count precedence (applied by `api::fit` / the kernels):
+//! 1. `TrainConfig::native_threads` (explicit config / `--threads` CLI),
+//! 2. the `HF_NATIVE_THREADS` environment variable,
+//! 3. `std::thread::available_parallelism()` (divided by the rank count
+//!    inside `fit`, so ranks don't oversubscribe the machine).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Global worker count. 0 = "not yet resolved" (resolved lazily by
+/// [`num_threads`] from the env / machine).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// `HF_NATIVE_THREADS` if set to a positive integer.
+pub fn env_threads() -> Option<usize> {
+    let v = std::env::var("HF_NATIVE_THREADS").ok()?;
+    v.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+/// Current worker count for the native kernels. Resolved on first use:
+/// `HF_NATIVE_THREADS` if set, else the machine's available parallelism.
+pub fn num_threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let n = env_threads().unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    });
+    THREADS.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Set the worker count (clamped to >= 1). Kernels are bitwise
+/// deterministic in the thread count, so changing this mid-run only
+/// affects speed, never results.
+pub fn set_num_threads(n: usize) {
+    THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Run `f(chunk_index, chunk)` over consecutive `chunk`-sized pieces of
+/// `data` (last piece may be short), spread across [`num_threads`] scoped
+/// threads. Chunks are assigned to threads in contiguous runs, but since
+/// every chunk is a disjoint `&mut` span and `f` is pure per chunk, the
+/// result is identical to the serial loop regardless of thread count.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_chunks_mut_with(data, chunk, num_threads(), f);
+}
+
+/// [`par_chunks_mut`] with an explicit thread count. Kernels pass 1 for
+/// problems too small to amortize thread spawns (a deterministic,
+/// size-only decision — never data- or thread-count-dependent).
+pub fn par_chunks_mut_with<T, F>(data: &mut [T], chunk: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk size must be positive");
+    let nchunks = data.len().div_ceil(chunk);
+    if threads <= 1 || nchunks <= 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    // Contiguous runs of `per` chunks per worker; `chunks_mut` hands each
+    // worker a disjoint &mut span with the right lifetime for the scope.
+    let per = nchunks.div_ceil(threads);
+    let span = per * chunk;
+    std::thread::scope(|s| {
+        for (t, piece) in data.chunks_mut(span).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (i, c) in piece.chunks_mut(chunk).enumerate() {
+                    f(t * per + i, c);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_indices_and_data_match_serial() {
+        for threads in [1usize, 2, 3, 4, 7] {
+            for len in [0usize, 1, 5, 16, 97, 256] {
+                for chunk in [1usize, 3, 16, 300] {
+                    let mut data = vec![0u32; len];
+                    par_chunks_mut_with(&mut data, chunk, threads, |ci, c| {
+                        for (j, v) in c.iter_mut().enumerate() {
+                            *v = (ci * chunk + j) as u32;
+                        }
+                    });
+                    let want: Vec<u32> = (0..len as u32).collect();
+                    assert_eq!(data, want, "threads={threads} len={len} chunk={chunk}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn short_tail_chunk_is_delivered() {
+        let mut data = vec![0u8; 10];
+        par_chunks_mut_with(&mut data, 4, 2, |ci, c| {
+            if ci == 2 {
+                assert_eq!(c.len(), 2);
+            } else {
+                assert_eq!(c.len(), 4);
+            }
+            c.fill(ci as u8 + 1);
+        });
+        assert_eq!(data, vec![1, 1, 1, 1, 2, 2, 2, 2, 3, 3]);
+    }
+
+    #[test]
+    fn thread_count_roundtrip() {
+        // The only test in this binary that asserts the global's value
+        // (other tests may set it, but none read it back).
+        set_num_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_num_threads(0); // clamps to 1
+        assert_eq!(num_threads(), 1);
+        set_num_threads(1);
+    }
+}

@@ -17,8 +17,10 @@
 //!    This is why large batches favor fewer-bigger ranks (DP catches up at
 //!    BS >= 512) and why 48-core sequential wastes most of the node.
 //!
-//! `hyparflow calibrate` re-anchors `core_rate` and `g0` from PJRT
-//! measurements on this host; platform profiles carry scaled defaults.
+//! `hyparflow calibrate` (or `hyparflow sim --calibrate`, which feeds the
+//! result straight into the run) re-anchors `core_rate` and `g0` from
+//! native-kernel measurements on this host; platform profiles carry
+//! scaled defaults.
 
 use super::Platform;
 use crate::graph::{ModelGraph, NodeId};

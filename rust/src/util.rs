@@ -1,5 +1,6 @@
-//! Small shared helpers: human-readable units, timing, and a tiny
-//! line-oriented table printer used by the bench harnesses.
+//! Small shared helpers: human-readable units, timing, a tiny
+//! line-oriented table printer, and a minimal JSON emitter used by the
+//! bench harnesses (offline build: no serde).
 
 use std::time::Instant;
 
@@ -67,6 +68,7 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let ncol = self.headers.len();
         let mut w = vec![0usize; ncol];
@@ -106,6 +108,90 @@ impl Table {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Minimal JSON emission (BENCH_*.json artifacts; offline build — no serde)
+// ---------------------------------------------------------------------------
+
+/// Escape a string for inclusion inside JSON double quotes.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A finite f64 as a JSON number (shortest round-trip form); non-finite
+/// values become `null` (JSON has no NaN/Inf).
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// A JSON array from already-serialized element strings.
+pub fn json_array(items: impl IntoIterator<Item = String>) -> String {
+    let body: Vec<String> = items.into_iter().collect();
+    format!("[{}]", body.join(","))
+}
+
+/// Incremental JSON object builder (fields keep insertion order).
+pub struct JsonObj {
+    fields: Vec<String>,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        JsonObj { fields: vec![] }
+    }
+
+    pub fn str(mut self, k: &str, v: &str) -> Self {
+        self.fields.push(format!("\"{}\":\"{}\"", json_escape(k), json_escape(v)));
+        self
+    }
+
+    pub fn num(mut self, k: &str, v: f64) -> Self {
+        self.fields.push(format!("\"{}\":{}", json_escape(k), json_num(v)));
+        self
+    }
+
+    pub fn int(mut self, k: &str, v: u64) -> Self {
+        self.fields.push(format!("\"{}\":{v}", json_escape(k)));
+        self
+    }
+
+    pub fn bool(mut self, k: &str, v: bool) -> Self {
+        self.fields.push(format!("\"{}\":{v}", json_escape(k)));
+        self
+    }
+
+    /// Attach an already-serialized JSON value (array / nested object).
+    pub fn raw(mut self, k: &str, v: &str) -> Self {
+        self.fields.push(format!("\"{}\":{v}", json_escape(k)));
+        self
+    }
+
+    pub fn build(self) -> String {
+        format!("{{{}}}", self.fields.join(","))
+    }
+}
+
+impl Default for JsonObj {
+    fn default() -> Self {
+        JsonObj::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +213,32 @@ mod tests {
     fn secs_units() {
         assert_eq!(fmt_secs(0.5), "500.00ms");
         assert_eq!(fmt_secs(2.0), "2.000s");
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn json_object_and_array() {
+        let arr = json_array(["1".to_string(), "2".to_string()]);
+        let o = JsonObj::new()
+            .str("name", "x")
+            .num("v", 1.5)
+            .int("n", 3)
+            .bool("ok", true)
+            .raw("xs", &arr)
+            .build();
+        assert_eq!(o, "{\"name\":\"x\",\"v\":1.5,\"n\":3,\"ok\":true,\"xs\":[1,2]}");
+    }
+
+    #[test]
+    fn json_non_finite_is_null() {
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        assert_eq!(json_num(0.25), "0.25");
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Scalar-vs-blocked kernel equivalence: the blocked, multi-threaded
+//! kernels must be **bitwise identical** to the scalar references at every
+//! thread count — this is the contract the sequential-vs-parallel training
+//! equivalence tests stand on.
+//!
+//! Proptest-style: shapes are drawn from a seeded generator (deterministic
+//! across runs, no external proptest crate — offline build), plus fixed
+//! boundary shapes chosen to hit every tile/panel/block edge case and to
+//! cross the kernels' serial-vs-parallel size thresholds.
+//!
+//! This lives in its own integration binary (own process) because the
+//! sweeps drive the global thread-count knob, which in-process unit tests
+//! must not touch concurrently.
+
+use hyparflow::api::{fit, Strategy, TrainConfig};
+use hyparflow::graph::zoo;
+use hyparflow::rng::Rng;
+use hyparflow::runtime::{kernels, pool};
+use hyparflow::tensor::Tensor;
+
+const THREAD_SWEEP: [usize; 3] = [1, 2, 4];
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform_in(-2.0, 2.0)).collect()
+}
+
+#[test]
+fn matmul_bitwise_random_shapes() {
+    let mut rng = Rng::new(0xA11CE);
+    // Fixed boundary shapes: exact tile/panel/k-block fits, one-off each
+    // edge, and (64, 512, 64) crossing the parallel-matmul threshold.
+    let mut shapes = vec![
+        (1usize, 1usize, 1usize),
+        (6, 256, 16),
+        (7, 257, 17),
+        (5, 255, 15),
+        (12, 512, 32),
+        (13, 300, 33),
+        (64, 512, 64),
+        (70, 300, 48),
+    ];
+    for _ in 0..24 {
+        shapes.push((1 + rng.below(40), 1 + rng.below(320), 1 + rng.below(40)));
+    }
+    for (m, k, n) in shapes {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let want = bits(&kernels::scalar::matmul(&a, &b, m, k, n));
+        for t in THREAD_SWEEP {
+            pool::set_num_threads(t);
+            let got = bits(&kernels::matmul(&a, &b, m, k, n));
+            assert_eq!(want, got, "matmul {m}x{k}x{n} at {t} threads");
+        }
+    }
+    pool::set_num_threads(1);
+}
+
+#[test]
+fn matmul_tn_bitwise_random_shapes() {
+    let mut rng = Rng::new(0xB0B);
+    let mut shapes = vec![
+        (1usize, 1usize, 1usize),
+        (256, 6, 16),
+        (257, 7, 17),
+        (300, 13, 33),
+        (2048, 18, 32), // crosses the parallel threshold
+    ];
+    for _ in 0..16 {
+        shapes.push((1 + rng.below(320), 1 + rng.below(40), 1 + rng.below(40)));
+    }
+    for (m, k, n) in shapes {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, m * n);
+        let want = bits(&kernels::scalar::matmul_tn(&a, &b, m, k, n));
+        for t in THREAD_SWEEP {
+            pool::set_num_threads(t);
+            let got = bits(&kernels::matmul_tn(&a, &b, m, k, n));
+            assert_eq!(want, got, "matmul_tn {m}x{k}x{n} at {t} threads");
+        }
+    }
+    pool::set_num_threads(1);
+}
+
+#[test]
+fn im2col_col2im_bitwise() {
+    let mut rng = Rng::new(0xC01);
+    // (n, c, h, w, kk, stride); the first crosses the element thresholds.
+    for (n, c, h, w, kk, stride) in [
+        (4usize, 8usize, 16usize, 16usize, 3usize, 1usize),
+        (2, 3, 9, 7, 3, 2),
+        (1, 5, 6, 6, 1, 1),
+    ] {
+        let x = Tensor::randn(&[n, c, h, w], 1.0, &mut rng);
+        let (want_p, ho, wo) = kernels::scalar::im2col(&x, kk, stride);
+        let f = c * kk * kk;
+        let gp = randv(&mut rng, n * ho * wo * f);
+        let want_g = kernels::scalar::col2im(&gp, n, c, h, w, kk, stride);
+        for t in THREAD_SWEEP {
+            pool::set_num_threads(t);
+            let (got_p, gho, gwo) = kernels::im2col(&x, kk, stride);
+            assert_eq!((ho, wo), (gho, gwo));
+            assert_eq!(bits(&want_p), bits(&got_p), "im2col {n}x{c}x{h}x{w} k{kk}s{stride} at {t}T");
+            let got_g = kernels::col2im(&gp, n, c, h, w, kk, stride);
+            assert_eq!(
+                bits(&want_g.data),
+                bits(&got_g.data),
+                "col2im {n}x{c}x{h}x{w} k{kk}s{stride} at {t}T"
+            );
+        }
+    }
+    pool::set_num_threads(1);
+}
+
+#[test]
+fn conv_fwd_bwd_bitwise_random_shapes() {
+    let mut rng = Rng::new(0xC02);
+    // (n, c, kout, h, w, kk, stride); the first crosses the im2col/col2im
+    // parallel thresholds.
+    let mut cases = vec![
+        (4usize, 8usize, 8usize, 16usize, 16usize, 3usize, 1usize),
+        (2, 3, 4, 8, 8, 3, 2),
+        (1, 4, 4, 7, 7, 1, 1),
+        (2, 2, 6, 9, 5, 3, 1),
+    ];
+    for _ in 0..6 {
+        cases.push((
+            1 + rng.below(3),
+            1 + rng.below(6),
+            1 + rng.below(6),
+            1 + rng.below(10),
+            1 + rng.below(10),
+            if rng.below(2) == 0 { 1 } else { 3 },
+            1 + rng.below(2),
+        ));
+    }
+    for (n, c, kout, h, w, kk, stride) in cases {
+        let x = Tensor::randn(&[n, c, h, w], 1.0, &mut rng);
+        let wt = Tensor::randn(&[kout, c, kk, kk], 0.5, &mut rng);
+        let (ho, wo) = (h.div_ceil(stride), w.div_ceil(stride));
+        let gy = Tensor::randn(&[n, kout, ho, wo], 1.0, &mut rng);
+        let want_y = kernels::scalar::conv2d_fwd(&x, &wt, kk, stride);
+        let (want_gx, want_gw) = kernels::scalar::conv2d_bwd(&x, &wt, &gy, kk, stride);
+        for t in THREAD_SWEEP {
+            pool::set_num_threads(t);
+            let got_y = kernels::conv2d_fwd(&x, &wt, kk, stride);
+            assert_eq!(
+                bits(&want_y.data),
+                bits(&got_y.data),
+                "conv fwd n{n}c{c}k{kout} {h}x{w} k{kk}s{stride} at {t}T"
+            );
+            let (got_gx, got_gw) = kernels::conv2d_bwd(&x, &wt, &gy, kk, stride);
+            assert_eq!(
+                bits(&want_gx.data),
+                bits(&got_gx.data),
+                "conv bwd gx n{n}c{c}k{kout} {h}x{w} k{kk}s{stride} at {t}T"
+            );
+            assert_eq!(
+                bits(&want_gw.data),
+                bits(&got_gw.data),
+                "conv bwd gw n{n}c{c}k{kout} {h}x{w} k{kk}s{stride} at {t}T"
+            );
+        }
+    }
+    pool::set_num_threads(1);
+}
+
+#[test]
+fn dense_bitwise_random_shapes() {
+    let mut rng = Rng::new(0xDE5E);
+    for i in 0..10 {
+        let (n, d, m) = (1 + rng.below(24), 1 + rng.below(200), 1 + rng.below(48));
+        let relu = i % 2 == 0;
+        let x = Tensor::randn(&[n, d], 1.0, &mut rng);
+        let w = Tensor::randn(&[d, m], 0.5, &mut rng);
+        let b = Tensor::randn(&[m], 0.1, &mut rng);
+        let gy = Tensor::randn(&[n, m], 1.0, &mut rng);
+        let want_y = kernels::scalar::dense_fwd(&x, &w, &b, relu);
+        let (want_gx, want_gw, want_gb) = kernels::scalar::dense_bwd(&x, &w, &gy);
+        for t in THREAD_SWEEP {
+            pool::set_num_threads(t);
+            let got_y = kernels::dense_fwd(&x, &w, &b, relu);
+            assert_eq!(bits(&want_y.data), bits(&got_y.data), "dense fwd {n}x{d}x{m} at {t}T");
+            let (got_gx, got_gw, got_gb) = kernels::dense_bwd(&x, &w, &gy);
+            assert_eq!(bits(&want_gx.data), bits(&got_gx.data), "dense gx {n}x{d}x{m} at {t}T");
+            assert_eq!(bits(&want_gw.data), bits(&got_gw.data), "dense gw {n}x{d}x{m} at {t}T");
+            assert_eq!(bits(&want_gb.data), bits(&got_gb.data), "dense gb {n}x{d}x{m} at {t}T");
+        }
+    }
+    pool::set_num_threads(1);
+}
+
+/// End-to-end acceptance: the same pipelined training run produces
+/// bit-identical parameters and losses at 1, 2 and 4 kernel threads.
+#[test]
+fn training_bitwise_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        let cfg = TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), Strategy::Model)
+            .partitions(2)
+            .microbatch(4)
+            .num_microbatches(2)
+            .steps(3)
+            .lr(0.05)
+            .seed(13)
+            .native_threads(threads);
+        fit(&cfg).expect("fit")
+    };
+    let base = run(1);
+    let base_params: Vec<Vec<u32>> = base.params.iter().map(|(_, t)| bits(&t.data)).collect();
+    let base_loss: Vec<u32> = base.history.iter().map(|m| m.loss.to_bits()).collect();
+    for t in [2usize, 4] {
+        let r = run(t);
+        let params: Vec<Vec<u32>> = r.params.iter().map(|(_, t)| bits(&t.data)).collect();
+        let loss: Vec<u32> = r.history.iter().map(|m| m.loss.to_bits()).collect();
+        assert_eq!(base_params, params, "params differ at {t} threads");
+        assert_eq!(base_loss, loss, "loss history differs at {t} threads");
+    }
+    pool::set_num_threads(1);
+}
+
+/// Same acceptance on a real conv model (ResNet-20, one step).
+#[test]
+fn resnet_training_bitwise_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        let cfg = TrainConfig::new(zoo::resnet20_v1(), Strategy::Sequential)
+            .microbatch(4)
+            .steps(1)
+            .lr(0.01)
+            .seed(5)
+            .native_threads(threads);
+        fit(&cfg).expect("fit")
+    };
+    let base = run(1);
+    let base_params: Vec<Vec<u32>> = base.params.iter().map(|(_, t)| bits(&t.data)).collect();
+    for t in [2usize, 4] {
+        let r = run(t);
+        let params: Vec<Vec<u32>> = r.params.iter().map(|(_, t)| bits(&t.data)).collect();
+        assert_eq!(base_params, params, "resnet params differ at {t} threads");
+    }
+    pool::set_num_threads(1);
+}
