@@ -1,5 +1,6 @@
-//! `cargo bench --bench sched_compare` — GPipe vs 1F1B on the shared
-//! schedule IR: step time, bubble fraction and peak memory for the default
+//! `cargo bench --bench sched_compare` — the four schedule generators
+//! (gpipe, 1f1b, interleaved_1f1b:v=2, zb_h1) on the shared schedule IR:
+//! step time, bubble fraction and peak memory for the default
 //! ResNet-110 scenario (P=4, mb=4, 16 microbatches). Writes
 //! `BENCH_sched.json` (override the path with `HF_BENCH_OUT`); the
 //! narrative lives in EXPERIMENTS.md.
@@ -9,7 +10,7 @@ use hyparflow::graph::zoo;
 use hyparflow::sim::Platform;
 
 fn main() {
-    println!("=== sched_compare — GPipe vs 1F1B (simulated, shared IR) ===");
+    println!("=== sched_compare — gpipe/1f1b/interleaved/zb_h1 (simulated, shared IR) ===");
     let g = zoo::resnet110_v1();
     let (partitions, mb, num_mb) = (4usize, 4usize, 16usize);
     let pts = figures::sched_compare_data(&g, &Platform::skylake48(), partitions, mb, num_mb);

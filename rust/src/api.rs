@@ -236,9 +236,21 @@ pub fn fit(cfg: &TrainConfig) -> anyhow::Result<FitResult> {
     cfg.model.validate()?;
     let (p, r) = cfg.effective_topology();
     anyhow::ensure!(p >= 1 && r >= 1, "need at least 1 partition and 1 replica");
+    // Interleaved schedules partition at stage granularity: `p * v`
+    // contiguous chunks mapped round-robin onto the `p` pipeline ranks.
+    let stages = p * cfg.engine.schedule.virtual_stages();
     let pt = match &cfg.lpp {
-        Some(lpp) => Partitioning::from_lpp(&cfg.model, lpp)?,
-        None => Partitioning::auto(&cfg.model, p)?,
+        Some(lpp) => {
+            let pt = Partitioning::from_lpp(&cfg.model, lpp)?;
+            anyhow::ensure!(
+                pt.num_partitions == stages,
+                "lpp defines {} partitions but schedule {} over {p} ranks needs {stages} stages",
+                pt.num_partitions,
+                cfg.engine.schedule.label(),
+            );
+            pt
+        }
+        None => Partitioning::auto(&cfg.model, stages)?,
     };
     let dataset = cfg.dataset.clone().unwrap_or_else(|| {
         SyntheticDataset::new(

@@ -22,6 +22,12 @@
 //!   gradients accumulate across microbatches in the order the schedule
 //!   runs backwards — which is why GPipe reproduces the original fill/
 //!   drain loop bitwise.
+//! - `BwdInput {node, mb}` / `BwdWeight {node, mb}` — the ZB-H1 split
+//!   backward: `BwdInput` runs the same kernel as `BwdCompute` but *parks*
+//!   the parameter gradients under `(node, mb)`; the matching `BwdWeight`
+//!   (scheduled later, into the drain bubble) retires them into the
+//!   cross-microbatch accumulators. The kernel runs once, so the split is
+//!   bitwise-neutral; only the accumulation instant moves.
 //! - `Send/RecvError` — partial-error traffic, mirrored ordering.
 //! - `DropStash {mb}` — the microbatch's activations and gradient
 //!   accumulators are dead; under 1F1B this is what bounds live stashes
@@ -115,6 +121,9 @@ pub struct Trainer<'a> {
     eval_program: Program,
     /// Deterministic order of (node, slot) for fused allreduce packing.
     param_order: Vec<(NodeId, usize)>,
+    /// Nodes this rank executes — the union of its stages' partitions
+    /// (one stage for flat schedules, `v` chunks under interleaved).
+    my_nodes: Vec<NodeId>,
 }
 
 impl<'a> Trainer<'a> {
@@ -126,7 +135,16 @@ impl<'a> Trainer<'a> {
         rt: &'a Runtime,
         data: SyntheticDataset,
     ) -> anyhow::Result<Trainer<'a>> {
-        let my_nodes = pt.parts[ce.partition].clone();
+        let program = Program::compile(g, pt, cfg.num_microbatches, cfg.schedule);
+        let eval_program = Program::forward_only(pt, cfg.schedule);
+        // Under interleaved schedules a rank owns several stages (model
+        // chunks); its parameter set is their union, ascending node order
+        // (stages ascend and partitions are contiguous chunks).
+        let my_nodes: Vec<NodeId> = program
+            .stages_of(ce.partition)
+            .iter()
+            .flat_map(|&s| pt.parts[s].iter().copied())
+            .collect();
         // Global parameter ordinal per node: number of parameter slots in
         // all earlier nodes. Seeding init by ordinal (not node id) makes
         // initialization invariant under graph rewrites that preserve the
@@ -178,8 +196,6 @@ impl<'a> Trainer<'a> {
             ce.bcast_param(t, i);
         }
         let opt = SgdMomentum::new(cfg.lr, cfg.momentum, &param_order, &params);
-        let program = Program::compile(g, pt, cfg.num_microbatches, cfg.schedule);
-        let eval_program = Program::forward_only(pt);
         Ok(Trainer {
             g,
             pt,
@@ -192,6 +208,7 @@ impl<'a> Trainer<'a> {
             program,
             eval_program,
             param_order,
+            my_nodes,
         })
     }
 
@@ -218,7 +235,14 @@ impl<'a> Trainer<'a> {
     }
 
     fn is_last_partition(&self) -> bool {
-        self.ce.partition == self.pt.num_partitions - 1
+        // The loss head lives in the last *stage*, which the round-robin
+        // stage map puts on the last *rank*.
+        self.ce.partition == self.program.num_partitions - 1
+    }
+
+    /// Does `stage` run on this rank?
+    fn is_my_stage(&self, stage: usize) -> bool {
+        stage % self.program.num_partitions == self.ce.partition
     }
 
     /// Interpret `FwdCompute {node, mb}`: run one node's forward, stash the
@@ -289,21 +313,27 @@ impl<'a> Trainer<'a> {
         Ok(head)
     }
 
-    /// Interpret `BwdCompute {node, mb}`: assemble the node's
-    /// output-gradient (local consumers + received errors, already summed
-    /// into `gout` in instruction order), compute input and parameter
-    /// gradients, route local input-gradients into `gout` and remote ones
-    /// into `pending_err` for the following `SendError` ops.
+    /// Interpret `BwdCompute {node, mb}` (and ZB-H1's `BwdInput` when
+    /// `split` is set): assemble the node's output-gradient (local
+    /// consumers + received errors, already summed into `gout` in
+    /// instruction order), compute input and parameter gradients, route
+    /// local input-gradients into `gout` and remote ones into
+    /// `pending_err` for the following `SendError` ops. With `split`,
+    /// parameter gradients are parked in `pending_wgrad` under
+    /// `(node, mb)` instead of being accumulated — the matching
+    /// `BwdWeight` retires them later.
     #[allow(clippy::too_many_arguments)]
     fn exec_bwd_node(
         &self,
         mb: usize,
         nid: NodeId,
+        split: bool,
         acts: &HashMap<NodeId, Tensor>,
         glogits: Option<&Tensor>,
         gout: &mut HashMap<NodeId, Tensor>,
         grads: &mut HashMap<NodeId, Vec<Tensor>>,
         pending_err: &mut HashMap<(usize, usize), Tensor>,
+        pending_wgrad: &mut HashMap<(NodeId, usize), Vec<Tensor>>,
     ) -> anyhow::Result<()> {
         let n_mb = self.cfg.microbatch;
         let node = &self.g.nodes[nid];
@@ -375,21 +405,20 @@ impl<'a> Trainer<'a> {
                 // same slot order as node.params.
                 let gx = outs.remove(0);
                 if !outs.is_empty() {
-                    let slot_grads = grads.entry(nid).or_insert_with(|| {
-                        outs.iter()
-                            .map(|t| Tensor::zeros(t.shape.dims()))
-                            .collect()
-                    });
-                    for (acc, g) in slot_grads.iter_mut().zip(outs.iter()) {
-                        acc.add_assign(g);
+                    if split {
+                        pending_wgrad.insert((nid, mb), outs);
+                    } else {
+                        accumulate_wgrads(grads, nid, &outs);
                     }
                 }
                 vec![(node.inputs[0], gx)]
             }
         };
-        // 3) Route input gradients: local accumulate or park for SendError.
+        // 3) Route input gradients: accumulate if the producer's stage is
+        // on this rank (its own stage or, under interleaved, a sibling
+        // chunk — same-rank messages are elided), else park for SendError.
         for (src, gin) in gins {
-            if self.pt.assign[src] == self.ce.partition {
+            if self.is_my_stage(self.pt.assign[src]) {
                 match gout.get_mut(&src) {
                     Some(t) => t.add_assign(&gin),
                     None => {
@@ -435,6 +464,10 @@ impl<'a> Trainer<'a> {
         let mut heads: Vec<Option<Head>> = vec![None; m];
         let mut grads: HashMap<NodeId, Vec<Tensor>> = HashMap::new();
         let mut pending_err: HashMap<(usize, usize), Tensor> = HashMap::new();
+        // ZB-H1: parameter gradients parked by BwdInput, retired by
+        // BwdWeight. Bounded by the deferral window (<= pipeline depth
+        // microbatches of parameter-shaped tensors).
+        let mut pending_wgrad: HashMap<(NodeId, usize), Vec<Tensor>> = HashMap::new();
 
         // Iterate by index: `Instr` is `Copy`, so this avoids cloning the
         // instruction stream every step while keeping `self` free for the
@@ -443,7 +476,7 @@ impl<'a> Trainer<'a> {
         for i in 0..self.program.rank(part).len() {
             let instr = self.program.rank(part)[i];
             match instr {
-                Instr::FwdCompute { node, mb } => {
+                Instr::FwdCompute { node, mb, .. } => {
                     if let Some(h) = self.exec_fwd_node(step, mb, false, node, &mut stashes[mb])? {
                         heads[mb] = Some(h);
                     }
@@ -458,17 +491,26 @@ impl<'a> Trainer<'a> {
                     let t = self.ce.recv_activation(peer, edge, mb);
                     stashes[mb].insert(e.src_node, t);
                 }
-                Instr::BwdCompute { node, mb } => {
+                Instr::BwdCompute { node, mb, .. } | Instr::BwdInput { node, mb, .. } => {
+                    let split = matches!(instr, Instr::BwdInput { .. });
                     let glogits: Option<&Tensor> = heads[mb].as_ref().map(|(_, g, _)| g);
                     self.exec_bwd_node(
                         mb,
                         node,
+                        split,
                         &stashes[mb],
                         glogits,
                         &mut gouts[mb],
                         &mut grads,
                         &mut pending_err,
+                        &mut pending_wgrad,
                     )?;
+                }
+                Instr::BwdWeight { node, mb, .. } => {
+                    let outs = pending_wgrad
+                        .remove(&(node, mb))
+                        .expect("BwdInput parked the weight gradients before BwdWeight");
+                    accumulate_wgrads(&mut grads, node, &outs);
                 }
                 Instr::SendError { edge, peer, mb } => {
                     let t = pending_err
@@ -561,7 +603,7 @@ impl<'a> Trainer<'a> {
             let mut head = None;
             for instr in &instrs {
                 match *instr {
-                    Instr::FwdCompute { node, mb } => {
+                    Instr::FwdCompute { node, mb, .. } => {
                         if let Some(h) = self.exec_fwd_node(b as u64, mb, true, node, &mut acts)? {
                             head = Some(h);
                         }
@@ -613,10 +655,11 @@ impl<'a> Trainer<'a> {
         out
     }
 
-    /// Names of the artifacts this partition executes (for warmup).
+    /// Names of the artifacts this rank executes (for warmup) — all of
+    /// its stages' nodes.
     pub fn artifact_names(&self) -> Vec<String> {
         let mut v = vec![];
-        for &n in &self.pt.parts[self.ce.partition] {
+        for &n in &self.my_nodes {
             if let Some(a) =
                 crate::graph::artifact::node_artifact(self.g, n, self.cfg.microbatch)
             {
@@ -627,6 +670,19 @@ impl<'a> Trainer<'a> {
             }
         }
         v
+    }
+}
+
+/// Accumulate one microbatch's parameter gradients (`outs`, in slot
+/// order) into the cross-microbatch accumulators — shared by the fused
+/// `BwdCompute` path and ZB-H1's deferred `BwdWeight` so the arithmetic
+/// is identical regardless of when the schedule retires the gradients.
+fn accumulate_wgrads(grads: &mut HashMap<NodeId, Vec<Tensor>>, nid: NodeId, outs: &[Tensor]) {
+    let slot_grads = grads
+        .entry(nid)
+        .or_insert_with(|| outs.iter().map(|t| Tensor::zeros(t.shape.dims())).collect());
+    for (acc, g) in slot_grads.iter_mut().zip(outs.iter()) {
+        acc.add_assign(g);
     }
 }
 

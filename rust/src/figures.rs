@@ -283,11 +283,11 @@ pub fn fig13_hybrid_128nodes() -> Table {
 // Schedule comparison — GPipe vs 1F1B on the shared IR
 // ---------------------------------------------------------------------------
 
-/// One schedule's row of the GPipe-vs-1F1B comparison (raw values, so the
+/// One schedule's row of the schedule comparison (raw values, so the
 /// bench harness can emit them as `BENCH_sched.json` while the table
 /// formatter renders the human view from the same numbers).
 pub struct SchedPoint {
-    pub schedule: &'static str,
+    pub schedule: String,
     pub img_per_sec: f64,
     pub step_secs: f64,
     pub bubble_secs: f64,
@@ -310,9 +310,17 @@ pub fn sched_compare_data(
     mb: usize,
     num_mb: usize,
 ) -> Vec<SchedPoint> {
-    let pt = Partitioning::auto(g, partitions).expect("partitionable");
     let mut points = vec![];
-    for sched in [ScheduleKind::GPipe, ScheduleKind::OneF1B] {
+    for sched in [
+        ScheduleKind::GPipe,
+        ScheduleKind::OneF1B,
+        ScheduleKind::Interleaved1F1B { v: 2 },
+        ScheduleKind::ZbH1,
+    ] {
+        // Stage-level partitioning per schedule: flat kinds cut the model
+        // into `partitions` chunks; interleaved into `partitions * v`,
+        // round-robin over the same rank count.
+        let pt = sched.partitioning(g, partitions).expect("partitionable");
         let mut cfg = SimConfig::new(platform.clone(), partitions, 1);
         cfg.ppn = partitions;
         cfg.microbatch = mb;
@@ -323,7 +331,7 @@ pub fn sched_compare_data(
         let prog = crate::schedule::Program::compile(g, &pt, num_mb, sched);
         let b = crate::sim::simulate_program(g, &pt, &cfg, &prog);
         points.push(SchedPoint {
-            schedule: sched.name(),
+            schedule: sched.label(),
             img_per_sec: cfg.effective_batch() as f64 / b.step_secs,
             step_secs: b.step_secs,
             bubble_secs: b.bubble_secs,
@@ -342,7 +350,7 @@ pub fn sched_table(points: &[SchedPoint]) -> Table {
     ]);
     for p in points {
         t.row(&[
-            p.schedule.into(),
+            p.schedule.clone(),
             f1(p.img_per_sec),
             format!("{:.4}", p.step_secs),
             format!("{:.4}", p.bubble_secs),
@@ -374,7 +382,7 @@ pub fn sched_compare_json(
 ) -> String {
     let rows = json_array(points.iter().map(|p| {
         JsonObj::new()
-            .str("schedule", p.schedule)
+            .str("schedule", &p.schedule)
             .num("img_per_sec", p.img_per_sec)
             .num("step_secs", p.step_secs)
             .num("bubble_secs", p.bubble_secs)
@@ -735,12 +743,32 @@ mod tests {
             "\"bench\":\"sched_compare\"",
             "\"schedule\":\"gpipe\"",
             "\"schedule\":\"1f1b\"",
+            "\"schedule\":\"interleaved_1f1b:v=2\"",
+            "\"schedule\":\"zb_h1\"",
             "\"bubble_frac\"",
             "\"peak_mem_bytes\"",
             "\"resident_microbatches\"",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
+    }
+
+    #[test]
+    fn sched_compare_new_rows_cut_the_bubble() {
+        // ISSUE 7 acceptance criterion on the figure scenario itself
+        // (ResNet-110, P=4, m=16 = 4*depth >= 2*depth): both new schedules
+        // report strictly lower bubble fraction than 1F1B.
+        let pts = sched_compare_data(&zoo::resnet110_v1(), &Platform::skylake48(), 4, 4, 16);
+        let frac = |name: &str| -> f64 {
+            pts.iter().find(|p| p.schedule == name).unwrap().bubble_frac
+        };
+        let f1b = frac("1f1b");
+        assert!(
+            frac("interleaved_1f1b:v=2") < f1b,
+            "interleaved {} !< 1f1b {f1b}",
+            frac("interleaved_1f1b:v=2")
+        );
+        assert!(frac("zb_h1") < f1b, "zb_h1 {} !< 1f1b {f1b}", frac("zb_h1"));
     }
 
     #[test]

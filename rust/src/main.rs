@@ -51,17 +51,19 @@ fn print_usage() {
          USAGE: hyparflow <train|inspect|sim|calibrate|mem> [--key value ...]\n\
          \n\
          train:    --model M --strategy seq|model|data|hybrid --partitions P\n\
-         \x20         --replicas R --steps N --mb B --num-mb K --sched gpipe|1f1b\n\
+         \x20         --replicas R --steps N --mb B --num-mb K\n\
+         \x20         --sched gpipe|1f1b|interleaved_1f1b[:v=N]|zb_h1\n\
          \x20         --lr F --seed S --log-every N --eval N --lpp a,b,c\n\
          \x20         --threads T (kernel worker threads; HF_NATIVE_THREADS)\n\
          inspect:  --model M [--partitions P] [--emit-registry] [--mb B]\n\
          sim:      --model M --nodes N --ppn P --partitions K --replicas R\n\
-         \x20         --mb B --num-mb K --sched gpipe|1f1b\n\
+         \x20         --mb B --num-mb K --sched gpipe|1f1b|interleaved_1f1b[:v=N]|zb_h1\n\
          \x20         --platform skylake|epyc [--calib FILE]\n\
-         \x20         [--calibrate [--calib-out FILE]]  (measure, then simulate)\n\
+         \x20         [--calibrate [--calib-out FILE]]  (measure, then simulate;\n\
+         \x20          a .json calib-out round-trips the full cost table)\n\
          calibrate: [--out FILE] [--mb B]\n\
          mem:      --model M [--mb B] [--partitions P]\n\
-         \x20         [--num-mb K --sched gpipe|1f1b]  (schedule-aware report)"
+         \x20         [--num-mb K --sched ...]  (schedule-aware report)"
     );
 }
 
@@ -110,6 +112,20 @@ impl Flags {
     }
 }
 
+/// Parse `--sched`. A bare `--sched` (next token is another flag, so the
+/// parser filed it as a boolean) must not silently fall back to the
+/// default schedule — that's how typos like `--sched --mb 4` used to
+/// train GPipe unnoticed. Unknown values hard-error in
+/// `ScheduleKind::parse` with the valid list.
+fn sched_flag(f: &Flags) -> anyhow::Result<hyparflow::schedule::ScheduleKind> {
+    anyhow::ensure!(
+        !f.has("sched"),
+        "--sched requires a value ({})",
+        hyparflow::schedule::VALID_SCHEDULES
+    );
+    hyparflow::schedule::ScheduleKind::parse(&f.str("sched", "gpipe"))
+}
+
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let f = Flags::parse(args)?;
     let model = zoo::by_name(&f.str("model", "resnet20"))?;
@@ -120,7 +136,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         .steps(f.get("steps", 20)?)
         .microbatch(f.get("mb", 8)?)
         .num_microbatches(f.get("num-mb", 1)?)
-        .schedule(hyparflow::schedule::ScheduleKind::parse(&f.str("sched", "gpipe"))?)
+        .schedule(sched_flag(&f)?)
         .lr(f.get("lr", 0.05)?)
         .seed(f.get("seed", 42)?)
         .eval_batches(f.get("eval", 0)?)
@@ -250,24 +266,33 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
     let partitions: usize = f.get("partitions", 16)?;
     let replicas: usize = f.get("replicas", 1)?;
     let nodes: usize = f.get("nodes", 1)?;
-    let pt = Partitioning::auto(&g, partitions)?;
     let mut cfg = SimConfig::new(platform, partitions, replicas);
     cfg.nodes = nodes;
     cfg.ppn = f.get("ppn", (partitions * replicas).div_ceil(nodes))?;
     cfg.microbatch = f.get("mb", 4)?;
     cfg.num_microbatches = f.get("num-mb", 8)?;
-    cfg.schedule = hyparflow::schedule::ScheduleKind::parse(&f.str("sched", "gpipe"))?;
+    cfg.schedule = sched_flag(&f)?;
+    // Stage-level partitioning: `partitions` ranks, `partitions * v`
+    // chunks under interleaved schedules.
+    let pt = cfg.schedule.partitioning(&g, partitions)?;
     cfg.overlap_allreduce = !f.has("no-overlap");
     if f.has("calibrate") {
         // Measure this host's kernels, persist the cost table, and feed it
         // straight into the simulation (satellite of the kernel-perf PR:
-        // simulator constants track the real executor).
+        // simulator constants track the real executor). `--calib-out
+        // x.json` writes the full post-calibration cost table as JSON
+        // (round-trips through `--calib`); any other name gets the raw
+        // measured `key value` text.
         let text = hyparflow::figures::measure_calibration()?;
+        cfg.cost.apply_calibration(&text)?;
         let out = f.str("calib-out", "calibration.txt");
-        std::fs::write(&out, &text)?;
+        if out.ends_with(".json") {
+            std::fs::write(&out, cfg.cost.to_json())?;
+        } else {
+            std::fs::write(&out, &text)?;
+        }
         print!("{text}");
         println!("wrote {out}");
-        cfg.cost.apply_calibration(&text)?;
     } else if let Some(path) = f.kv.get("calib") {
         let text = std::fs::read_to_string(path)?;
         cfg.cost.apply_calibration(&text)?;
@@ -277,7 +302,7 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
         "sim {} on {} | nodes={nodes} ppn={} P={partitions} R={replicas} \
          mb={}x{} (EBS {}) sched={}",
         g.name, cfg.platform.name, cfg.ppn, cfg.microbatch, cfg.num_microbatches,
-        cfg.effective_batch(), cfg.schedule.name()
+        cfg.effective_batch(), cfg.schedule.label()
     );
     println!(
         "  {:.1} img/s | step {:.4}s | compute {:.4}s bubble {:.4}s \
@@ -304,7 +329,7 @@ fn cmd_calibrate(args: &[String]) -> anyhow::Result<()> {
 
 fn cmd_mem(args: &[String]) -> anyhow::Result<()> {
     use hyparflow::mem;
-    use hyparflow::schedule::{Program, ScheduleKind};
+    use hyparflow::schedule::Program;
     let f = Flags::parse(args)?;
     anyhow::ensure!(
         !f.kv.contains_key("image-size"),
@@ -321,16 +346,16 @@ fn cmd_mem(args: &[String]) -> anyhow::Result<()> {
         // live intervals — the memory-model view of the shared IR.
         // Default matches train/sim so unflagged cross-command comparisons
         // describe the same schedule.
-        let sched = ScheduleKind::parse(&f.str("sched", "gpipe"))?;
-        let pt = Partitioning::auto(&g, parts.max(1))?;
+        let sched = sched_flag(&f)?;
+        let pt = sched.partitioning(&g, parts.max(1))?;
         let prog = Program::compile(&g, &pt, num_mb, sched);
         let e = mem::scheduled_memory(&g, &pt, mb, &prog);
         println!(
             "{} mb={mb}x{num_mb} partitions={} sched={}: peak {:.2} GB \
              (worst-rank resident microbatches: {})",
             g.name,
-            pt.num_partitions,
-            sched.name(),
+            prog.num_partitions,
+            sched.label(),
             e.total_gb(),
             prog.max_peak_resident_microbatches(),
         );

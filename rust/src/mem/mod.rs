@@ -100,32 +100,57 @@ pub fn partition_memory(
     est
 }
 
-/// Peak memory of partition `part` under a compiled schedule program:
-/// activation residency comes from the program's own stash live intervals,
-/// so the same function reports GPipe's `m`-resident footprint and 1F1B's
-/// depth-bounded one. This is the memory model's view of the shared
-/// schedule IR (the Trainer executes it, the simulator replays it).
+/// Peak memory of rank `rank` under a compiled schedule program. Weights,
+/// gradients, optimizer state and workspace cover every stage the rank
+/// owns (one for flat schedules, `v` chunks under interleaved);
+/// activations come byte-accurately from the program's own stash live
+/// intervals ([`Program::peak_activation_bytes`]), so the same function
+/// reports GPipe's `m`-resident footprint, 1F1B's depth-bounded one, and
+/// the per-chunk-weighted interleaved profile. (ZB-H1 additionally parks
+/// up to `min(P - rank, m)` microbatches of parameter-shaped weight
+/// gradients between `BwdInput` and `BwdWeight`; that transient is
+/// bounded by `gradients * depth / m` and not counted here.) This is the
+/// memory model's view of the shared schedule IR — the Trainer executes
+/// it, the simulator replays it.
 pub fn partition_memory_scheduled(
     g: &ModelGraph,
     pt: &Partitioning,
-    part: usize,
+    rank: usize,
     mb: usize,
     program: &Program,
 ) -> MemEstimate {
-    partition_memory(g, pt, part, mb, program.peak_resident_microbatches(part))
+    let mut est = MemEstimate { framework: FRAMEWORK_BYTES, ..Default::default() };
+    let mut max_patch: u64 = 0;
+    for stage in program.stages_of(rank) {
+        for &nid in &pt.parts[stage] {
+            let node = &g.nodes[nid];
+            let params: u64 = node.params.iter().map(|p| p.numel() as u64 * 4).sum();
+            est.weights += params;
+            est.gradients += params;
+            est.optimizer += params;
+            if let LayerKind::Conv3x3 { .. } | LayerKind::ConvBnRelu { .. } = node.kind {
+                let cin = g.nodes[node.inputs[0]].out_shape[0] as u64;
+                let spatial = node.out_shape[1..].iter().product::<usize>() as u64;
+                max_patch = max_patch.max(cin * 9 * spatial * 4 * mb as u64);
+            }
+        }
+    }
+    est.workspace = max_patch;
+    est.activations = program.peak_activation_bytes(g, rank, mb);
+    est
 }
 
-/// Worst-partition peak memory under a compiled schedule program.
+/// Worst-rank peak memory under a compiled schedule program.
 pub fn scheduled_memory(
     g: &ModelGraph,
     pt: &Partitioning,
     mb: usize,
     program: &Program,
 ) -> MemEstimate {
-    (0..pt.num_partitions)
+    (0..program.num_partitions)
         .map(|p| partition_memory_scheduled(g, pt, p, mb, program))
         .max_by_key(|e| e.total())
-        .expect("at least one partition")
+        .expect("at least one rank")
 }
 
 /// Whole-model memory under sequential training.
@@ -247,5 +272,26 @@ mod tests {
             assert_eq!(a.optimizer, b.optimizer);
         }
         assert!(scheduled_memory(&g, &pt, mb, &f1b).total() < scheduled_memory(&g, &pt, mb, &gp).total());
+    }
+
+    #[test]
+    fn scheduled_memory_covers_all_stages_of_a_rank() {
+        use crate::schedule::{Program, ScheduleKind};
+        let g = zoo::resnet56_v1();
+        let kind = ScheduleKind::Interleaved1F1B { v: 2 };
+        let pt = kind.partitioning(&g, 2).unwrap(); // 4 stages on 2 ranks
+        let prog = Program::compile(&g, &pt, 8, kind);
+        for rank in 0..2 {
+            let e = partition_memory_scheduled(&g, &pt, rank, 4, &prog);
+            let expect_w: u64 = [rank, rank + 2]
+                .iter()
+                .flat_map(|&s| pt.parts[s].iter())
+                .map(|&n| {
+                    g.nodes[n].params.iter().map(|p| p.numel() as u64 * 4).sum::<u64>()
+                })
+                .sum();
+            assert_eq!(e.weights, expect_w, "rank {rank} owns two chunks' params");
+            assert!(e.activations > 0);
+        }
     }
 }

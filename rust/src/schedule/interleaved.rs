@@ -1,0 +1,92 @@
+//! Megatron-style interleaved 1F1B generator.
+//!
+//! The partitioner cuts the model into `S = R * v` contiguous chunks
+//! (stage-level [`Partitioning`]) and stage `s` runs on rank `s % R`, so
+//! each rank owns `v` chunks spread across the pipeline. A microbatch now
+//! visits every rank `v` times per direction; the fill/drain bubble per
+//! visit is the per-*chunk* compute time, ~1/v of a flat stage's, which is
+//! the whole point (Narayanan et al., PAPERS.md).
+//!
+//! **Ordering.** Forward work on rank `r` proceeds in groups of `R`
+//! microbatches: within group `j` (microbatches `j*R .. min((j+1)*R, m)`,
+//! the last group may be ragged), chunks ascend `0..v` and microbatches
+//! ascend within each chunk. Backward mirrors the group with chunks
+//! *descending*, so chunk 0's backward is a microbatch's last touch on the
+//! rank and carries its `DropStash`. The warmup depth
+//! `w = min((R-1-r)*2 + (v-1)*R, m*v)` is Megatron's: deep enough that
+//! chunk `v-1`'s first forward input has arrived before the first backward
+//! is due, shrinking by 2 per downstream rank. After warmup the rank
+//! alternates one forward, one backward (over *virtual* microbatches =
+//! (chunk, mb) pairs), then drains the remaining backwards.
+//!
+//! Messages between two stages of the same rank are elided on both ends
+//! (see `fwd_phase`/`bwd_phase`): the group ordering guarantees the
+//! producer chunk's compute precedes the consumer chunk's in the rank's
+//! own stream, so the activation (forward) or accumulated error (backward)
+//! is already rank-local. Cross-rank messages keep the §6.3 per-phase
+//! linearization. The result passes the buffered-send checker and the
+//! pairing verifier for random `(R, v, m)` — fuzzed in
+//! `rust/tests/proptests.rs` and `rust/tests/schedule_conformance.rs`.
+
+use super::{bwd_phase, fwd_phase, Instr, Program, ScheduleKind};
+use crate::graph::ModelGraph;
+use crate::partition::Partitioning;
+
+pub(super) fn compile(g: &ModelGraph, pt: &Partitioning, m: usize, v: usize) -> Program {
+    let stages = pt.num_partitions;
+    assert!(
+        v >= 2 && stages % v == 0 && stages >= v,
+        "interleaved_1f1b:v={v} needs a stage-level partitioning with a multiple of v \
+         partitions, got {stages} (build it via ScheduleKind::partitioning)"
+    );
+    let p = stages / v;
+    let mut ranks = Vec::with_capacity(p);
+    for r in 0..p {
+        // Virtual-microbatch sequences in groups of `p` microbatches.
+        let mut fseq: Vec<(usize, usize)> = Vec::with_capacity(m * v);
+        let mut bseq: Vec<(usize, usize)> = Vec::with_capacity(m * v);
+        let mut lo = 0;
+        while lo < m {
+            let hi = (lo + p).min(m);
+            for c in 0..v {
+                for mb in lo..hi {
+                    fseq.push((c, mb));
+                }
+            }
+            for c in (0..v).rev() {
+                for mb in lo..hi {
+                    bseq.push((c, mb));
+                }
+            }
+            lo = hi;
+        }
+        let w = ((p - 1 - r) * 2 + (v - 1) * p).min(m * v);
+        let mut prog = vec![];
+        let mut emit_f = |(c, mb): (usize, usize), prog: &mut Vec<Instr>| {
+            fwd_phase(pt, c * p + r, p, mb, prog);
+        };
+        let mut emit_b = |(c, mb): (usize, usize), prog: &mut Vec<Instr>| {
+            bwd_phase(g, pt, c * p + r, p, mb, false, c == 0, prog);
+        };
+        for &f in &fseq[..w] {
+            emit_f(f, &mut prog);
+        }
+        for i in w..fseq.len() {
+            emit_f(fseq[i], &mut prog);
+            emit_b(bseq[i - w], &mut prog);
+        }
+        for &b in &bseq[fseq.len() - w..] {
+            emit_b(b, &mut prog);
+        }
+        prog.push(Instr::AllreduceGrads);
+        prog.push(Instr::OptStep);
+        ranks.push(prog);
+    }
+    Program {
+        kind: ScheduleKind::Interleaved1F1B { v },
+        num_microbatches: m,
+        num_partitions: p,
+        num_stages: stages,
+        ranks,
+    }
+}

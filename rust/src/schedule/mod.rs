@@ -2,7 +2,8 @@
 //!
 //! One `(ModelGraph, Partitioning, num_microbatches)` triple compiles into
 //! an explicit per-rank **instruction program** — compute ops
-//! ([`Instr::FwdCompute`]/[`Instr::BwdCompute`]), message ops
+//! ([`Instr::FwdCompute`]/[`Instr::BwdCompute`], plus the zero-bubble split
+//! pair [`Instr::BwdInput`]/[`Instr::BwdWeight`]), message ops
 //! (`Send`/`RecvActivation`, `Send`/`RecvError`), stash lifetime markers
 //! ([`Instr::DropStash`]) and the step epilogue
 //! ([`Instr::AllreduceGrads`], [`Instr::OptStep`]). Three consumers
@@ -15,10 +16,11 @@
 //!   stream the engine actually runs,
 //! - the **memory model** (`crate::mem`) derives peak activation residency
 //!   from the program's stash live intervals
-//!   ([`Program::peak_resident_microbatches`]) instead of assuming all
+//!   ([`Program::peak_resident_microbatches`],
+//!   [`Program::peak_activation_bytes`]) instead of assuming all
 //!   microbatches stay resident.
 //!
-//! Two generators are provided:
+//! Four generators are provided:
 //!
 //! - [`ScheduleKind::GPipe`] — the paper's §5.3 fill/drain: all forwards
 //!   (microbatch ascending), then all backwards (descending). Reproduces
@@ -30,6 +32,19 @@
 //!   microbatch stashes are ever live on stage `i` (vs `m` under GPipe),
 //!   which is what makes high `num_microbatches` affordable at fixed
 //!   memory.
+//! - [`ScheduleKind::Interleaved1F1B`] — Megatron-style virtual stages:
+//!   the partitioner cuts the model into `P * v` contiguous chunks and
+//!   assigns stage `s` to rank `s % P` (round-robin), so each rank owns
+//!   `v` chunks and the fill/drain bubble shrinks by ~1/v. Compute ops
+//!   carry their stage index; messages between two stages of the *same*
+//!   rank are elided (the producer's activation is already in the rank's
+//!   stash — chunk order guarantees it precedes the consumer).
+//! - [`ScheduleKind::ZbH1`] — zero-bubble ZB-H1 (Qi et al., PAPERS.md):
+//!   backward splits into `BwdInput` (input gradient — the only part
+//!   downstream stages wait on) and `BwdWeight` (parameter gradient —
+//!   freely schedulable). Each rank defers its weight-grad passes by its
+//!   warmup depth, so that work lands in what 1F1B leaves as drain
+//!   bubble, and `AllreduceGrads` runs only after the last `BwdWeight`.
 //!
 //! **Message linearization.** Within one microbatch, message ops are
 //! ordered by the same global key as `partition::MsgSchedule` (forward by
@@ -38,25 +53,34 @@
 //! interleaved at their dependency-minimal positions. GPipe programs are
 //! therefore safe even under *rendezvous* (unbuffered synchronous) send
 //! semantics, checked by [`Program::check`] and fuzzed in
-//! `rust/tests/proptests.rs`.
+//! `rust/tests/proptests.rs`; all schedules are checked for exactly-once,
+//! peer- and order-consistent pairing by
+//! [`Program::verify_message_pairing`] and conformance-tested end to end
+//! in `rust/tests/schedule_conformance.rs`.
 //!
-//! **1F1B requires buffered sends.** Under rendezvous semantics 1F1B can
-//! deadlock even on a plain chain: stage `i` must get through its forward
-//! send of microbatch `k+1` before posting the receive for stage `i+1`'s
-//! error of microbatch `k`, while stage `i+1` symmetrically blocks on that
-//! error send — two sends facing each other. Real pipelined systems
-//! (PipeDream, Megatron) use asynchronous/buffered communication for
-//! exactly this reason, and the hfmpi fabric buffers sends (MPI_Bsend
-//! semantics), so the engine executes 1F1B safely. The checker models both:
+//! **1F1B-family schedules require buffered sends.** Under rendezvous
+//! semantics 1F1B can deadlock even on a plain chain: stage `i` must get
+//! through its forward send of microbatch `k+1` before posting the receive
+//! for stage `i+1`'s error of microbatch `k`, while stage `i+1`
+//! symmetrically blocks on that error send — two sends facing each other.
+//! Real pipelined systems (PipeDream, Megatron) use asynchronous/buffered
+//! communication for exactly this reason, and the hfmpi fabric buffers
+//! sends (MPI_Bsend semantics), so the engine executes 1F1B (and the
+//! interleaved/zero-bubble variants) safely. The checker models both:
 //! [`SendSemantics::Rendezvous`] for the paper-faithful GPipe claim, and
 //! [`SendSemantics::Buffered`] (sends complete immediately, receives wait
 //! for a matching completed send) to validate that a program is executable
 //! on the actual fabric. `one_f1b_needs_buffered_sends` in the tests below
 //! pins the deadlock demonstration.
 
+mod interleaved;
+
 use crate::graph::{LayerKind, ModelGraph, NodeId};
 use crate::partition::Partitioning;
 use std::collections::HashMap;
+
+/// The `--sched` values [`ScheduleKind::parse`] accepts.
+pub const VALID_SCHEDULES: &str = "gpipe|1f1b|interleaved_1f1b[:v=N]|zb_h1";
 
 /// Which pipeline schedule to compile.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -66,14 +90,41 @@ pub enum ScheduleKind {
     GPipe,
     /// One-forward-one-backward with flush (PipeDream-style).
     OneF1B,
+    /// Interleaved 1F1B with `v` virtual stages per rank (Megatron-style).
+    Interleaved1F1B { v: usize },
+    /// Zero-bubble ZB-H1: backward split into input-grad and weight-grad
+    /// ops, weight-grad work deferred into the drain bubble.
+    ZbH1,
 }
 
 impl ScheduleKind {
     pub fn parse(s: &str) -> anyhow::Result<ScheduleKind> {
+        if let Some(rest) = s.strip_prefix("interleaved_1f1b") {
+            let v = match rest {
+                "" => 2,
+                _ => rest
+                    .strip_prefix(":v=")
+                    .and_then(|n| n.parse::<usize>().ok())
+                    .filter(|&v| v >= 1)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "bad schedule '{s}': expected interleaved_1f1b[:v=N] with \
+                             N >= 1 (valid schedules: {VALID_SCHEDULES})"
+                        )
+                    })?,
+            };
+            // v=1 is plain 1F1B; normalize so downstream matches stay simple.
+            return Ok(if v == 1 {
+                ScheduleKind::OneF1B
+            } else {
+                ScheduleKind::Interleaved1F1B { v }
+            });
+        }
         Ok(match s {
             "gpipe" => ScheduleKind::GPipe,
             "1f1b" | "one_f1b" | "onef1b" => ScheduleKind::OneF1B,
-            _ => anyhow::bail!("unknown schedule '{s}' (gpipe|1f1b)"),
+            "zb_h1" | "zbh1" => ScheduleKind::ZbH1,
+            _ => anyhow::bail!("unknown schedule '{s}' (valid schedules: {VALID_SCHEDULES})"),
         })
     }
 
@@ -81,20 +132,54 @@ impl ScheduleKind {
         match self {
             ScheduleKind::GPipe => "gpipe",
             ScheduleKind::OneF1B => "1f1b",
+            ScheduleKind::Interleaved1F1B { .. } => "interleaved_1f1b",
+            ScheduleKind::ZbH1 => "zb_h1",
         }
+    }
+
+    /// Display label including parameters (`interleaved_1f1b:v=2`).
+    pub fn label(&self) -> String {
+        match self {
+            ScheduleKind::Interleaved1F1B { v } => format!("interleaved_1f1b:v={v}"),
+            k => k.name().to_string(),
+        }
+    }
+
+    /// Virtual stages (model chunks) each rank owns under this schedule.
+    pub fn virtual_stages(&self) -> usize {
+        match self {
+            ScheduleKind::Interleaved1F1B { v } => *v,
+            _ => 1,
+        }
+    }
+
+    /// The stage-level partitioning for `ranks` pipeline ranks: flat
+    /// schedules get one stage per rank; interleaved gets `ranks * v`
+    /// contiguous chunks (stage `s` runs on rank `s % ranks`).
+    pub fn partitioning(&self, g: &ModelGraph, ranks: usize) -> anyhow::Result<Partitioning> {
+        Partitioning::auto(g, ranks * self.virtual_stages())
     }
 }
 
 /// One instruction of a rank's program. `edge` indexes `Partitioning::edges`
-/// (also the message-tag component); `peer` is the partner partition.
+/// (also the message-tag component); `peer` is the partner *rank*; `stage`
+/// is the stage-level partition a compute op belongs to (equal to the rank
+/// for flat schedules, `chunk * ranks + rank` under interleaved).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Instr {
     /// Run the forward of `node` for microbatch `mb` (inputs are in the
     /// stash: local producers computed earlier, remote ones received).
-    FwdCompute { node: NodeId, mb: usize },
+    FwdCompute { node: NodeId, stage: usize, mb: usize },
     /// Run the backward of `node` for microbatch `mb` (output-gradient
     /// already accumulated from local consumers and received errors).
-    BwdCompute { node: NodeId, mb: usize },
+    BwdCompute { node: NodeId, stage: usize, mb: usize },
+    /// ZB-H1 split backward, part 1: the input gradient — the only piece
+    /// downstream stages wait on. Parameter gradients computed alongside
+    /// are parked until the matching `BwdWeight` retires them.
+    BwdInput { node: NodeId, stage: usize, mb: usize },
+    /// ZB-H1 split backward, part 2: accumulate the parked parameter
+    /// gradients of `(node, mb)` — freely schedulable into drain bubbles.
+    BwdWeight { node: NodeId, stage: usize, mb: usize },
     /// Ship the producer's stashed activation along a cross edge.
     SendActivation { edge: usize, peer: usize, mb: usize },
     /// Receive a remote activation; stashed under the producer node id.
@@ -148,12 +233,19 @@ pub enum SendSemantics {
 pub struct Program {
     pub kind: ScheduleKind,
     pub num_microbatches: usize,
+    /// Pipeline ranks (processes) — one instruction stream each.
     pub num_partitions: usize,
+    /// Stage-level partitions in the underlying `Partitioning`:
+    /// `num_partitions * v` under interleaved, `num_partitions` otherwise.
+    pub num_stages: usize,
     ranks: Vec<Vec<Instr>>,
 }
 
 impl Program {
-    /// Compile the schedule for `(g, pt, m)` under `kind`.
+    /// Compile the schedule for `(g, pt, m)` under `kind`. For
+    /// [`ScheduleKind::Interleaved1F1B`] the partitioning is interpreted
+    /// at *stage* level: `pt.num_partitions` must be a multiple of `v`
+    /// (use [`ScheduleKind::partitioning`] to build it).
     pub fn compile(
         g: &ModelGraph,
         pt: &Partitioning,
@@ -161,34 +253,66 @@ impl Program {
         kind: ScheduleKind,
     ) -> Program {
         assert!(num_microbatches >= 1, "need at least one microbatch");
-        let p = pt.num_partitions;
         let m = num_microbatches;
+        if let ScheduleKind::Interleaved1F1B { v } = kind {
+            if v > 1 {
+                return interleaved::compile(g, pt, m, v);
+            }
+        }
+        let p = pt.num_partitions;
         let mut ranks = Vec::with_capacity(p);
         for part in 0..p {
             let mut prog = vec![];
             match kind {
                 ScheduleKind::GPipe => {
                     for mb in 0..m {
-                        fwd_phase(pt, part, mb, &mut prog);
+                        fwd_phase(pt, part, p, mb, &mut prog);
                     }
                     for mb in (0..m).rev() {
-                        bwd_phase(g, pt, part, mb, &mut prog);
+                        bwd_phase(g, pt, part, p, mb, false, true, &mut prog);
                     }
                 }
-                ScheduleKind::OneF1B => {
+                ScheduleKind::OneF1B | ScheduleKind::Interleaved1F1B { .. } => {
                     // Warmup depth: how many forwards stage `part` runs
                     // before its first backward. Bounds in-flight stashes
                     // to w+1 <= P - part.
                     let w = (p - 1 - part).min(m);
                     for mb in 0..w {
-                        fwd_phase(pt, part, mb, &mut prog);
+                        fwd_phase(pt, part, p, mb, &mut prog);
                     }
                     for k in 0..m - w {
-                        fwd_phase(pt, part, w + k, &mut prog);
-                        bwd_phase(g, pt, part, k, &mut prog);
+                        fwd_phase(pt, part, p, w + k, &mut prog);
+                        bwd_phase(g, pt, part, p, k, false, true, &mut prog);
                     }
                     for k in m - w..m {
-                        bwd_phase(g, pt, part, k, &mut prog);
+                        bwd_phase(g, pt, part, p, k, false, true, &mut prog);
+                    }
+                }
+                ScheduleKind::ZbH1 => {
+                    // 1F1B skeleton with the backward split: `BwdInput`
+                    // stays on the critical path; each microbatch's
+                    // `BwdWeight` pass is deferred by d = w microbatches,
+                    // landing the weight-grad work in what 1F1B leaves as
+                    // drain bubble. Weight passes run microbatch-ascending,
+                    // so gradient accumulation order matches 1F1B's and the
+                    // P=1 degenerate is the sequential reference bitwise.
+                    let w = (p - 1 - part).min(m);
+                    for mb in 0..w {
+                        fwd_phase(pt, part, p, mb, &mut prog);
+                    }
+                    for k in 0..m {
+                        if w + k < m {
+                            fwd_phase(pt, part, p, w + k, &mut prog);
+                        }
+                        bwd_phase(g, pt, part, p, k, true, true, &mut prog);
+                        if k >= w {
+                            bwd_weight_phase(g, pt, part, k - w, &mut prog);
+                        }
+                    }
+                    // Flush the deferred weight-grad passes — the epilogue
+                    // (AllreduceGrads) runs only after the last BwdWeight.
+                    for mb in m - w..m {
+                        bwd_weight_phase(g, pt, part, mb, &mut prog);
                     }
                 }
             }
@@ -196,39 +320,48 @@ impl Program {
             prog.push(Instr::OptStep);
             ranks.push(prog);
         }
-        Program { kind, num_microbatches: m, num_partitions: p, ranks }
+        Program { kind, num_microbatches: m, num_partitions: p, num_stages: p, ranks }
     }
 
-    /// A forward-only single-microbatch program (evaluation path).
-    pub fn forward_only(pt: &Partitioning) -> Program {
-        let p = pt.num_partitions;
+    /// A forward-only single-microbatch program (evaluation path). Under
+    /// interleaved kinds each rank visits its chunks in ascending stage
+    /// order, which is deadlock-free on the buffered fabric.
+    pub fn forward_only(pt: &Partitioning, kind: ScheduleKind) -> Program {
+        let v = kind.virtual_stages();
+        let stages = pt.num_partitions;
+        assert_eq!(stages % v, 0, "stage count {stages} not divisible by v={v}");
+        let p = stages / v;
         let mut ranks = Vec::with_capacity(p);
-        for part in 0..p {
+        for rank in 0..p {
             let mut prog = vec![];
-            fwd_phase(pt, part, 0, &mut prog);
+            for c in 0..v {
+                fwd_phase(pt, c * p + rank, p, 0, &mut prog);
+            }
             ranks.push(prog);
         }
-        Program {
-            kind: ScheduleKind::GPipe,
-            num_microbatches: 1,
-            num_partitions: p,
-            ranks,
-        }
+        Program { kind, num_microbatches: 1, num_partitions: p, num_stages: stages, ranks }
     }
 
-    /// The instruction stream of one rank (== partition index).
-    pub fn rank(&self, part: usize) -> &[Instr] {
-        &self.ranks[part]
+    /// The instruction stream of one rank.
+    pub fn rank(&self, rank: usize) -> &[Instr] {
+        &self.ranks[rank]
     }
 
-    /// Peak number of microbatch stashes simultaneously live on `part`,
+    /// The stage indices rank `rank` executes, ascending (chunk 0 first).
+    pub fn stages_of(&self, rank: usize) -> Vec<usize> {
+        (rank..self.num_stages).step_by(self.num_partitions).collect()
+    }
+
+    /// Peak number of microbatch stashes simultaneously live on `rank`,
     /// from the program's own live intervals (first touch -> `DropStash`).
-    /// GPipe yields `m`; 1F1B yields `min(P - part, m)`.
-    pub fn peak_resident_microbatches(&self, part: usize) -> usize {
+    /// GPipe yields `m`; 1F1B and ZB-H1 yield `min(P - rank, m)`;
+    /// interleaved at most `min(2P, m)` (warmup spans two microbatch
+    /// groups).
+    pub fn peak_resident_microbatches(&self, rank: usize) -> usize {
         let mut touched: Vec<bool> = vec![false; self.num_microbatches];
         let mut live = 0usize;
         let mut peak = 0usize;
-        for instr in &self.ranks[part] {
+        for instr in &self.ranks[rank] {
             match *instr {
                 Instr::FwdCompute { mb, .. } | Instr::RecvActivation { mb, .. } => {
                     if !touched[mb] {
@@ -255,6 +388,43 @@ impl Program {
             .map(|p| self.peak_resident_microbatches(p))
             .max()
             .unwrap_or(0)
+    }
+
+    /// Peak bytes of stashed activations on `rank` for microbatch size
+    /// `mb`, byte-accurate from the instruction stream: each `FwdCompute`
+    /// makes its node's output live (own nodes only — received activations
+    /// are not counted, matching `mem::partition_memory`'s accounting),
+    /// and `DropStash` retires the microbatch. For flat schedules this
+    /// equals `peak_resident_microbatches * Σ node bytes`; under
+    /// interleaved the chunks of one rank hold different byte totals, so
+    /// this walk is the ground truth the memory model reads.
+    pub fn peak_activation_bytes(&self, g: &ModelGraph, rank: usize, mb: usize) -> u64 {
+        let mut live: HashMap<(usize, NodeId), u64> = HashMap::new();
+        let (mut cur, mut peak) = (0u64, 0u64);
+        for instr in &self.ranks[rank] {
+            match *instr {
+                Instr::FwdCompute { node, mb: b, .. } => {
+                    let bytes =
+                        g.nodes[node].out_shape.iter().product::<usize>() as u64 * 4 * mb as u64;
+                    if live.insert((b, node), bytes).is_none() {
+                        cur += bytes;
+                        peak = peak.max(cur);
+                    }
+                }
+                Instr::DropStash { mb: b } => {
+                    live.retain(|&(bb, _), bytes| {
+                        if bb == b {
+                            cur -= *bytes;
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                }
+                _ => {}
+            }
+        }
+        peak
     }
 
     /// Simulate the program's message ops under the given send semantics.
@@ -350,80 +520,158 @@ impl Program {
             }
         }
     }
+
+    /// Machine-check exactly-once, peer-consistent, order-consistent
+    /// message pairing across the rank streams: every `(edge, mb, class)`
+    /// has exactly one send and one receive, each naming the other's rank
+    /// as its peer (never itself), and for every `(edge, class)` channel
+    /// both endpoints see the microbatches in the same order — the fabric
+    /// delivers per-tag FIFO, so mismatched order would swap payloads.
+    pub fn verify_message_pairing(&self) -> anyhow::Result<()> {
+        use std::collections::BTreeMap;
+        type Key = (usize, usize, u8);
+        let mut sends: BTreeMap<Key, Vec<(usize, usize)>> = BTreeMap::new();
+        let mut recvs: BTreeMap<Key, Vec<(usize, usize)>> = BTreeMap::new();
+        let mut send_order: BTreeMap<(usize, u8), Vec<usize>> = BTreeMap::new();
+        let mut recv_order: BTreeMap<(usize, u8), Vec<usize>> = BTreeMap::new();
+        for rank in 0..self.num_partitions {
+            for i in &self.ranks[rank] {
+                if let Some((edge, mb, class, is_send, peer)) = i.msg_key() {
+                    if is_send {
+                        sends.entry((edge, mb, class)).or_default().push((rank, peer));
+                        send_order.entry((edge, class)).or_default().push(mb);
+                    } else {
+                        recvs.entry((edge, mb, class)).or_default().push((rank, peer));
+                        recv_order.entry((edge, class)).or_default().push(mb);
+                    }
+                }
+            }
+        }
+        for (k, s) in &sends {
+            anyhow::ensure!(s.len() == 1, "message {k:?} sent {} times", s.len());
+            let r = recvs
+                .get(k)
+                .ok_or_else(|| anyhow::anyhow!("message {k:?} sent but never received"))?;
+            anyhow::ensure!(r.len() == 1, "message {k:?} received {} times", r.len());
+            let ((sr, sp), (rr, rp)) = (s[0], r[0]);
+            anyhow::ensure!(
+                sp == rr && rp == sr,
+                "message {k:?}: send {sr}->{sp} does not face recv on {rr} from {rp}"
+            );
+            anyhow::ensure!(sr != rr, "message {k:?} is a self-send on rank {sr}");
+        }
+        for k in recvs.keys() {
+            anyhow::ensure!(sends.contains_key(k), "message {k:?} received but never sent");
+        }
+        for (k, so) in &send_order {
+            let ro = recv_order.get(k).expect("recv channel exists if send channel does");
+            anyhow::ensure!(
+                so == ro,
+                "channel {k:?}: send mb order {so:?} != recv mb order {ro:?}"
+            );
+        }
+        Ok(())
+    }
 }
 
-/// Forward phase of one microbatch on one partition: message ops in the
-/// §6.3 global order `(consumer node, producer node)` — the same
-/// linearization `partition::MsgSchedule::build` produces — with
-/// `FwdCompute` ops inserted at their dependency-minimal slots (a node's
-/// compute goes after all messages keyed below it, so its receives precede
-/// it and its sends follow it).
-fn fwd_phase(pt: &Partitioning, part: usize, mb: usize, out: &mut Vec<Instr>) {
+/// Forward phase of one microbatch on one stage: message ops in the §6.3
+/// global order `(consumer node, producer node)` — the same linearization
+/// `partition::MsgSchedule::build` produces — with `FwdCompute` ops
+/// inserted at their dependency-minimal slots (a node's compute goes after
+/// all messages keyed below it, so its receives precede it and its sends
+/// follow it). `ranks` maps stages onto ranks (`stage % ranks`); messages
+/// between two stages of the same rank are elided, because the producer's
+/// activation is already in the rank's stash: for the same microbatch a
+/// lower chunk's forward always precedes a higher chunk's on one rank.
+fn fwd_phase(pt: &Partitioning, stage: usize, ranks: usize, mb: usize, out: &mut Vec<Instr>) {
+    let my_rank = stage % ranks;
     let mut msgs: Vec<(usize, usize, Instr)> = vec![];
     for e in &pt.edges {
-        if e.src_part == part {
+        if e.src_part == stage && e.dst_part % ranks != my_rank {
             msgs.push((
                 e.dst_node,
                 e.src_node,
-                Instr::SendActivation { edge: e.id, peer: e.dst_part, mb },
+                Instr::SendActivation { edge: e.id, peer: e.dst_part % ranks, mb },
             ));
         }
-        if e.dst_part == part {
+        if e.dst_part == stage && e.src_part % ranks != my_rank {
             msgs.push((
                 e.dst_node,
                 e.src_node,
-                Instr::RecvActivation { edge: e.id, peer: e.src_part, mb },
+                Instr::RecvActivation { edge: e.id, peer: e.src_part % ranks, mb },
             ));
         }
     }
     msgs.sort_by_key(|&(d, s, _)| (d, s));
-    let nodes = &pt.parts[part];
+    let nodes = &pt.parts[stage];
     let mut ni = 0usize;
     for (d, _s, m) in msgs {
         // Every local node strictly below the message key is computable
         // now; in particular a send's producer (s < d) and not yet the
         // receive's consumer (== d).
         while ni < nodes.len() && nodes[ni] < d {
-            out.push(Instr::FwdCompute { node: nodes[ni], mb });
+            out.push(Instr::FwdCompute { node: nodes[ni], stage, mb });
             ni += 1;
         }
         out.push(m);
     }
     while ni < nodes.len() {
-        out.push(Instr::FwdCompute { node: nodes[ni], mb });
+        out.push(Instr::FwdCompute { node: nodes[ni], stage, mb });
         ni += 1;
     }
 }
 
-/// Backward phase of one microbatch on one partition: the mirror
+/// Backward phase of one microbatch on one stage: the mirror
 /// linearization, keyed `(Reverse(producer), Reverse(consumer))`, with
-/// `BwdCompute` ops interleaved in reverse topological order and a final
-/// `DropStash` marking the end of the microbatch's stash live interval.
-fn bwd_phase(g: &ModelGraph, pt: &Partitioning, part: usize, mb: usize, out: &mut Vec<Instr>) {
+/// backward compute ops interleaved in reverse topological order. With
+/// `split` set, parameter-carrying nodes emit `BwdInput` (ZB-H1) instead
+/// of the fused `BwdCompute`; parameter-less nodes have no weight half and
+/// always emit `BwdCompute`. `drop` appends the `DropStash` marker — the
+/// caller sets it on the microbatch's *last* backward phase on this rank
+/// (chunk 0 under interleaved). Same-rank messages are elided as in
+/// [`fwd_phase`]: a higher chunk's backward precedes a lower chunk's, so
+/// the error is accumulated into the rank-local `gout` directly.
+#[allow(clippy::too_many_arguments)]
+fn bwd_phase(
+    g: &ModelGraph,
+    pt: &Partitioning,
+    stage: usize,
+    ranks: usize,
+    mb: usize,
+    split: bool,
+    drop: bool,
+    out: &mut Vec<Instr>,
+) {
+    let my_rank = stage % ranks;
     let mut msgs: Vec<(usize, usize, Instr)> = vec![];
     for e in &pt.edges {
-        if e.dst_part == part {
+        if e.dst_part == stage && e.src_part % ranks != my_rank {
             msgs.push((
                 e.src_node,
                 e.dst_node,
-                Instr::SendError { edge: e.id, peer: e.src_part, mb },
+                Instr::SendError { edge: e.id, peer: e.src_part % ranks, mb },
             ));
         }
-        if e.src_part == part {
+        if e.src_part == stage && e.dst_part % ranks != my_rank {
             msgs.push((
                 e.src_node,
                 e.dst_node,
-                Instr::RecvError { edge: e.id, peer: e.dst_part, mb },
+                Instr::RecvError { edge: e.id, peer: e.dst_part % ranks, mb },
             ));
         }
     }
     msgs.sort_by_key(|&(s, d, _)| (std::cmp::Reverse(s), std::cmp::Reverse(d)));
-    let nodes = &pt.parts[part];
+    let nodes = &pt.parts[stage];
     let mut ni = 0usize; // index into nodes traversed in reverse
     let rev = |i: usize| nodes[nodes.len() - 1 - i];
     let mut emit = |node: NodeId, out: &mut Vec<Instr>| {
-        if !matches!(g.nodes[node].kind, LayerKind::Input) {
-            out.push(Instr::BwdCompute { node, mb });
+        if matches!(g.nodes[node].kind, LayerKind::Input) {
+            return;
+        }
+        if split && !g.nodes[node].params.is_empty() {
+            out.push(Instr::BwdInput { node, stage, mb });
+        } else {
+            out.push(Instr::BwdCompute { node, stage, mb });
         }
     };
     for (s, _d, m) in msgs {
@@ -440,7 +688,26 @@ fn bwd_phase(g: &ModelGraph, pt: &Partitioning, part: usize, mb: usize, out: &mu
         emit(rev(ni), out);
         ni += 1;
     }
-    out.push(Instr::DropStash { mb });
+    if drop {
+        out.push(Instr::DropStash { mb });
+    }
+}
+
+/// ZB-H1 weight-grad pass: retire the parked parameter gradients of one
+/// microbatch on one stage, reverse topological order (mirroring the
+/// fused backward's accumulation order).
+fn bwd_weight_phase(
+    g: &ModelGraph,
+    pt: &Partitioning,
+    stage: usize,
+    mb: usize,
+    out: &mut Vec<Instr>,
+) {
+    for &node in pt.parts[stage].iter().rev() {
+        if !g.nodes[node].params.is_empty() {
+            out.push(Instr::BwdWeight { node, stage, mb });
+        }
+    }
 }
 
 #[cfg(test)]
@@ -450,7 +717,7 @@ mod tests {
 
     fn program(parts: usize, m: usize, kind: ScheduleKind) -> (Partitioning, Program) {
         let g = zoo::resnet20_v1();
-        let pt = Partitioning::auto(&g, parts).unwrap();
+        let pt = kind.partitioning(&g, parts).unwrap();
         let prog = Program::compile(&g, &pt, m, kind);
         (pt, prog)
     }
@@ -501,6 +768,168 @@ mod tests {
     }
 
     #[test]
+    fn zb_h1_passes_buffered_check_and_covers_all_edges() {
+        let (pt, prog) = program(4, 8, ScheduleKind::ZbH1);
+        let steps = prog.check(SendSemantics::Buffered).unwrap();
+        assert_eq!(steps, pt.edges.len() * 2 * 8);
+        prog.verify_message_pairing().unwrap();
+    }
+
+    #[test]
+    fn zb_h1_residency_matches_one_f1b() {
+        // The split backward moves weight-grad work, not stash lifetimes:
+        // DropStash still follows the input-grad pass, so the activation
+        // bound is 1F1B's min(P - rank, m). (The deferred weight passes
+        // park only parameter-gradient tensors, not activations.)
+        let (_, prog) = program(4, 16, ScheduleKind::ZbH1);
+        for part in 0..4 {
+            assert_eq!(prog.peak_resident_microbatches(part), 4 - part);
+        }
+    }
+
+    #[test]
+    fn zb_h1_defers_weight_work_into_the_drain() {
+        let g = zoo::resnet20_v1();
+        let pt = Partitioning::auto(&g, 4).unwrap();
+        let m = 8;
+        let prog = Program::compile(&g, &pt, m, ScheduleKind::ZbH1);
+        for part in 0..4 {
+            let stream = prog.rank(part);
+            let w = (4 - 1 - part).min(m);
+            // Exactly one BwdInput and one BwdWeight per (param node, mb),
+            // weight passes microbatch-ascending and deferred by w.
+            let weights: Vec<usize> = stream
+                .iter()
+                .filter_map(|i| match i {
+                    Instr::BwdWeight { mb, .. } => Some(*mb),
+                    _ => None,
+                })
+                .collect();
+            let param_nodes =
+                pt.parts[part].iter().filter(|&&n| !g.nodes[n].params.is_empty()).count();
+            assert_eq!(weights.len(), param_nodes * m);
+            let mut sorted = weights.clone();
+            sorted.sort();
+            assert_eq!(weights, sorted, "rank {part}: weight passes must ascend");
+            // The mb-k weight pass comes after the mb-(k+w) input pass
+            // (deferral window) and the epilogue after the last weight op.
+            let pos_last_w = stream
+                .iter()
+                .rposition(|i| matches!(i, Instr::BwdWeight { .. }))
+                .unwrap();
+            let pos_ar = stream
+                .iter()
+                .position(|i| matches!(i, Instr::AllreduceGrads))
+                .unwrap();
+            assert!(pos_last_w < pos_ar, "rank {part}: allreduce before last BwdWeight");
+            if w > 0 {
+                let first_w = stream
+                    .iter()
+                    .position(|i| matches!(i, Instr::BwdWeight { .. }))
+                    .unwrap();
+                let bi_w = stream
+                    .iter()
+                    .position(|i| {
+                        matches!(
+                            i,
+                            Instr::BwdInput { mb, .. } | Instr::BwdCompute { mb, .. } if *mb == w
+                        )
+                    })
+                    .unwrap();
+                assert!(first_w > bi_w, "rank {part}: weight pass not deferred");
+            }
+        }
+    }
+
+    #[test]
+    fn zb_h1_single_rank_degenerates_to_ascending_f_bi_w() {
+        let g = zoo::mlp(8, &[8, 8], 4);
+        let pt = Partitioning::auto(&g, 1).unwrap();
+        let prog = Program::compile(&g, &pt, 3, ScheduleKind::ZbH1);
+        let mut seen = vec![];
+        for i in prog.rank(0) {
+            match *i {
+                Instr::FwdCompute { mb, node, .. } if node == 0 => seen.push(('f', mb)),
+                Instr::DropStash { mb } => seen.push(('d', mb)),
+                Instr::BwdWeight { mb, node, .. } if node == 1 => seen.push(('w', mb)),
+                _ => {}
+            }
+        }
+        assert_eq!(
+            seen,
+            vec![
+                ('f', 0),
+                ('d', 0),
+                ('w', 0),
+                ('f', 1),
+                ('d', 1),
+                ('w', 1),
+                ('f', 2),
+                ('d', 2),
+                ('w', 2)
+            ]
+        );
+    }
+
+    #[test]
+    fn interleaved_passes_buffered_check_and_pairing() {
+        for (ranks, v, m) in [(2, 2, 4), (2, 2, 3), (4, 2, 8), (2, 3, 5), (3, 2, 7)] {
+            let g = zoo::resnet56_v1();
+            let kind = ScheduleKind::Interleaved1F1B { v };
+            let pt = kind.partitioning(&g, ranks).unwrap();
+            let prog = Program::compile(&g, &pt, m, kind);
+            assert_eq!(prog.num_partitions, ranks);
+            assert_eq!(prog.num_stages, ranks * v);
+            prog.check(SendSemantics::Buffered)
+                .unwrap_or_else(|stuck| panic!("R={ranks} v={v} m={m}: stuck ranks {stuck:?}"));
+            prog.verify_message_pairing().unwrap();
+        }
+    }
+
+    #[test]
+    fn interleaved_maps_stages_round_robin() {
+        let (pt, prog) = program(2, 4, ScheduleKind::Interleaved1F1B { v: 2 });
+        assert_eq!(pt.num_partitions, 4, "stage-level partitioning");
+        for rank in 0..2 {
+            assert_eq!(prog.stages_of(rank), vec![rank, rank + 2]);
+            for i in prog.rank(rank) {
+                if let Instr::FwdCompute { stage, node, .. }
+                | Instr::BwdCompute { stage, node, .. } = *i
+                {
+                    assert_eq!(stage % 2, rank);
+                    assert!(pt.parts[stage].contains(&node));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_elides_same_rank_messages() {
+        // Every message op in an interleaved program crosses ranks; edges
+        // between two stages of the same rank produce no send/recv.
+        let g = zoo::resnet56_v1();
+        let kind = ScheduleKind::Interleaved1F1B { v: 2 };
+        let pt = kind.partitioning(&g, 2).unwrap();
+        let prog = Program::compile(&g, &pt, 4, kind);
+        let cross: usize =
+            pt.edges.iter().filter(|e| e.src_part % 2 != e.dst_part % 2).count();
+        let steps = prog.check(SendSemantics::Buffered).unwrap();
+        assert_eq!(steps, cross * 2 * 4, "only cross-rank edges carry messages");
+        for e in pt.edges.iter().filter(|e| e.src_part % 2 == e.dst_part % 2) {
+            for rank in 0..2 {
+                assert!(
+                    !prog.rank(rank).iter().any(|i| matches!(
+                        i.msg_key(),
+                        Some((edge, _, _, _, _)) if edge == e.id
+                    )),
+                    "same-rank edge {} must be elided",
+                    e.id
+                );
+            }
+        }
+    }
+
+    #[test]
     fn single_partition_one_f1b_interleaves() {
         // P=1 degenerates to fwd/bwd per microbatch, ascending.
         let g = zoo::mlp(8, &[8, 8], 4);
@@ -509,7 +938,7 @@ mod tests {
         let mut seen = vec![];
         for i in prog.rank(0) {
             match *i {
-                Instr::FwdCompute { mb, node } if node == 0 => seen.push(('f', mb)),
+                Instr::FwdCompute { mb, node, .. } if node == 0 => seen.push(('f', mb)),
                 Instr::DropStash { mb } => seen.push(('d', mb)),
                 _ => {}
             }
@@ -539,14 +968,14 @@ mod tests {
                                      if *edge == e.id && *m == mb)
                         });
                         let consume = pos(&|i: &Instr| {
-                            matches!(i, Instr::FwdCompute { node, mb: m }
+                            matches!(i, Instr::FwdCompute { node, mb: m, .. }
                                      if *node == e.dst_node && *m == mb)
                         });
                         assert!(recv < consume, "part {part} edge {} mb {mb}", e.id);
                     }
                     if e.src_part == part {
                         let produce = pos(&|i: &Instr| {
-                            matches!(i, Instr::FwdCompute { node, mb: m }
+                            matches!(i, Instr::FwdCompute { node, mb: m, .. }
                                      if *node == e.src_node && *m == mb)
                         });
                         let send = pos(&|i: &Instr| {
@@ -562,19 +991,25 @@ mod tests {
 
     #[test]
     fn epilogue_present_once_per_rank() {
-        let (_, prog) = program(3, 4, ScheduleKind::OneF1B);
-        for part in 0..3 {
-            let n_ar = prog
-                .rank(part)
-                .iter()
-                .filter(|i| matches!(i, Instr::AllreduceGrads))
-                .count();
-            let n_opt = prog
-                .rank(part)
-                .iter()
-                .filter(|i| matches!(i, Instr::OptStep))
-                .count();
-            assert_eq!((n_ar, n_opt), (1, 1));
+        for kind in [
+            ScheduleKind::OneF1B,
+            ScheduleKind::ZbH1,
+            ScheduleKind::Interleaved1F1B { v: 2 },
+        ] {
+            let (_, prog) = program(3, 4, kind);
+            for part in 0..3 {
+                let n_ar = prog
+                    .rank(part)
+                    .iter()
+                    .filter(|i| matches!(i, Instr::AllreduceGrads))
+                    .count();
+                let n_opt = prog
+                    .rank(part)
+                    .iter()
+                    .filter(|i| matches!(i, Instr::OptStep))
+                    .count();
+                assert_eq!((n_ar, n_opt), (1, 1), "{kind:?}");
+            }
         }
     }
 
@@ -621,6 +1056,61 @@ mod tests {
     fn schedule_kind_parses() {
         assert_eq!(ScheduleKind::parse("gpipe").unwrap(), ScheduleKind::GPipe);
         assert_eq!(ScheduleKind::parse("1f1b").unwrap(), ScheduleKind::OneF1B);
-        assert!(ScheduleKind::parse("zigzag").is_err());
+        assert_eq!(
+            ScheduleKind::parse("interleaved_1f1b").unwrap(),
+            ScheduleKind::Interleaved1F1B { v: 2 }
+        );
+        assert_eq!(
+            ScheduleKind::parse("interleaved_1f1b:v=4").unwrap(),
+            ScheduleKind::Interleaved1F1B { v: 4 }
+        );
+        // v=1 is plain 1F1B.
+        assert_eq!(
+            ScheduleKind::parse("interleaved_1f1b:v=1").unwrap(),
+            ScheduleKind::OneF1B
+        );
+        assert_eq!(ScheduleKind::parse("zb_h1").unwrap(), ScheduleKind::ZbH1);
+        assert_eq!(ScheduleKind::parse("zbh1").unwrap(), ScheduleKind::ZbH1);
+    }
+
+    #[test]
+    fn unknown_schedule_is_a_hard_error_listing_valid_kinds() {
+        for bad in ["zigzag", "", "interleaved_1f1b:v=0", "interleaved_1f1b:v=x", "1f1b "] {
+            let err = ScheduleKind::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains(VALID_SCHEDULES),
+                "error for '{bad}' must list valid schedules: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn labels_and_names() {
+        assert_eq!(ScheduleKind::Interleaved1F1B { v: 3 }.label(), "interleaved_1f1b:v=3");
+        assert_eq!(ScheduleKind::Interleaved1F1B { v: 3 }.name(), "interleaved_1f1b");
+        assert_eq!(ScheduleKind::ZbH1.label(), "zb_h1");
+        assert_eq!(ScheduleKind::GPipe.virtual_stages(), 1);
+        assert_eq!(ScheduleKind::Interleaved1F1B { v: 3 }.virtual_stages(), 3);
+    }
+
+    #[test]
+    fn peak_activation_bytes_matches_residency_for_flat_schedules() {
+        let g = zoo::resnet56_v1();
+        let pt = Partitioning::auto(&g, 4).unwrap();
+        let mb = 4;
+        for kind in [ScheduleKind::GPipe, ScheduleKind::OneF1B, ScheduleKind::ZbH1] {
+            let prog = Program::compile(&g, &pt, 8, kind);
+            for rank in 0..4 {
+                let per_mb: u64 = pt.parts[rank]
+                    .iter()
+                    .map(|&n| g.nodes[n].out_shape.iter().product::<usize>() as u64 * 4 * mb)
+                    .sum();
+                assert_eq!(
+                    prog.peak_activation_bytes(&g, rank, mb as usize),
+                    per_mb * prog.peak_resident_microbatches(rank) as u64,
+                    "{kind:?} rank {rank}"
+                );
+            }
+        }
     }
 }

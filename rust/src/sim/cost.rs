@@ -85,9 +85,73 @@ impl CostModel {
         self.op_time(2.0 * w, c)
     }
 
-    /// Load calibration overrides from `calibration.txt` (written by
-    /// `hyparflow calibrate`): `key value` lines for core_rate/dispatch.
+    /// ZB-H1 split backward, input-gradient half: ~1x forward FLOPs with
+    /// its own dispatch. Splitting is not free —
+    /// `node_bwd_input + node_bwd_weight > node_bwd` by one extra
+    /// dispatch, which is the realistic price of zero-bubble scheduling.
+    pub fn node_bwd_input(&self, g: &ModelGraph, n: NodeId, mb: usize, c: f64) -> f64 {
+        self.op_time(g.node_cost(n).flops * mb as f64, c)
+    }
+
+    /// ZB-H1 split backward, weight-gradient half: ~1x forward FLOPs.
+    pub fn node_bwd_weight(&self, g: &ModelGraph, n: NodeId, mb: usize, c: f64) -> f64 {
+        self.op_time(g.node_cost(n).flops * mb as f64, c)
+    }
+
+    /// The calibration table as `key value` text (the format
+    /// `hyparflow calibrate` writes and [`Self::apply_calibration`] reads).
+    pub fn to_text(&self) -> String {
+        format!(
+            "core_rate {:.17e}\ndispatch {:.17e}\ndispatch_per_core {:.17e}\n\
+             grain {:.17e}\nmax_speedup {:.17e}\n",
+            self.core_rate, self.dispatch, self.dispatch_per_core, self.grain, self.max_speedup
+        )
+    }
+
+    /// The calibration table as a flat JSON object (for `--calib-out
+    /// x.json`); [`Self::apply_calibration`] sniffs and reads it back.
+    pub fn to_json(&self) -> String {
+        crate::util::JsonObj::new()
+            .num("core_rate", self.core_rate)
+            .num("dispatch", self.dispatch)
+            .num("dispatch_per_core", self.dispatch_per_core)
+            .num("grain", self.grain)
+            .num("max_speedup", self.max_speedup)
+            .build()
+    }
+
+    /// Load calibration overrides (written by `hyparflow calibrate` or
+    /// `sim --calibrate --calib-out`). Two formats, sniffed by the leading
+    /// character: `key value` text lines, or the flat JSON object
+    /// [`Self::to_json`] emits. Unknown keys are hard errors either way.
     pub fn apply_calibration(&mut self, text: &str) -> anyhow::Result<()> {
+        let apply = |cm: &mut CostModel, k: &str, v: f64| -> anyhow::Result<()> {
+            match k {
+                "core_rate" => cm.core_rate = v,
+                "dispatch" => cm.dispatch = v,
+                "dispatch_per_core" => cm.dispatch_per_core = v,
+                "grain" => cm.grain = v,
+                "max_speedup" => cm.max_speedup = v,
+                other => anyhow::bail!("unknown calibration key '{other}'"),
+            }
+            Ok(())
+        };
+        let trimmed = text.trim();
+        if trimmed.starts_with('{') {
+            // Flat JSON object: {"key":num,...} — no nesting, no arrays.
+            let body = trimmed
+                .strip_prefix('{')
+                .and_then(|s| s.strip_suffix('}'))
+                .ok_or_else(|| anyhow::anyhow!("malformed calibration JSON"))?;
+            for field in body.split(',').filter(|f| !f.trim().is_empty()) {
+                let (k, v) = field
+                    .split_once(':')
+                    .ok_or_else(|| anyhow::anyhow!("bad calibration field '{field}'"))?;
+                let k = k.trim().trim_matches('"');
+                apply(self, k, v.trim().parse::<f64>()?)?;
+            }
+            return Ok(());
+        }
         for line in text.lines() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -100,14 +164,7 @@ impl CostModel {
                     .ok_or_else(|| anyhow::anyhow!("bad line '{line}'"))?
                     .parse::<f64>()?,
             );
-            match k {
-                "core_rate" => self.core_rate = v,
-                "dispatch" => self.dispatch = v,
-                "dispatch_per_core" => self.dispatch_per_core = v,
-                "grain" => self.grain = v,
-                "max_speedup" => self.max_speedup = v,
-                other => anyhow::bail!("unknown calibration key '{other}'"),
-            }
+            apply(self, k, v)?;
         }
         Ok(())
     }
@@ -174,5 +231,39 @@ mod tests {
         assert_eq!(c.core_rate, 5e9);
         assert_eq!(c.dispatch, 1e-4);
         assert!(c.apply_calibration("bogus 1").is_err());
+    }
+
+    #[test]
+    fn split_backward_costs_more_than_fused() {
+        // Two dispatches instead of one: the zero-bubble price.
+        let g = zoo::resnet20_v1();
+        let c = cm();
+        for n in 0..g.num_nodes() {
+            let fused = c.node_bwd(&g, n, 8, 4.0);
+            let split = c.node_bwd_input(&g, n, 8, 4.0) + c.node_bwd_weight(&g, n, 8, 4.0);
+            if fused > 0.0 {
+                assert!(split > fused, "node {n}: split {split} !> fused {fused}");
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_round_trips_through_text_and_json() {
+        let mut c = cm();
+        c.core_rate = 5.4321e9;
+        c.dispatch = 7.77e-5;
+        c.dispatch_per_core = 1.23e-6;
+        c.grain = 2.5e6;
+        c.max_speedup = 11.5;
+        for serialized in [c.to_text(), c.to_json()] {
+            let mut d = cm();
+            d.apply_calibration(&serialized).unwrap();
+            assert_eq!(d.core_rate, c.core_rate, "{serialized}");
+            assert_eq!(d.dispatch, c.dispatch);
+            assert_eq!(d.dispatch_per_core, c.dispatch_per_core);
+            assert_eq!(d.grain, c.grain);
+            assert_eq!(d.max_speedup, c.max_speedup);
+        }
+        assert!(cm().apply_calibration("{\"bogus\":1}").is_err());
     }
 }

@@ -45,7 +45,10 @@ pub fn simulate_program(
     cfg: &SimConfig,
     program: &Program,
 ) -> SimBreakdown {
-    let p = pt.num_partitions;
+    // Ranks (processes), not stages: under interleaved schedules the
+    // partitioning is stage-level (`program.num_stages` chunks) while the
+    // DES replays one clock per rank.
+    let p = program.num_partitions;
     let m = program.num_microbatches;
     let cores = cfg.cores_per_rank();
     // Memory bandwidth is a node-shared resource: concurrent ranks split
@@ -67,7 +70,8 @@ pub fn simulate_program(
             let bytes = (g.nodes[e.src_node].out_shape.iter().product::<usize>()
                 * 4
                 * cfg.microbatch) as f64;
-            let inter = cfg.node_of(0, e.src_part) != cfg.node_of(0, e.dst_part);
+            // Stage -> rank via the round-robin map before placement.
+            let inter = cfg.node_of(0, e.src_part % p) != cfg.node_of(0, e.dst_part % p);
             cfg.platform.p2p(bytes, inter)
         })
         .collect();
@@ -92,6 +96,12 @@ pub fn simulate_program(
                     }
                     Instr::BwdCompute { node, .. } => {
                         clock[r] += cm.node_bwd(g, node, cfg.microbatch, cores);
+                    }
+                    Instr::BwdInput { node, .. } => {
+                        clock[r] += cm.node_bwd_input(g, node, cfg.microbatch, cores);
+                    }
+                    Instr::BwdWeight { node, .. } => {
+                        clock[r] += cm.node_bwd_weight(g, node, cfg.microbatch, cores);
                     }
                     Instr::SendActivation { edge, mb, .. } => {
                         avail.insert((edge, mb, 0), clock[r] + edge_secs[edge]);
@@ -141,7 +151,12 @@ pub fn simulate_program(
                 .collect::<std::collections::BTreeSet<_>>()
                 .len()
                 > 1;
-            let bytes = (pt.params_of(g, i) * 4) as f64;
+            // A rank allreduces the parameters of all its stages.
+            let bytes: f64 = program
+                .stages_of(i)
+                .iter()
+                .map(|&s| (pt.params_of(g, s) * 4) as f64)
+                .sum();
             ar[i] = cfg.platform.allreduce(bytes, cfg.replicas, inter);
         }
     }
@@ -154,22 +169,46 @@ pub fn simulate_program(
         // Plain DP: single fused allreduce of the whole model after the
         // global backward.
         let global_end = clock.iter().cloned().fold(0.0, f64::max);
-        let total_bytes: f64 = (0..p).map(|i| (pt.params_of(g, i) * 4) as f64).sum();
+        let total_bytes: f64 = (0..pt.num_partitions)
+            .map(|s| (pt.params_of(g, s) * 4) as f64)
+            .sum();
         let inter = cfg.nodes > 1;
         global_end + cfg.platform.allreduce(total_bytes, cfg.replicas, inter)
     };
 
-    // Per-partition pure compute totals (for the bubble accounting).
+    // Per-rank pure compute totals (for the bubble accounting), derived
+    // from the program's own op counts. Counts aggregate per
+    // (node, op-kind) and sum in sorted key order, so two schedules doing
+    // the same work report bitwise-identical compute regardless of
+    // instruction order (the GPipe-vs-1F1B tests assert exact equality).
     let bottleneck_compute = (0..p)
-        .map(|i| {
-            pt.parts[i]
+        .map(|r| {
+            let mut counts: std::collections::BTreeMap<(usize, u8), usize> =
+                std::collections::BTreeMap::new();
+            for i in program.rank(r) {
+                let key = match *i {
+                    Instr::FwdCompute { node, .. } => Some((node, 0u8)),
+                    Instr::BwdCompute { node, .. } => Some((node, 1)),
+                    Instr::BwdInput { node, .. } => Some((node, 2)),
+                    Instr::BwdWeight { node, .. } => Some((node, 3)),
+                    _ => None,
+                };
+                if let Some(k) = key {
+                    *counts.entry(k).or_insert(0) += 1;
+                }
+            }
+            counts
                 .iter()
-                .map(|&n| {
-                    cm.node_fwd(g, n, cfg.microbatch, cores)
-                        + cm.node_bwd(g, n, cfg.microbatch, cores)
+                .map(|(&(n, kind), &c)| {
+                    let t = match kind {
+                        0 => cm.node_fwd(g, n, cfg.microbatch, cores),
+                        1 => cm.node_bwd(g, n, cfg.microbatch, cores),
+                        2 => cm.node_bwd_input(g, n, cfg.microbatch, cores),
+                        _ => cm.node_bwd_weight(g, n, cfg.microbatch, cores),
+                    };
+                    t * c as f64
                 })
                 .sum::<f64>()
-                * m as f64
         })
         .fold(0.0, f64::max);
 
@@ -291,6 +330,39 @@ mod tests {
             gp.mem_bytes
         );
         assert_eq!(f1b.compute_secs, gp.compute_secs, "same work either way");
+    }
+
+    #[test]
+    fn newer_schedules_cut_the_bubble_fraction() {
+        // The ISSUE 7 acceptance criterion at m >= 2*depth: interleaved
+        // 1F1B shrinks fill/drain to per-chunk units, ZB-H1 fills the
+        // drain with deferred weight-grad work — both strictly below
+        // 1F1B's bubble fraction.
+        let g = zoo::resnet110_v1();
+        let mut cfg = SimConfig::new(Platform::skylake48(), 4, 1);
+        cfg.ppn = 4;
+        cfg.num_microbatches = 16;
+        cfg.schedule = ScheduleKind::OneF1B;
+        let pt_flat = Partitioning::auto(&g, 4).unwrap();
+        let f1b = simulate_step(&g, &pt_flat, &cfg);
+        let frac = |r: &SimBreakdown| r.bubble_secs / r.step_secs;
+        cfg.schedule = ScheduleKind::ZbH1;
+        let zb = simulate_step(&g, &pt_flat, &cfg);
+        assert!(
+            frac(&zb) < frac(&f1b),
+            "zb_h1 bubble frac {:.4} !< 1f1b {:.4}",
+            frac(&zb),
+            frac(&f1b)
+        );
+        cfg.schedule = ScheduleKind::Interleaved1F1B { v: 2 };
+        let pt_i = cfg.schedule.partitioning(&g, 4).unwrap();
+        let il = simulate_step(&g, &pt_i, &cfg);
+        assert!(
+            frac(&il) < frac(&f1b),
+            "interleaved bubble frac {:.4} !< 1f1b {:.4}",
+            frac(&il),
+            frac(&f1b)
+        );
     }
 
     #[test]

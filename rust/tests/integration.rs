@@ -206,6 +206,83 @@ fn checkpoint_roundtrip_from_fit() {
 }
 
 #[test]
+fn cli_sim_calibration_round_trips_through_json() {
+    use std::process::Command;
+    let bin = env!("CARGO_BIN_EXE_hyparflow");
+    let out = std::env::temp_dir().join(format!("hf_calib_{}.json", std::process::id()));
+    let sim_args = [
+        "sim", "--model", "resnet20", "--partitions", "4", "--mb", "2", "--num-mb", "8",
+        "--sched", "1f1b",
+    ];
+    let a = Command::new(bin)
+        .args(sim_args)
+        .args(["--calibrate", "--calib-out", out.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        a.status.success(),
+        "calibrate run failed: {}",
+        String::from_utf8_lossy(&a.stderr)
+    );
+    let json = std::fs::read_to_string(&out).unwrap();
+    assert!(
+        json.trim_start().starts_with('{'),
+        "expected a JSON cost table in {}, got: {json}",
+        out.display()
+    );
+    let b = Command::new(bin)
+        .args(sim_args)
+        .args(["--calib", out.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        b.status.success(),
+        "calib-load run failed: {}",
+        String::from_utf8_lossy(&b.stderr)
+    );
+    // The persisted table must reproduce the in-memory calibrated sim
+    // exactly (the JSON round-trips every cost field bit-for-bit).
+    let result_line = |o: &std::process::Output| {
+        String::from_utf8_lossy(&o.stdout)
+            .lines()
+            .find(|l| l.contains("img/s"))
+            .map(str::to_string)
+            .unwrap_or_default()
+    };
+    let (ra, rb) = (result_line(&a), result_line(&b));
+    assert!(!ra.is_empty(), "no sim result line in the calibrate run");
+    assert_eq!(ra, rb, "sim with loaded calibration diverged from in-memory table");
+    std::fs::remove_file(&out).ok();
+}
+
+#[test]
+fn cli_rejects_bad_or_bare_sched_flag() {
+    use std::process::Command;
+    let bin = env!("CARGO_BIN_EXE_hyparflow");
+    // Unknown schedule: hard error listing the valid kinds (no silent
+    // default).
+    let out = Command::new(bin)
+        .args(["sim", "--model", "resnet20", "--sched", "zigzag"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "bad --sched value must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        err.contains("gpipe|1f1b|interleaved_1f1b[:v=N]|zb_h1"),
+        "stderr must list valid schedules: {err}"
+    );
+    // Bare --sched (the would-be value swallowed as the next flag) must
+    // not silently fall back to the default schedule.
+    let out = Command::new(bin)
+        .args(["train", "--model", "mlp", "--sched"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "bare --sched must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--sched requires a value"), "stderr: {err}");
+}
+
+#[test]
 fn throughput_metric_reported() {
     let cfg = TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), Strategy::Sequential)
         .microbatch(4)

@@ -145,6 +145,49 @@ fn prop_one_f1b_programs_deadlock_free_on_random_skip_topologies() {
 }
 
 #[test]
+fn prop_interleaved_and_zb_programs_conform_on_random_topologies() {
+    // Random (graph, partitioning, m, v): the interleaved and zero-bubble
+    // generators produce programs that complete under buffered sends (the
+    // hfmpi fabric's semantics), cover every (cross-rank edge, microbatch)
+    // exactly twice (activation + error), and pass the exactly-once /
+    // consistent-tag send-recv pairing verifier.
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed + 7000);
+        let g = random_skip_graph(&mut rng);
+        let n = g.num_nodes(); // >= 11
+        let ranks = 2 + rng.below(2); // 2..=3
+        let v = 2 + rng.below(2); // 2..=3
+        let lpp = random_lpp(&mut rng, n, ranks * v);
+        let pt = Partitioning::from_lpp(&g, &lpp).unwrap();
+        let cross = pt
+            .edges
+            .iter()
+            .filter(|e| e.src_part % ranks != e.dst_part % ranks)
+            .count();
+        for m in [1usize, 3, 7] {
+            let prog = Program::compile(&g, &pt, m, ScheduleKind::Interleaved1F1B { v });
+            let steps = prog.check(SendSemantics::Buffered).unwrap_or_else(|stuck| {
+                panic!("seed {seed} R={ranks} v={v} m={m}: stuck={stuck:?} lpp={lpp:?}")
+            });
+            assert_eq!(steps, cross * 2 * m, "seed {seed} v={v} m={m}: coverage");
+            prog.verify_message_pairing()
+                .unwrap_or_else(|e| panic!("seed {seed} v={v} m={m}: pairing: {e}"));
+        }
+        let lpp = random_lpp(&mut rng, n, ranks);
+        let pt = Partitioning::from_lpp(&g, &lpp).unwrap();
+        for m in [1usize, 3, 7] {
+            let prog = Program::compile(&g, &pt, m, ScheduleKind::ZbH1);
+            let steps = prog.check(SendSemantics::Buffered).unwrap_or_else(|stuck| {
+                panic!("seed {seed} zb R={ranks} m={m}: stuck={stuck:?} lpp={lpp:?}")
+            });
+            assert_eq!(steps, pt.edges.len() * 2 * m, "seed {seed} zb m={m}: coverage");
+            prog.verify_message_pairing()
+                .unwrap_or_else(|e| panic!("seed {seed} zb m={m}: pairing: {e}"));
+        }
+    }
+}
+
+#[test]
 fn prop_one_f1b_random_lpp_training_equivalence() {
     // The numeric §6.1 guarantee under the 1F1B generator: any random
     // contiguous split, pipelined two-deep, trains bitwise-identically to

@@ -1,0 +1,299 @@
+//! Schedule-conformance harness: for every [`ScheduleKind`], machine-check
+//! the compiled programs on random skip-topology graphs x microbatch
+//! counts, and the numerics end to end through the native executor.
+//!
+//! (a) **Deadlock-freedom** — the program completes under the semantics
+//!     its generator documents: rendezvous (unbuffered synchronous) sends
+//!     for GPipe, buffered sends for the 1F1B family (what the hfmpi
+//!     fabric implements), with full `(cross-rank edge, microbatch)`
+//!     coverage.
+//! (b) **Residency** — per-rank peak stash residency never exceeds the
+//!     documented bound: `m` for GPipe, `min(P - rank, m)` for 1F1B and
+//!     ZB-H1, `min(2P, m)` for interleaved.
+//! (c) **Pairing** — every send/recv is exactly-once, faces the right
+//!     peer, never targets its own rank, and both endpoints of each
+//!     `(edge, class)` channel see the microbatches in the same order.
+//! (d) **Numerics** — model-parallel training under each schedule is
+//!     bitwise equal (loss history and every parameter) to the sequential
+//!     run under the same schedule.
+//!
+//! Plus the golden-snapshot regression of the 1F1B program listing
+//! (`rust/tests/golden/one_f1b_mlp_4x8.txt`).
+
+use hyparflow::api::{fit, FitResult, Strategy, TrainConfig};
+use hyparflow::graph::{zoo, ModelGraph};
+use hyparflow::partition::Partitioning;
+use hyparflow::rng::Rng;
+use hyparflow::schedule::{Instr, Program, ScheduleKind, SendSemantics};
+
+fn all_kinds() -> [ScheduleKind; 4] {
+    [
+        ScheduleKind::GPipe,
+        ScheduleKind::OneF1B,
+        ScheduleKind::Interleaved1F1B { v: 2 },
+        ScheduleKind::ZbH1,
+    ]
+}
+
+/// Random conv/skip graph in the ResNet family (same generator family as
+/// rust/tests/proptests.rs): chains of conv-bn-relu with random Add skip
+/// edges back to earlier same-shape nodes. Always >= 11 nodes.
+fn random_skip_graph(rng: &mut Rng) -> ModelGraph {
+    let mut g = ModelGraph::new("fuzz", &[3, 8, 8]);
+    let x = g.input();
+    let mut cur = g.conv3x3(x, 4, 1);
+    let mut checkpoints = vec![cur];
+    let blocks = 2 + rng.below(6);
+    for _ in 0..blocks {
+        let c = g.conv3x3(cur, 4, 1);
+        let b = g.batchnorm(c);
+        let r = g.relu(b);
+        cur = r;
+        if rng.below(2) == 0 && !checkpoints.is_empty() {
+            let src = checkpoints[rng.below(checkpoints.len())];
+            cur = g.add(cur, src);
+        }
+        checkpoints.push(cur);
+    }
+    let p = g.gap(cur);
+    let d = g.dense(p, 3);
+    g.loss(d);
+    g
+}
+
+/// Random LPP vector: contiguous, non-empty, sums to n.
+fn random_lpp(rng: &mut Rng, n: usize, parts: usize) -> Vec<usize> {
+    let mut cuts: Vec<usize> = (0..parts - 1).map(|_| 1 + rng.below(n - 1)).collect();
+    cuts.sort();
+    cuts.dedup();
+    while cuts.len() < parts - 1 {
+        let c = 1 + rng.below(n - 1);
+        if !cuts.contains(&c) {
+            cuts.push(c);
+            cuts.sort();
+        }
+    }
+    let mut lpp = vec![];
+    let mut prev = 0;
+    for c in cuts {
+        lpp.push(c - prev);
+        prev = c;
+    }
+    lpp.push(n - prev);
+    lpp
+}
+
+/// Edges that cross *ranks* (stage-level edges between two chunks of the
+/// same rank are elided by the generators and carry no messages).
+fn cross_rank_edges(pt: &Partitioning, ranks: usize) -> usize {
+    pt.edges.iter().filter(|e| e.src_part % ranks != e.dst_part % ranks).count()
+}
+
+#[test]
+fn programs_complete_under_documented_semantics_on_random_topologies() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed + 9000);
+        let g = random_skip_graph(&mut rng);
+        let n = g.num_nodes();
+        let ranks = 2 + rng.below(2); // 2..=3
+        for kind in all_kinds() {
+            let stages = ranks * kind.virtual_stages();
+            let lpp = random_lpp(&mut rng, n, stages);
+            let pt = Partitioning::from_lpp(&g, &lpp)
+                .unwrap_or_else(|e| panic!("seed {seed}: partition {lpp:?}: {e}"));
+            let sem = match kind {
+                ScheduleKind::GPipe => SendSemantics::Rendezvous,
+                _ => SendSemantics::Buffered,
+            };
+            for m in [1usize, 2, 6] {
+                let prog = Program::compile(&g, &pt, m, kind);
+                assert_eq!(prog.num_partitions, ranks, "{}", kind.label());
+                assert_eq!(prog.num_stages, stages, "{}", kind.label());
+                let steps = prog.check(sem).unwrap_or_else(|stuck| {
+                    panic!(
+                        "seed {seed} {} R={ranks} m={m}: deadlock, stuck ranks \
+                         {stuck:?}, lpp={lpp:?}",
+                        kind.label()
+                    )
+                });
+                assert_eq!(
+                    steps,
+                    cross_rank_edges(&pt, ranks) * 2 * m,
+                    "seed {seed} {} m={m}: (edge, mb) coverage",
+                    kind.label()
+                );
+                prog.verify_message_pairing().unwrap_or_else(|e| {
+                    panic!("seed {seed} {} m={m}: pairing: {e}", kind.label())
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn residency_stays_within_documented_bounds() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed + 11_000);
+        let g = random_skip_graph(&mut rng);
+        let n = g.num_nodes();
+        let ranks = 2 + rng.below(3); // 2..=4
+        for kind in all_kinds() {
+            let stages = ranks * kind.virtual_stages();
+            let lpp = random_lpp(&mut rng, n, stages);
+            let pt = Partitioning::from_lpp(&g, &lpp).unwrap();
+            for m in [1usize, 3, 9] {
+                let prog = Program::compile(&g, &pt, m, kind);
+                for r in 0..ranks {
+                    let peak = prog.peak_resident_microbatches(r);
+                    let bound = match kind {
+                        ScheduleKind::GPipe => m,
+                        ScheduleKind::OneF1B | ScheduleKind::ZbH1 => (ranks - r).min(m),
+                        ScheduleKind::Interleaved1F1B { .. } => (2 * ranks).min(m),
+                    };
+                    assert!(
+                        peak <= bound,
+                        "seed {seed} {} R={ranks} m={m} rank {r}: resident {peak} \
+                         exceeds documented bound {bound} (lpp {lpp:?})",
+                        kind.label()
+                    );
+                }
+                if kind == ScheduleKind::GPipe {
+                    // Fill/drain keeps every microbatch stashed: the bound
+                    // is attained, not just respected.
+                    assert_eq!(prog.max_peak_resident_microbatches(), m);
+                }
+            }
+        }
+    }
+}
+
+fn mlp_cfg(strategy: Strategy) -> TrainConfig {
+    TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), strategy)
+        .microbatch(4)
+        .num_microbatches(4)
+        .steps(3)
+        .lr(0.05)
+        .seed(21)
+}
+
+fn resnet_cfg(strategy: Strategy) -> TrainConfig {
+    TrainConfig::new(zoo::resnet20_v1(), strategy)
+        .microbatch(4)
+        .num_microbatches(3)
+        .steps(2)
+        .lr(0.01)
+        .seed(11)
+}
+
+fn loss_history(r: &FitResult) -> Vec<f32> {
+    r.history.iter().map(|m| m.loss).collect()
+}
+
+fn max_param_diff(a: &FitResult, b: &FitResult) -> f32 {
+    assert_eq!(a.params.len(), b.params.len(), "param sets differ");
+    let mut worst = 0.0f32;
+    for ((ka, ta), (kb, tb)) in a.params.iter().zip(b.params.iter()) {
+        assert_eq!(ka, kb, "param key order mismatch");
+        worst = worst.max(ta.max_abs_diff(tb));
+    }
+    worst
+}
+
+#[test]
+fn training_is_bitwise_equal_to_sequential_mlp() {
+    // (d) on the MLP: every schedule's gradient-accumulation order is
+    // rank-invariant by construction, so the model-parallel run must be
+    // bitwise equal to the sequential run under the same schedule.
+    for kind in all_kinds() {
+        let seq = fit(&mlp_cfg(Strategy::Sequential).schedule(kind)).unwrap();
+        // Interleaved v=2 needs 2P stages out of 6 nodes, capping P at 3.
+        let ps: &[usize] = if kind.virtual_stages() > 1 { &[2, 3] } else { &[2, 3, 4] };
+        for &p in ps {
+            let mp = fit(&mlp_cfg(Strategy::Model).partitions(p).schedule(kind)).unwrap();
+            assert_eq!(
+                loss_history(&seq),
+                loss_history(&mp),
+                "{} P={p}: loss history diverged",
+                kind.label()
+            );
+            let d = max_param_diff(&seq, &mp);
+            assert_eq!(d, 0.0, "{} P={p}: max param diff {d}", kind.label());
+        }
+    }
+}
+
+#[test]
+fn training_is_bitwise_equal_to_sequential_resnet() {
+    // (d) with conv + BN + skip connections crossing rank boundaries.
+    for kind in all_kinds() {
+        let seq = fit(&resnet_cfg(Strategy::Sequential).schedule(kind)).unwrap();
+        let p = if kind.virtual_stages() > 1 { 2 } else { 4 };
+        let mp = fit(&resnet_cfg(Strategy::Model).partitions(p).schedule(kind)).unwrap();
+        assert_eq!(
+            loss_history(&seq),
+            loss_history(&mp),
+            "{} P={p}: loss history diverged",
+            kind.label()
+        );
+        let d = max_param_diff(&seq, &mp);
+        assert_eq!(d, 0.0, "{} P={p}: max param diff {d}", kind.label());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden snapshot: the 1F1B program listing for a 4-rank / 8-microbatch MLP.
+// ---------------------------------------------------------------------------
+
+fn render_instr(i: &Instr) -> String {
+    match *i {
+        Instr::FwdCompute { node, stage, mb } => format!("F n{node} s{stage} mb{mb}"),
+        Instr::BwdCompute { node, stage, mb } => format!("B n{node} s{stage} mb{mb}"),
+        Instr::BwdInput { node, stage, mb } => format!("BI n{node} s{stage} mb{mb}"),
+        Instr::BwdWeight { node, stage, mb } => format!("BW n{node} s{stage} mb{mb}"),
+        Instr::SendActivation { edge, peer, mb } => format!("SA e{edge}->r{peer} mb{mb}"),
+        Instr::RecvActivation { edge, peer, mb } => format!("RA e{edge}<-r{peer} mb{mb}"),
+        Instr::SendError { edge, peer, mb } => format!("SE e{edge}->r{peer} mb{mb}"),
+        Instr::RecvError { edge, peer, mb } => format!("RE e{edge}<-r{peer} mb{mb}"),
+        Instr::DropStash { mb } => format!("DROP mb{mb}"),
+        Instr::AllreduceGrads => "ALLREDUCE".to_string(),
+        Instr::OptStep => "OPT".to_string(),
+    }
+}
+
+fn render_program(prog: &Program) -> String {
+    let mut out = String::new();
+    out.push_str("# one_f1b program listing: mlp(8, [8, 8, 8], 4), lpp [2, 2, 1, 1], m=8\n");
+    out.push_str(
+        "# Golden snapshot; regenerate with \
+         HF_BLESS_GOLDEN=1 cargo test --test schedule_conformance\n",
+    );
+    for rank in 0..prog.num_partitions {
+        out.push_str(&format!("rank {rank}\n"));
+        for i in prog.rank(rank) {
+            out.push_str(&format!("  {}\n", render_instr(i)));
+        }
+    }
+    out
+}
+
+#[test]
+fn one_f1b_golden_program_listing() {
+    // Any change to the 1F1B generator's op order shows up as a diff of
+    // this listing — the scheduling analogue of a model-output snapshot.
+    let g = zoo::mlp(8, &[8, 8, 8], 4);
+    let pt = Partitioning::from_lpp(&g, &[2, 2, 1, 1]).unwrap();
+    let prog = Program::compile(&g, &pt, 8, ScheduleKind::OneF1B);
+    let got = render_program(&prog);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/one_f1b_mlp_4x8.txt");
+    if std::env::var("HF_BLESS_GOLDEN").is_ok() {
+        std::fs::write(path, &got).unwrap();
+        return;
+    }
+    let want = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("missing golden file {path}: {e}"));
+    assert_eq!(
+        got, want,
+        "one_f1b program listing changed; if intended, bless with \
+         HF_BLESS_GOLDEN=1 cargo test --test schedule_conformance"
+    );
+}
