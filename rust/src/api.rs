@@ -24,7 +24,7 @@ use crate::graph::{ModelGraph, NodeId};
 use crate::hfmpi::{AllreduceAlgo, World};
 use crate::partition::Partitioning;
 use crate::runtime::Runtime;
-use crate::schedule::ScheduleKind;
+use crate::schedule::{Program, ScheduleKind, SendMode};
 use crate::tensor::Tensor;
 use std::path::PathBuf;
 
@@ -146,6 +146,14 @@ impl TrainConfig {
     /// Per-step learning-rate schedule (overrides `lr`).
     pub fn lr_schedule(mut self, s: crate::engine::LrSchedule) -> Self {
         self.engine.lr_schedule = Some(s);
+        self
+    }
+
+    /// Eager (`PostSend*`/`WaitSend`) vs blocking IR sends — bitwise
+    /// identical training either way; eager is also rendezvous-safe.
+    /// Default: eager unless `HF_EAGER_SENDS=0`.
+    pub fn eager_sends(mut self, on: bool) -> Self {
+        self.engine.eager_sends = on;
         self
     }
 
@@ -318,11 +326,24 @@ fn run_rank(
     partitions: usize,
     dataset: &SyntheticDataset,
 ) -> anyhow::Result<RankOutput> {
+    // Budget-check the eager-send concurrency against the tag space up
+    // front: the worst-case in-flight count is a static property of the
+    // compiled program (the trainer compiles the identical program).
+    let mode = if cfg.engine.eager_sends { SendMode::Eager } else { SendMode::Blocking };
+    let max_in_flight = Program::compile_with(
+        &cfg.model,
+        pt,
+        cfg.engine.num_microbatches,
+        cfg.engine.schedule,
+        mode,
+    )
+    .max_in_flight_sends();
     let ce = CommEngine::new(
         world,
         partitions,
         pt.edges.len(),
         cfg.engine.num_microbatches,
+        max_in_flight,
         cfg.fusion_threshold,
         cfg.allreduce_algo,
     );

@@ -14,8 +14,10 @@
 //! communicator across replicas (indexes == replica ids) on which the 48
 //! concurrent allreduces of the paper's ResNet-1001 example run.
 
-use crate::hfmpi::{tags, AllreduceAlgo, Comm, FusionBuffer};
+use crate::hfmpi::{tags, AllreduceAlgo, Comm, FusionBuffer, SendReq};
 use crate::tensor::Tensor;
+use std::cell::RefCell;
+use std::collections::HashMap;
 
 /// Maximum microbatches per step encodable in a tag.
 pub const MAX_MB: u64 = 4096;
@@ -24,6 +26,21 @@ pub const MAX_MB: u64 = 4096;
 /// next tag class: the ACTIVATION and ERROR windows are `1 << 20` apart
 /// (see `hfmpi::tags`), and each edge consumes `MAX_MB` tags.
 pub const MAX_EDGES: u64 = (tags::ERROR - tags::ACTIVATION) / MAX_MB;
+
+/// An eager send in flight: posted via
+/// [`CommEngine::post_send_activation`]/[`CommEngine::post_send_error`],
+/// completed by [`CommEngine::wait_send`]. Error payloads are owned here
+/// until the wait — the MPI_Isend pinned-buffer contract — while
+/// activation payloads alias the trainer's stash (live until `DropStash`,
+/// which the schedule places after the wait).
+#[must_use = "complete the send with CommEngine::wait_send"]
+pub struct SendHandle {
+    class: u8,
+    edge: usize,
+    mb: usize,
+    _buf: Option<Tensor>,
+    req: SendReq,
+}
 
 /// Per-rank communication engine.
 pub struct CommEngine {
@@ -34,6 +51,12 @@ pub struct CommEngine {
     pub partition: usize,
     pub replica_id: usize,
     fusion: FusionBuffer,
+    /// Declared worst-case concurrently in-flight eager sends (from
+    /// `Program::max_in_flight_sends`), enforced at post time.
+    max_in_flight: usize,
+    /// Live eager sends by (class, edge, mb) tag — each tag may carry at
+    /// most one in-flight message at a time, or payloads would alias.
+    in_flight: RefCell<HashMap<(u8, usize, usize), ()>>,
 }
 
 impl CommEngine {
@@ -46,11 +69,21 @@ impl CommEngine {
     /// exceeding either limit would silently alias tags between edges (or
     /// between the activation and error classes) and deliver tensors to the
     /// wrong receive. Assert it here, at construction, instead.
+    ///
+    /// `max_in_flight` declares the worst-case *concurrently* in-flight
+    /// eager sends on this rank (`Program::max_in_flight_sends`). Each
+    /// concurrent message needs its own distinct (class, edge, microbatch)
+    /// tag — there are `2 * num_edges * num_microbatches` of those — so a
+    /// declaration exceeding that count proves some tag would carry two
+    /// live messages at once. The per-edge/per-mb caps above are not
+    /// enough once sends overlap, which is why this is checked separately
+    /// (and re-checked per tag at post time).
     pub fn new(
         world: &Comm,
         partitions: usize,
         num_edges: usize,
         num_microbatches: usize,
+        max_in_flight: usize,
         fusion_threshold: usize,
         algo: AllreduceAlgo,
     ) -> CommEngine {
@@ -68,6 +101,14 @@ impl CommEngine {
              MAX_EDGES={MAX_EDGES}; activation tags would spill into the \
              error tag window"
         );
+        let distinct_tags = 2 * num_edges as u64 * num_microbatches as u64;
+        assert!(
+            max_in_flight as u64 <= distinct_tags,
+            "{max_in_flight} concurrently in-flight eager sends exceed the \
+             {distinct_tags} distinct (class, edge, microbatch) tags of this \
+             run; by pigeonhole some tag would carry two live messages and \
+             alias payloads"
+        );
         let rank = world.rank();
         let partition = rank % partitions;
         let replica_id = rank / partitions;
@@ -79,6 +120,8 @@ impl CommEngine {
             partition,
             replica_id,
             fusion: FusionBuffer::new(fusion_threshold, algo),
+            max_in_flight,
+            in_flight: RefCell::new(HashMap::new()),
         }
     }
 
@@ -111,6 +154,61 @@ impl CommEngine {
 
     pub fn recv_error(&self, src: usize, edge: usize, mb: usize) -> Tensor {
         self.pipeline.recv(src, Self::err_tag(edge, mb))
+    }
+
+    /// Eager activation send (MPI_Isend): post the transfer and return
+    /// immediately. The payload aliases the caller's stash, which the
+    /// schedule keeps live until the paired [`CommEngine::wait_send`].
+    pub fn post_send_activation(
+        &self,
+        t: &Tensor,
+        dst: usize,
+        edge: usize,
+        mb: usize,
+    ) -> SendHandle {
+        debug_assert!((mb as u64) < MAX_MB);
+        self.note_posted(0, edge, mb);
+        let req = self.pipeline.isend(t, dst, Self::act_tag(edge, mb));
+        SendHandle { class: 0, edge, mb, _buf: None, req }
+    }
+
+    /// Eager error send: the handle takes ownership of the payload and
+    /// pins it until the wait (errors have no stash home to alias).
+    pub fn post_send_error(&self, t: Tensor, dst: usize, edge: usize, mb: usize) -> SendHandle {
+        debug_assert!((mb as u64) < MAX_MB);
+        self.note_posted(1, edge, mb);
+        let req = self.pipeline.isend(&t, dst, Self::err_tag(edge, mb));
+        SendHandle { class: 1, edge, mb, _buf: Some(t), req }
+    }
+
+    /// Complete an eager send: blocks until the transfer is done (a no-op
+    /// on the buffered fabric), releases the pinned payload, and retires
+    /// the tag from the in-flight accounting.
+    pub fn wait_send(&self, h: SendHandle) {
+        self.pipeline.wait(h.req);
+        self.in_flight.borrow_mut().remove(&(h.class, h.edge, h.mb));
+        // h._buf drops here — the send buffer is released.
+    }
+
+    /// Current number of eager sends in flight on this rank.
+    pub fn in_flight_sends(&self) -> usize {
+        self.in_flight.borrow().len()
+    }
+
+    fn note_posted(&self, class: u8, edge: usize, mb: usize) {
+        let mut live = self.in_flight.borrow_mut();
+        assert!(
+            live.insert((class, edge, mb), ()).is_none(),
+            "eager send already in flight on tag (class {class}, edge {edge}, mb {mb}): \
+             a second concurrent message on one tag would alias payloads"
+        );
+        assert!(
+            live.len() <= self.max_in_flight,
+            "{} concurrently in-flight eager sends exceed the declared budget {} — \
+             the schedule's max_in_flight_sends() and the engine disagree",
+            live.len(),
+            self.max_in_flight
+        );
     }
 
     /// Data-parallel gradient averaging across this partition's replicas
@@ -149,7 +247,7 @@ mod tests {
     fn hybrid_layout_2x3() {
         // 3 partitions x 2 replicas = 6 ranks.
         World::run(6, |world| {
-            let ce = CommEngine::new(world, 3, 8, 4, usize::MAX, AllreduceAlgo::Auto);
+            let ce = CommEngine::new(world, 3, 8, 4, 0, usize::MAX, AllreduceAlgo::Auto);
             assert_eq!(ce.partition, world.rank() % 3);
             assert_eq!(ce.replica_id, world.rank() / 3);
             assert_eq!(ce.pipeline.size(), 3);
@@ -162,7 +260,7 @@ mod tests {
     #[test]
     fn activations_flow_within_replica_only() {
         World::run(4, |world| {
-            let ce = CommEngine::new(world, 2, 8, 4, usize::MAX, AllreduceAlgo::Auto);
+            let ce = CommEngine::new(world, 2, 8, 4, 0, usize::MAX, AllreduceAlgo::Auto);
             // Partition 0 of each replica sends a replica-stamped tensor to
             // partition 1; the receiver must see its own replica's value.
             if ce.partition == 0 {
@@ -178,7 +276,7 @@ mod tests {
     #[test]
     fn grads_average_across_replicas_per_partition() {
         World::run(4, |world| {
-            let ce = CommEngine::new(world, 2, 8, 4, usize::MAX, AllreduceAlgo::Auto);
+            let ce = CommEngine::new(world, 2, 8, 4, 0, usize::MAX, AllreduceAlgo::Auto);
             let mut g = Tensor::full(&[4], (ce.replica_id * 10 + ce.partition) as f32);
             ce.allreduce_grads(&mut [&mut g]).unwrap();
             // replicas {0,1}: values p and 10+p -> mean 5+p.
@@ -189,7 +287,7 @@ mod tests {
     #[test]
     fn errors_and_activations_do_not_collide() {
         World::run(2, |world| {
-            let ce = CommEngine::new(world, 2, 8, 4, usize::MAX, AllreduceAlgo::Auto);
+            let ce = CommEngine::new(world, 2, 8, 4, 0, usize::MAX, AllreduceAlgo::Auto);
             if ce.partition == 0 {
                 ce.send_activation(&Tensor::scalar(1.0), 1, 5, 3);
                 let e = ce.recv_error(1, 5, 3);
@@ -206,7 +304,7 @@ mod tests {
     #[should_panic(expected = "exceeds the tag budget")]
     fn too_many_microbatches_rejected_at_construction() {
         World::run(1, |world| {
-            CommEngine::new(world, 1, 4, MAX_MB as usize + 1, usize::MAX, AllreduceAlgo::Auto);
+            CommEngine::new(world, 1, 4, MAX_MB as usize + 1, 0, usize::MAX, AllreduceAlgo::Auto);
         });
     }
 
@@ -214,7 +312,7 @@ mod tests {
     #[should_panic(expected = "exceed the tag budget")]
     fn too_many_edges_rejected_at_construction() {
         World::run(1, |world| {
-            CommEngine::new(world, 1, MAX_EDGES as usize + 1, 1, usize::MAX, AllreduceAlgo::Auto);
+            CommEngine::new(world, 1, MAX_EDGES as usize + 1, 1, 0, usize::MAX, AllreduceAlgo::Auto);
         });
     }
 
@@ -226,6 +324,7 @@ mod tests {
                 1,
                 MAX_EDGES as usize,
                 MAX_MB as usize,
+                0,
                 usize::MAX,
                 AllreduceAlgo::Auto,
             );
@@ -233,9 +332,70 @@ mod tests {
     }
 
     #[test]
+    fn eager_post_wait_round_trips() {
+        World::run(2, |world| {
+            let ce = CommEngine::new(world, 2, 8, 4, 4, usize::MAX, AllreduceAlgo::Auto);
+            if ce.partition == 0 {
+                // Two eager sends in flight at once on distinct tags.
+                let a = Tensor::full(&[2], 1.0);
+                let h0 = ce.post_send_activation(&a, 1, 0, 0);
+                let h1 = ce.post_send_error(Tensor::full(&[2], 2.0), 1, 0, 1);
+                assert_eq!(ce.in_flight_sends(), 2);
+                ce.wait_send(h0);
+                ce.wait_send(h1);
+                assert_eq!(ce.in_flight_sends(), 0);
+            } else {
+                assert_eq!(ce.recv_activation(0, 0, 0).data, vec![1.0; 2]);
+                assert_eq!(ce.recv_error(0, 0, 1).data, vec![2.0; 2]);
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "already in flight")]
+    fn double_post_on_one_tag_panics() {
+        World::run(1, |world| {
+            let ce = CommEngine::new(world, 1, 8, 4, 8, usize::MAX, AllreduceAlgo::Auto);
+            let t = Tensor::scalar(1.0);
+            let _h0 = ce.post_send_activation(&t, 0, 3, 1);
+            let _h1 = ce.post_send_activation(&t, 0, 3, 1); // same tag, no wait
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed the declared budget")]
+    fn post_beyond_declared_in_flight_budget_panics() {
+        World::run(1, |world| {
+            let ce = CommEngine::new(world, 1, 8, 4, 1, usize::MAX, AllreduceAlgo::Auto);
+            let t = Tensor::scalar(1.0);
+            let _h0 = ce.post_send_activation(&t, 0, 0, 0);
+            let _h1 = ce.post_send_activation(&t, 0, 1, 0); // budget is 1
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "pigeonhole")]
+    fn in_flight_budget_overflowing_the_tag_space_rejected_at_construction() {
+        // Regression for the old accounting, which assumed at most one
+        // outstanding message per edge/microbatch and accepted any
+        // concurrency: declaring more concurrent in-flight sends than
+        // there are distinct (class, edge, mb) tags must fail fast.
+        World::run(1, |world| {
+            CommEngine::new(world, 1, 2, 3, 2 * 2 * 3 + 1, usize::MAX, AllreduceAlgo::Auto);
+        });
+    }
+
+    #[test]
+    fn in_flight_budget_boundary_is_accepted() {
+        World::run(1, |world| {
+            CommEngine::new(world, 1, 2, 3, 2 * 2 * 3, usize::MAX, AllreduceAlgo::Auto);
+        });
+    }
+
+    #[test]
     fn bcast_param_syncs_replicas() {
         World::run(4, |world| {
-            let ce = CommEngine::new(world, 2, 8, 4, usize::MAX, AllreduceAlgo::Auto);
+            let ce = CommEngine::new(world, 2, 8, 4, 0, usize::MAX, AllreduceAlgo::Auto);
             let mut w = if ce.replica_id == 0 {
                 Tensor::full(&[3], 42.0)
             } else {

@@ -1,16 +1,25 @@
-//! Checkpointing: save/restore the full model parameter set.
+//! Checkpointing: save/restore model parameters — and, for resumable
+//! training, the full per-rank train state (parameters + optimizer
+//! velocity + step index).
 //!
-//! Simple self-describing binary format (no serde in the offline build):
+//! Simple self-describing binary formats (no serde in the offline build):
 //!
 //! ```text
-//! magic "HFCKPT1\n"
-//! u64 count
-//! repeat count times:
-//!   u64 node, u64 slot, u64 rank, u64 dims[rank], f32 data[numel]
+//! params only:        magic "HFCKPT1\n", entry set
+//! train state:        magic "HFCKPT2\n", u64 next_step,
+//!                     entry set (params), entry set (velocity)
+//! entry set:          u64 count, then count x
+//!                       u64 node, u64 slot, u64 rank, u64 dims[rank],
+//!                       f32 data[numel]
 //! ```
 //!
 //! Model-parallel ranks write/read only their own partition's entries,
-//! matching the paper's claim that HyPar-Flow shards all model state.
+//! matching the paper's claim that HyPar-Flow shards all model state —
+//! including the optimizer state, whose sharding falls out of the layer
+//! partitioning. Restoring a `TrainState` into a fresh trainer resumes
+//! training *bitwise-identical* to the uninterrupted run (momentum
+//! velocity carries history, so params alone are not enough) — pinned by
+//! `resume_mid_pipeline_is_bitwise_identical` below.
 
 use crate::graph::NodeId;
 use crate::tensor::{Shape, Tensor};
@@ -18,16 +27,24 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"HFCKPT1\n";
+const MAGIC_STATE: &[u8; 8] = b"HFCKPT2\n";
 
 pub type ParamSet = Vec<((NodeId, usize), Tensor)>;
 
-/// Write a parameter set (e.g. `FitResult::params` or a trainer's
-/// `export_params`) to `path`.
-pub fn save(path: &Path, params: &ParamSet) -> anyhow::Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&(params.len() as u64).to_le_bytes())?;
-    for ((node, slot), t) in params {
+/// Full resumable training state of one rank (see `Trainer::export_state`).
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    /// The step index training should resume at (steps completed so far).
+    /// Resuming at the right index keeps the dataset's index-deterministic
+    /// batches aligned with the uninterrupted run.
+    pub next_step: u64,
+    pub params: ParamSet,
+    pub velocity: ParamSet,
+}
+
+fn write_set(f: &mut impl Write, set: &ParamSet) -> anyhow::Result<()> {
+    f.write_all(&(set.len() as u64).to_le_bytes())?;
+    for ((node, slot), t) in set {
         f.write_all(&(*node as u64).to_le_bytes())?;
         f.write_all(&(*slot as u64).to_le_bytes())?;
         f.write_all(&(t.shape.rank() as u64).to_le_bytes())?;
@@ -41,28 +58,40 @@ pub fn save(path: &Path, params: &ParamSet) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Write a parameter set (e.g. `FitResult::params` or a trainer's
+/// `export_params`) to `path`.
+pub fn save(path: &Path, params: &ParamSet) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    write_set(&mut f, params)
+}
+
+/// Write a full per-rank train state (params + velocity + step) to `path`.
+pub fn save_state(path: &Path, state: &TrainState) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC_STATE)?;
+    f.write_all(&state.next_step.to_le_bytes())?;
+    write_set(&mut f, &state.params)?;
+    write_set(&mut f, &state.velocity)
+}
+
 fn read_u64(r: &mut impl Read) -> anyhow::Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
 }
 
-/// Read a parameter set from `path`.
-pub fn load(path: &Path) -> anyhow::Result<ParamSet> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "{path:?}: not a HyPar-Flow checkpoint");
-    let count = read_u64(&mut f)?;
+fn read_set(f: &mut impl Read) -> anyhow::Result<ParamSet> {
+    let count = read_u64(f)?;
     let mut out = Vec::with_capacity(count as usize);
     for _ in 0..count {
-        let node = read_u64(&mut f)? as usize;
-        let slot = read_u64(&mut f)? as usize;
-        let rank = read_u64(&mut f)? as usize;
+        let node = read_u64(f)? as usize;
+        let slot = read_u64(f)? as usize;
+        let rank = read_u64(f)? as usize;
         anyhow::ensure!(rank <= 8, "implausible tensor rank {rank}");
         let mut dims = Vec::with_capacity(rank);
         for _ in 0..rank {
-            dims.push(read_u64(&mut f)? as usize);
+            dims.push(read_u64(f)? as usize);
         }
         let shape = Shape::new(&dims);
         let mut bytes = vec![0u8; shape.numel() * 4];
@@ -74,6 +103,30 @@ pub fn load(path: &Path) -> anyhow::Result<ParamSet> {
         out.push(((node, slot), Tensor::new(shape, data)));
     }
     Ok(out)
+}
+
+/// Read a parameter set from `path`.
+pub fn load(path: &Path) -> anyhow::Result<ParamSet> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "{path:?}: not a HyPar-Flow checkpoint");
+    read_set(&mut f)
+}
+
+/// Read a full train state from `path`.
+pub fn load_state(path: &Path) -> anyhow::Result<TrainState> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(
+        &magic == MAGIC_STATE,
+        "{path:?}: not a HyPar-Flow train-state checkpoint"
+    );
+    let next_step = read_u64(&mut f)?;
+    let params = read_set(&mut f)?;
+    let velocity = read_set(&mut f)?;
+    Ok(TrainState { next_step, params, velocity })
 }
 
 #[cfg(test)]
@@ -111,6 +164,92 @@ mod tests {
         std::fs::write(&p, b"definitely not a checkpoint").unwrap();
         assert!(load(&p).is_err());
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn resume_mid_pipeline_is_bitwise_identical() {
+        // The headline resumability guarantee: train 4 steps straight
+        // through on a 2-rank 1F1B pipeline, versus train 2 steps,
+        // checkpoint the full per-rank state (params + momentum velocity
+        // + step index) through the HFCKPT2 file format, rebuild a fresh
+        // trainer, restore, and train the remaining 2 steps. Both runs
+        // must end with bitwise-identical parameters on every rank —
+        // params alone would drift (velocity carries history), and a
+        // wrong resume step would desync the index-deterministic dataset.
+        use crate::api::default_artifacts_dir;
+        use crate::comm::CommEngine;
+        use crate::data::SyntheticDataset;
+        use crate::engine::{EngineConfig, Trainer};
+        use crate::graph::zoo;
+        use crate::hfmpi::{AllreduceAlgo, World};
+        use crate::partition::Partitioning;
+        use crate::runtime::Runtime;
+        use crate::schedule::{Program, ScheduleKind, SendMode};
+
+        let g = zoo::mlp(8, &[8, 8, 8], 4);
+        let pt = Partitioning::auto(&g, 2).unwrap();
+        World::run(2, |world| {
+            let cfg = EngineConfig {
+                microbatch: 4,
+                num_microbatches: 4,
+                schedule: ScheduleKind::OneF1B,
+                lr: 0.05,
+                eager_sends: true,
+                ..EngineConfig::default()
+            };
+            let max_in_flight =
+                Program::compile_with(&g, &pt, cfg.num_microbatches, cfg.schedule, SendMode::Eager)
+                    .max_in_flight_sends();
+            let ce = CommEngine::new(
+                world,
+                2,
+                pt.edges.len(),
+                cfg.num_microbatches,
+                max_in_flight,
+                usize::MAX,
+                AllreduceAlgo::Auto,
+            );
+            let rt = Runtime::open(default_artifacts_dir()).unwrap();
+            let data = SyntheticDataset::new(cfg.seed, 4, &[8], 1.0);
+
+            // Uninterrupted baseline.
+            let mut a = Trainer::new(&g, &pt, cfg.clone(), &ce, &rt, data.clone()).unwrap();
+            for step in 0..4 {
+                a.train_step(step).unwrap();
+            }
+            let want = a.export_params();
+            drop(a);
+
+            // Interrupted run: 2 steps, checkpoint to disk, fresh trainer,
+            // restore, 2 more steps.
+            let mut b = Trainer::new(&g, &pt, cfg.clone(), &ce, &rt, data.clone()).unwrap();
+            for step in 0..2 {
+                b.train_step(step).unwrap();
+            }
+            let p = tmp(&format!("resume_r{}", world.rank()));
+            save_state(&p, &b.export_state(2)).unwrap();
+            drop(b);
+            let st = load_state(&p).unwrap();
+            std::fs::remove_file(&p).ok();
+            assert_eq!(st.next_step, 2);
+
+            let mut c = Trainer::new(&g, &pt, cfg.clone(), &ce, &rt, data.clone()).unwrap();
+            c.restore_state(&st).unwrap();
+            for step in st.next_step..4 {
+                c.train_step(step).unwrap();
+            }
+            let got = c.export_params();
+            assert_eq!(want.len(), got.len());
+            for ((ka, ta), (kb, tb)) in want.iter().zip(got.iter()) {
+                assert_eq!(ka, kb);
+                assert_eq!(
+                    ta.max_abs_diff(tb),
+                    0.0,
+                    "rank {} param {ka:?}: resumed run diverged",
+                    world.rank()
+                );
+            }
+        });
     }
 
     #[test]

@@ -48,13 +48,13 @@ mod schedule;
 pub use optimizer::SgdMomentum;
 pub use schedule::LrSchedule;
 
-use crate::comm::CommEngine;
+use crate::comm::{CommEngine, SendHandle};
 use crate::data::SyntheticDataset;
 use crate::graph::{LayerKind, ModelGraph, NodeId};
 use crate::partition::Partitioning;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
-use crate::schedule::{Instr, Program, ScheduleKind};
+use crate::schedule::{Instr, Program, ScheduleKind, SendMode};
 use crate::tensor::{Shape, Tensor};
 use std::collections::HashMap;
 
@@ -75,6 +75,14 @@ pub struct EngineConfig {
     /// Optional schedule; overrides `lr` per step when set (the paper's
     /// accuracy runs use `LrSchedule::keras_cifar`).
     pub lr_schedule: Option<LrSchedule>,
+    /// Compile the training program with eager (MPI_Isend-style)
+    /// `PostSend*`/`WaitSend` pairs instead of blocking sends. Payloads,
+    /// arithmetic and message order are identical — only the completion
+    /// point moves — so training is bitwise-equal either way; eager
+    /// programs are additionally deadlock-free on rendezvous-only
+    /// transports. Default: on (`HF_EAGER_SENDS=0` disables, which is how
+    /// CI exercises the blocking/buffered row of the transport matrix).
+    pub eager_sends: bool,
 }
 
 impl Default for EngineConfig {
@@ -87,8 +95,17 @@ impl Default for EngineConfig {
             momentum: 0.9,
             seed: 42,
             lr_schedule: None,
+            eager_sends: eager_sends_from_env(),
         }
     }
+}
+
+/// `HF_EAGER_SENDS=0|false|off` opts the engine back into blocking sends.
+fn eager_sends_from_env() -> bool {
+    !matches!(
+        std::env::var("HF_EAGER_SENDS").as_deref(),
+        Ok("0") | Ok("false") | Ok("off")
+    )
 }
 
 /// Metrics of one training (or eval) step, reported by the last partition.
@@ -135,7 +152,8 @@ impl<'a> Trainer<'a> {
         rt: &'a Runtime,
         data: SyntheticDataset,
     ) -> anyhow::Result<Trainer<'a>> {
-        let program = Program::compile(g, pt, cfg.num_microbatches, cfg.schedule);
+        let mode = if cfg.eager_sends { SendMode::Eager } else { SendMode::Blocking };
+        let program = Program::compile_with(g, pt, cfg.num_microbatches, cfg.schedule, mode);
         let eval_program = Program::forward_only(pt, cfg.schedule);
         // Under interleaved schedules a rank owns several stages (model
         // chunks); its parameter set is their union, ascending node order
@@ -468,6 +486,10 @@ impl<'a> Trainer<'a> {
         // BwdWeight. Bounded by the deferral window (<= pipeline depth
         // microbatches of parameter-shaped tensors).
         let mut pending_wgrad: HashMap<(NodeId, usize), Vec<Tensor>> = HashMap::new();
+        // Eager sends in flight: handle -> CommEngine send handle. Error
+        // payloads live inside the handle until WaitSend (MPI_Isend buffer
+        // contract); bounded by Program::peak_in_flight_sends.
+        let mut in_flight: HashMap<usize, SendHandle> = HashMap::new();
 
         // Iterate by index: `Instr` is `Copy`, so this avoids cloning the
         // instruction stream every step while keeping `self` free for the
@@ -518,6 +540,23 @@ impl<'a> Trainer<'a> {
                         .expect("backward computed the partial error before its send");
                     self.ce.send_error(&t, peer, edge, mb);
                 }
+                Instr::PostSendActivation { edge, peer, mb, handle } => {
+                    let e = &self.pt.edges[edge];
+                    let t = &stashes[mb][&e.src_node];
+                    in_flight.insert(handle, self.ce.post_send_activation(t, peer, edge, mb));
+                }
+                Instr::PostSendError { edge, peer, mb, handle } => {
+                    let t = pending_err
+                        .remove(&(edge, mb))
+                        .expect("backward computed the partial error before its post");
+                    in_flight.insert(handle, self.ce.post_send_error(t, peer, edge, mb));
+                }
+                Instr::WaitSend { handle } => {
+                    let h = in_flight
+                        .remove(&handle)
+                        .expect("WaitSend pairs with an earlier PostSend");
+                    self.ce.wait_send(h);
+                }
                 Instr::RecvError { edge, peer, mb } => {
                     let e = &self.pt.edges[edge];
                     let err = self.ce.recv_error(peer, edge, mb);
@@ -564,6 +603,11 @@ impl<'a> Trainer<'a> {
                 }
             }
         }
+        debug_assert!(
+            in_flight.is_empty(),
+            "eager sends left in flight after the step: {:?}",
+            in_flight.keys().collect::<Vec<_>>()
+        );
 
         // ---- metrics (last partition) ----
         let mut metrics = StepMetrics {
@@ -653,6 +697,40 @@ impl<'a> Trainer<'a> {
             out.push(((n, si), self.params[&n][si].clone()));
         }
         out
+    }
+
+    /// Full resumable training state of this rank: parameters plus
+    /// optimizer velocity, tagged with the next step index. Feed it to
+    /// [`checkpoint::save_state`] and a fresh trainer's
+    /// [`Trainer::restore_state`] to resume bitwise-identically.
+    pub fn export_state(&self, next_step: u64) -> checkpoint::TrainState {
+        checkpoint::TrainState {
+            next_step,
+            params: self.export_params(),
+            velocity: self.opt.export_velocity(&self.param_order),
+        }
+    }
+
+    /// Restore parameters and optimizer velocity from a checkpointed
+    /// state. Entries for other ranks' shards are ignored; every parameter
+    /// this rank owns must be present and shape-compatible.
+    pub fn restore_state(&mut self, st: &checkpoint::TrainState) -> anyhow::Result<()> {
+        let by_key: HashMap<(NodeId, usize), &Tensor> =
+            st.params.iter().map(|(k, t)| (*k, t)).collect();
+        for &(n, si) in &self.param_order {
+            let t = by_key
+                .get(&(n, si))
+                .ok_or_else(|| anyhow::anyhow!("checkpoint is missing param ({n}, {si})"))?;
+            let w = &mut self.params.get_mut(&n).expect("own param")[si];
+            anyhow::ensure!(
+                t.shape == w.shape,
+                "param ({n}, {si}): checkpoint shape {:?} != expected {:?}",
+                t.shape,
+                w.shape
+            );
+            *w = (*t).clone();
+        }
+        self.opt.restore_velocity(&st.velocity)
     }
 
     /// Names of the artifacts this rank executes (for warmup) — all of

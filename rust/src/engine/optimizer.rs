@@ -34,6 +34,37 @@ impl SgdMomentum {
         SgdMomentum { lr, momentum, velocity }
     }
 
+    /// Snapshot the velocity tensors in `param_order` — checkpointing the
+    /// optimizer state is what makes a resumed run bitwise-identical to an
+    /// uninterrupted one (momentum carries history across steps).
+    pub fn export_velocity(&self, param_order: &[(NodeId, usize)]) -> Vec<((NodeId, usize), Tensor)> {
+        param_order.iter().map(|&k| (k, self.velocity[&k].clone())).collect()
+    }
+
+    /// Restore velocity slots from a checkpoint. Entries for parameters
+    /// this optimizer does not own are ignored (other ranks' shards); every
+    /// owned slot must be present and shape-compatible.
+    pub fn restore_velocity(
+        &mut self,
+        entries: &[((NodeId, usize), Tensor)],
+    ) -> anyhow::Result<()> {
+        let by_key: HashMap<(NodeId, usize), &Tensor> =
+            entries.iter().map(|(k, t)| (*k, t)).collect();
+        for (k, v) in self.velocity.iter_mut() {
+            let t = by_key
+                .get(k)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint is missing velocity for {k:?}"))?;
+            anyhow::ensure!(
+                t.shape == v.shape,
+                "velocity {k:?}: checkpoint shape {:?} != expected {:?}",
+                t.shape,
+                v.shape
+            );
+            *v = (*t).clone();
+        }
+        Ok(())
+    }
+
     /// Apply one update. Missing gradient entries (nodes without params)
     /// are skipped.
     pub fn step(

@@ -113,6 +113,15 @@ pub struct CommStats {
     pub recv_secs: f64,
 }
 
+/// A pending nonblocking send posted by [`Comm::isend`]; complete it with
+/// [`Comm::wait`]. Dropping it without waiting leaks the completion
+/// accounting, so it is `#[must_use]`.
+#[must_use = "complete the send with Comm::wait"]
+#[derive(Debug)]
+pub struct SendReq {
+    bytes: u64,
+}
+
 /// A communicator: an ordered group of global ranks plus this rank's index
 /// within it. Cheap to clone (shares the fabric).
 pub struct Comm {
@@ -184,6 +193,25 @@ impl Comm {
         s.sends += 1;
         s.bytes_sent += bytes;
         s.send_secs += t0.elapsed().as_secs_f64();
+    }
+
+    /// Nonblocking tagged send (MPI_Isend): initiate the transfer and
+    /// return a request handle immediately; [`Comm::wait`] completes it.
+    /// On this buffered fabric the payload is enqueued at post time, so
+    /// the request is already complete when returned — `wait` exists for
+    /// the MPI contract and for symmetry with rendezvous transports, where
+    /// it would block until the matching receive is posted. Callers must
+    /// keep their payload buffer untouched until the wait (the engine pins
+    /// error payloads inside its `SendHandle` for exactly this reason).
+    pub fn isend(&self, t: &Tensor, dst: usize, tag: u64) -> SendReq {
+        let bytes = t.size_bytes() as u64;
+        self.send(t, dst, tag);
+        SendReq { bytes }
+    }
+
+    /// Complete a nonblocking send. Returns the payload size in bytes.
+    pub fn wait(&self, req: SendReq) -> u64 {
+        req.bytes
     }
 
     /// Blocking tagged receive from communicator rank `src`.

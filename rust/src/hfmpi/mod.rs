@@ -11,7 +11,9 @@
 //!
 //! API mirrors the MPI subset HyPar-Flow's Communication Engine uses
 //! (paper §6.3): `send`, `recv`, `broadcast`, `allreduce` (+ `barrier`,
-//! `allgather`, `split`, `dup`).
+//! `allgather`, `split`, `dup`), plus the nonblocking pair
+//! `isend`/`wait` (MPI_Isend/MPI_Wait) the eager-send schedule programs
+//! run on.
 //!
 //! ```no_run
 //! // (no_run: kept as documentation; the same code runs for real as
@@ -31,7 +33,7 @@ mod fabric;
 mod fusion;
 
 pub use collectives::AllreduceAlgo;
-pub use fabric::{Comm, CommStats, World};
+pub use fabric::{Comm, CommStats, SendReq, World};
 pub use fusion::{FusionBuffer, DEFAULT_THRESHOLD_BYTES};
 
 /// Message tags used by the training engine. Kept here so every subsystem

@@ -11,12 +11,25 @@
 //! ([`schedule`]): a `(ModelGraph, Partitioning, num_microbatches)` triple
 //! compiles into an explicit per-rank instruction program (`FwdCompute`,
 //! `BwdCompute`, `Send`/`RecvActivation`, `Send`/`RecvError`, `DropStash`,
-//! `AllreduceGrads`, `OptStep`) under one of two generators — `gpipe`
-//! (the paper's §5.3 fill/drain) or `one_f1b` (PipeDream-style
-//! one-forward-one-backward with bounded in-flight microbatches). Message
-//! ops are linearized by the paper's §6.3 rank-sorted deadlock-free order
-//! (the same rule as [`partition::MsgSchedule`]). Three consumers interpret
-//! the *same* program object, so no subsystem re-derives its own ordering:
+//! `AllreduceGrads`, `OptStep`) under one of four generators — `gpipe`
+//! (the paper's §5.3 fill/drain), `one_f1b` (PipeDream-style
+//! one-forward-one-backward with bounded in-flight microbatches),
+//! `interleaved_1f1b:v=N` (Megatron-style virtual stages) or `zb_h1`
+//! (zero-bubble split backward). Message ops are linearized by the paper's
+//! §6.3 rank-sorted deadlock-free order (the same rule as
+//! [`partition::MsgSchedule`]). Sends compile in one of two **send
+//! modes**: blocking (`SendActivation`/`SendError`), which the
+//! 1F1B-family schedules can only run on a *buffered* transport (facing
+//! send pairs deadlock under rendezvous semantics), or **eager**
+//! (`SendMode::Eager`, the engine default): each send becomes an
+//! MPI_Isend-style `PostSendActivation`/`PostSendError` that never
+//! blocks, completed by a `WaitSend` placed at the end of the
+//! microbatch's live interval — which makes *every* generator
+//! deadlock-free under both [`schedule::SendSemantics::Buffered`] and
+//! [`schedule::SendSemantics::Rendezvous`], machine-checked by
+//! [`schedule::Program::check`] and the conformance harness. Three
+//! consumers interpret the *same* program object, so no subsystem
+//! re-derives its own ordering:
 //!
 //! - **Trainer** ([`engine`]) — executes the instruction stream against
 //!   the runtime and the communication engine; grad-layer partial-error
@@ -41,10 +54,12 @@
 //!   skips, Fig 6), and the rendezvous deadlock checker for the §6.3
 //!   message order.
 //! - [`comm`] / [`hfmpi`] — the Communication Engine over an in-process
-//!   MPI fabric (threads as ranks, buffered sends, communicator-per-
+//!   MPI fabric (threads as ranks, buffered sends plus MPI_Isend-style
+//!   `post_send_*`/`wait_send` for the eager IR ops, communicator-per-
 //!   partition layout, Horovod-style tensor fusion). Tag space for
-//!   (edge x microbatch) message identities is budget-checked at
-//!   `CommEngine` construction.
+//!   (edge x microbatch) message identities — including the worst-case
+//!   *concurrently* in-flight eager sends, a static property of the
+//!   compiled program — is budget-checked at `CommEngine` construction.
 //! - [`runtime`] — the primitive executor. The AOT/PJRT path (HLO
 //!   artifacts compiled by `python/compile/aot.py` from the JAX/Pallas
 //!   primitives in `python/compile/`) is replaced in the offline build by

@@ -136,7 +136,7 @@ pub fn partition_memory_scheduled(
         }
     }
     est.workspace = max_patch;
-    est.activations = program.peak_activation_bytes(g, rank, mb);
+    est.activations = program.peak_activation_bytes(g, pt, rank, mb);
     est
 }
 

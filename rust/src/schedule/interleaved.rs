@@ -28,7 +28,7 @@
 //! pairing verifier for random `(R, v, m)` — fuzzed in
 //! `rust/tests/proptests.rs` and `rust/tests/schedule_conformance.rs`.
 
-use super::{bwd_phase, fwd_phase, Instr, Program, ScheduleKind};
+use super::{bwd_phase, fwd_phase, Instr, Program, ScheduleKind, SendMode};
 use crate::graph::ModelGraph;
 use crate::partition::Partitioning;
 
@@ -84,6 +84,7 @@ pub(super) fn compile(g: &ModelGraph, pt: &Partitioning, m: usize, v: usize) -> 
     }
     Program {
         kind: ScheduleKind::Interleaved1F1B { v },
+        send_mode: SendMode::Blocking,
         num_microbatches: m,
         num_partitions: p,
         num_stages: stages,

@@ -58,20 +58,36 @@
 //! [`Program::verify_message_pairing`] and conformance-tested end to end
 //! in `rust/tests/schedule_conformance.rs`.
 //!
-//! **1F1B-family schedules require buffered sends.** Under rendezvous
-//! semantics 1F1B can deadlock even on a plain chain: stage `i` must get
-//! through its forward send of microbatch `k+1` before posting the receive
-//! for stage `i+1`'s error of microbatch `k`, while stage `i+1`
-//! symmetrically blocks on that error send — two sends facing each other.
-//! Real pipelined systems (PipeDream, Megatron) use asynchronous/buffered
-//! communication for exactly this reason, and the hfmpi fabric buffers
-//! sends (MPI_Bsend semantics), so the engine executes 1F1B (and the
-//! interleaved/zero-bubble variants) safely. The checker models both:
-//! [`SendSemantics::Rendezvous`] for the paper-faithful GPipe claim, and
-//! [`SendSemantics::Buffered`] (sends complete immediately, receives wait
-//! for a matching completed send) to validate that a program is executable
-//! on the actual fabric. `one_f1b_needs_buffered_sends` in the tests below
-//! pins the deadlock demonstration.
+//! **Blocking 1F1B-family schedules require buffered sends.** Under
+//! rendezvous semantics blocking 1F1B can deadlock even on a plain chain:
+//! stage `i` must get through its forward send of microbatch `k+1` before
+//! posting the receive for stage `i+1`'s error of microbatch `k`, while
+//! stage `i+1` symmetrically blocks on that error send — two sends facing
+//! each other. Real pipelined systems (PipeDream, Megatron) use
+//! asynchronous communication for exactly this reason. The checker models
+//! both transports: [`SendSemantics::Rendezvous`] (a send completes only
+//! against a posted receive — the paper-faithful §6.3 setting) and
+//! [`SendSemantics::Buffered`] (MPI_Bsend — what the hfmpi fabric
+//! implements: sends complete immediately, receives wait for a matching
+//! completed send). `one_f1b_needs_buffered_sends` in the tests below pins
+//! the deadlock demonstration as a regression canary.
+//!
+//! **Eager sends make every generator rendezvous-safe.** Compiling with
+//! [`SendMode::Eager`] splits each blocking send into an MPI_Isend-style
+//! pair: [`Instr::PostSendActivation`]/[`Instr::PostSendError`] initiate
+//! the transfer and never block, and the matching [`Instr::WaitSend`]
+//! (placed at the end of the microbatch's live interval, just before its
+//! `DropStash`, or flushed before `AllreduceGrads`) completes it. Because
+//! a posted send cannot face another send, the facing-send deadlock
+//! disappears and all four generators' eager programs complete under
+//! *rendezvous* semantics — machine-checked per kind x random topology x
+//! m in `rust/tests/schedule_conformance.rs`. The send buffer stays live
+//! from post to wait (the MPI_Isend contract): activation payloads alias
+//! the stash (already live until `DropStash`), error payloads are pinned
+//! in the engine's in-flight table and counted by
+//! [`Program::peak_activation_bytes`]; the concurrency itself is bounded
+//! by [`Program::peak_in_flight_sends`] and budget-checked against the
+//! message-tag space at `CommEngine` construction.
 
 mod interleaved;
 
@@ -190,6 +206,19 @@ pub enum Instr {
     /// Receive a partial error; accumulated into the producer's
     /// output-gradient.
     RecvError { edge: usize, peer: usize, mb: usize },
+    /// Eager (MPI_Isend-style) activation send: initiate the transfer and
+    /// continue immediately — never blocks, even on rendezvous transports.
+    /// The payload aliases the stash and must stay live until the paired
+    /// [`Instr::WaitSend`] with the same `handle` completes the send.
+    PostSendActivation { edge: usize, peer: usize, mb: usize, handle: usize },
+    /// Eager error send (see [`Instr::PostSendActivation`]). The error
+    /// payload has no stash home, so the engine pins it in its in-flight
+    /// table from post to wait.
+    PostSendError { edge: usize, peer: usize, mb: usize, handle: usize },
+    /// Complete the eager send `handle` (a per-rank id): on rendezvous
+    /// transports this blocks until the matching receive has executed;
+    /// the send buffer is released here.
+    WaitSend { handle: usize },
     /// Microbatch `mb`'s backward is complete on this rank: its activation
     /// stash and gradient accumulators are dead. The memory model reads
     /// stash lifetime from (first `FwdCompute`/`RecvActivation`, this).
@@ -202,13 +231,17 @@ pub enum Instr {
 }
 
 impl Instr {
-    /// Message identity for the deadlock checkers: (edge, mb, class) with
-    /// class 0 = activation, 1 = error. `None` for non-message ops.
+    /// Message identity for the deadlock checkers and pairing verifier:
+    /// (edge, mb, class) with class 0 = activation, 1 = error. Eager posts
+    /// count as the send side of their message; `WaitSend` is a completion
+    /// marker, not a message, and returns `None` like compute ops.
     fn msg_key(&self) -> Option<(usize, usize, u8, bool /*is_send*/, usize /*peer*/)> {
         match *self {
-            Instr::SendActivation { edge, peer, mb } => Some((edge, mb, 0, true, peer)),
+            Instr::SendActivation { edge, peer, mb }
+            | Instr::PostSendActivation { edge, peer, mb, .. } => Some((edge, mb, 0, true, peer)),
             Instr::RecvActivation { edge, peer, mb } => Some((edge, mb, 0, false, peer)),
-            Instr::SendError { edge, peer, mb } => Some((edge, mb, 1, true, peer)),
+            Instr::SendError { edge, peer, mb }
+            | Instr::PostSendError { edge, peer, mb, .. } => Some((edge, mb, 1, true, peer)),
             Instr::RecvError { edge, peer, mb } => Some((edge, mb, 1, false, peer)),
             _ => None,
         }
@@ -228,10 +261,23 @@ pub enum SendSemantics {
     Buffered,
 }
 
+/// How sends are expressed in the compiled program.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SendMode {
+    /// Blocking `SendActivation`/`SendError` ops (MPI_Send). Safe on
+    /// buffered transports for every kind; rendezvous-safe only for GPipe.
+    Blocking,
+    /// Eager `PostSend*`/`WaitSend` pairs (MPI_Isend/MPI_Wait). Safe under
+    /// both transport semantics for all four kinds; the send buffer stays
+    /// live from post to wait.
+    Eager,
+}
+
 /// A compiled per-rank instruction program for one training step.
 #[derive(Clone, Debug)]
 pub struct Program {
     pub kind: ScheduleKind,
+    pub send_mode: SendMode,
     pub num_microbatches: usize,
     /// Pipeline ranks (processes) — one instruction stream each.
     pub num_partitions: usize,
@@ -320,7 +366,108 @@ impl Program {
             prog.push(Instr::OptStep);
             ranks.push(prog);
         }
-        Program { kind, num_microbatches: m, num_partitions: p, num_stages: p, ranks }
+        Program {
+            kind,
+            send_mode: SendMode::Blocking,
+            num_microbatches: m,
+            num_partitions: p,
+            num_stages: p,
+            ranks,
+        }
+    }
+
+    /// [`Program::compile`] plus a send-mode axis: `SendMode::Blocking`
+    /// returns the classic program unchanged; `SendMode::Eager` rewrites
+    /// every blocking send into a `PostSend*`/`WaitSend` pair (see
+    /// [`Program::into_eager`]), making the program deadlock-free under
+    /// rendezvous semantics for all four kinds.
+    pub fn compile_with(
+        g: &ModelGraph,
+        pt: &Partitioning,
+        num_microbatches: usize,
+        kind: ScheduleKind,
+        mode: SendMode,
+    ) -> Program {
+        let prog = Self::compile(g, pt, num_microbatches, kind);
+        match mode {
+            SendMode::Blocking => prog,
+            SendMode::Eager => prog.into_eager(),
+        }
+    }
+
+    /// Rewrite blocking sends into eager post/wait pairs. Each
+    /// `SendActivation`/`SendError` becomes the matching `PostSend*` with a
+    /// fresh per-rank handle; the paired `WaitSend` is placed at the end of
+    /// the payload's live interval — immediately before the microbatch's
+    /// `DropStash` (where its stash dies) — and any handle still open at
+    /// `AllreduceGrads` or at stream end is flushed there. Waits never
+    /// deadlock: a posted send never blocks its receiver's progress, and by
+    /// the time a rank reaches `DropStash { mb }` every downstream consumer
+    /// of that microbatch has already executed the matching receive (its
+    /// own backward of `mb` precedes ours in pipeline order) — verified
+    /// under [`SendSemantics::Rendezvous`] per kind x random topology x m
+    /// by the conformance harness.
+    pub fn into_eager(mut self) -> Program {
+        for prog in &mut self.ranks {
+            let mut out = Vec::with_capacity(prog.len() + 8);
+            let mut next_handle = 0usize;
+            // Posted but not yet waited handles, with their microbatch.
+            let mut open: Vec<(usize, usize)> = vec![];
+            for &instr in prog.iter() {
+                match instr {
+                    Instr::SendActivation { edge, peer, mb } => {
+                        out.push(Instr::PostSendActivation { edge, peer, mb, handle: next_handle });
+                        open.push((next_handle, mb));
+                        next_handle += 1;
+                    }
+                    Instr::SendError { edge, peer, mb } => {
+                        out.push(Instr::PostSendError { edge, peer, mb, handle: next_handle });
+                        open.push((next_handle, mb));
+                        next_handle += 1;
+                    }
+                    Instr::DropStash { mb } => {
+                        // The microbatch's buffers die here: complete all
+                        // of its in-flight sends first.
+                        open.retain(|&(handle, b)| {
+                            if b == mb {
+                                out.push(Instr::WaitSend { handle });
+                                false
+                            } else {
+                                true
+                            }
+                        });
+                        out.push(instr);
+                    }
+                    Instr::AllreduceGrads => {
+                        for (handle, _) in open.drain(..) {
+                            out.push(Instr::WaitSend { handle });
+                        }
+                        out.push(instr);
+                    }
+                    other => out.push(other),
+                }
+            }
+            for (handle, _) in open.drain(..) {
+                out.push(Instr::WaitSend { handle });
+            }
+            *prog = out;
+        }
+        self.send_mode = SendMode::Eager;
+        self
+    }
+
+    /// Map each eager-send handle of `rank` to its message identity
+    /// `(edge, mb, class)` — used by the rendezvous checker and the
+    /// simulator to resolve `WaitSend { handle }`.
+    pub fn handle_keys(&self, rank: usize) -> HashMap<usize, (usize, usize, u8)> {
+        self.ranks[rank]
+            .iter()
+            .filter_map(|i| match *i {
+                Instr::PostSendActivation { edge, mb, handle, .. } => Some((handle, (edge, mb, 0))),
+                Instr::PostSendError { edge, mb, handle, .. } => Some((handle, (edge, mb, 1))),
+                _ => None,
+            })
+            .collect()
     }
 
     /// A forward-only single-microbatch program (evaluation path). Under
@@ -339,7 +486,14 @@ impl Program {
             }
             ranks.push(prog);
         }
-        Program { kind, num_microbatches: 1, num_partitions: p, num_stages: stages, ranks }
+        Program {
+            kind,
+            send_mode: SendMode::Blocking,
+            num_microbatches: 1,
+            num_partitions: p,
+            num_stages: stages,
+            ranks,
+        }
     }
 
     /// The instruction stream of one rank.
@@ -394,12 +548,24 @@ impl Program {
     /// `mb`, byte-accurate from the instruction stream: each `FwdCompute`
     /// makes its node's output live (own nodes only — received activations
     /// are not counted, matching `mem::partition_memory`'s accounting),
-    /// and `DropStash` retires the microbatch. For flat schedules this
-    /// equals `peak_resident_microbatches * Σ node bytes`; under
-    /// interleaved the chunks of one rank hold different byte totals, so
-    /// this walk is the ground truth the memory model reads.
-    pub fn peak_activation_bytes(&self, g: &ModelGraph, rank: usize, mb: usize) -> u64 {
+    /// and `DropStash` retires the microbatch. Eager error sends pin their
+    /// payload (the producer's output-shaped gradient) from
+    /// `PostSendError` to the matching `WaitSend` — that in-flight buffer
+    /// is counted too; eager *activation* posts alias the stash, which is
+    /// already live until `DropStash`, so they add nothing. For flat
+    /// blocking schedules this equals
+    /// `peak_resident_microbatches * Σ node bytes`; under interleaved the
+    /// chunks of one rank hold different byte totals, so this walk is the
+    /// ground truth the memory model reads.
+    pub fn peak_activation_bytes(
+        &self,
+        g: &ModelGraph,
+        pt: &Partitioning,
+        rank: usize,
+        mb: usize,
+    ) -> u64 {
         let mut live: HashMap<(usize, NodeId), u64> = HashMap::new();
+        let mut in_flight_err: HashMap<usize, u64> = HashMap::new();
         let (mut cur, mut peak) = (0u64, 0u64);
         for instr in &self.ranks[rank] {
             match *instr {
@@ -409,6 +575,19 @@ impl Program {
                     if live.insert((b, node), bytes).is_none() {
                         cur += bytes;
                         peak = peak.max(cur);
+                    }
+                }
+                Instr::PostSendError { edge, handle, .. } => {
+                    let src = pt.edges[edge].src_node;
+                    let bytes =
+                        g.nodes[src].out_shape.iter().product::<usize>() as u64 * 4 * mb as u64;
+                    in_flight_err.insert(handle, bytes);
+                    cur += bytes;
+                    peak = peak.max(cur);
+                }
+                Instr::WaitSend { handle } => {
+                    if let Some(bytes) = in_flight_err.remove(&handle) {
+                        cur -= bytes;
                     }
                 }
                 Instr::DropStash { mb: b } => {
@@ -430,84 +609,121 @@ impl Program {
     /// Simulate the program's message ops under the given send semantics.
     /// Returns `Ok(matched message pairs)` if every rank completes, or
     /// `Err(stuck rank ids)` on deadlock. Compute/stash/epilogue ops never
-    /// block and are skipped over.
+    /// block. Blocking sends complete only head-to-head against the
+    /// matching receive under [`SendSemantics::Rendezvous`]; eager posts
+    /// never block under either semantics, and `WaitSend` blocks (under
+    /// rendezvous) until the posted message's receive has executed.
     pub fn check(&self, sem: SendSemantics) -> Result<usize, Vec<usize>> {
+        use std::collections::HashSet;
         let p = self.ranks.len();
+        let keys: Vec<HashMap<usize, (usize, usize, u8)>> =
+            (0..p).map(|r| self.handle_keys(r)).collect();
         let mut pc = vec![0usize; p];
-        // Advance past non-message instructions.
-        let skip = |rank: usize, pc: &mut [usize]| {
-            while pc[rank] < self.ranks[rank].len()
-                && self.ranks[rank][pc[rank]].msg_key().is_none()
-            {
-                pc[rank] += 1;
-            }
-        };
-        for r in 0..p {
-            skip(r, &mut pc);
-        }
         let mut steps = 0usize;
         match sem {
-            SendSemantics::Rendezvous => loop {
-                let mut progressed = false;
-                for a in 0..p {
-                    if pc[a] >= self.ranks[a].len() {
-                        continue;
+            SendSemantics::Rendezvous => {
+                // posted[(edge, mb, class)] = eager sends not yet received;
+                // recv_done = messages whose receive has executed (what a
+                // WaitSend unblocks on).
+                let mut posted: HashMap<(usize, usize, u8), usize> = HashMap::new();
+                let mut recv_done: HashSet<(usize, usize, u8)> = HashSet::new();
+                loop {
+                    let mut progressed = false;
+                    for a in 0..p {
+                        while pc[a] < self.ranks[a].len() {
+                            let instr = self.ranks[a][pc[a]];
+                            match instr {
+                                Instr::PostSendActivation { edge, mb, .. } => {
+                                    *posted.entry((edge, mb, 0)).or_insert(0) += 1;
+                                }
+                                Instr::PostSendError { edge, mb, .. } => {
+                                    *posted.entry((edge, mb, 1)).or_insert(0) += 1;
+                                }
+                                Instr::WaitSend { handle } => {
+                                    let key = keys[a][&handle];
+                                    if !recv_done.contains(&key) {
+                                        break; // receive not yet executed
+                                    }
+                                }
+                                _ => match instr.msg_key() {
+                                    None => {}
+                                    Some((edge, mb, class, true, peer)) => {
+                                        // Blocking send: completes only when
+                                        // the matching receive is at the head
+                                        // of the peer's program.
+                                        let facing = self.ranks[peer].get(pc[peer]).and_then(
+                                            Instr::msg_key,
+                                        ) == Some((edge, mb, class, false, a));
+                                        if !facing {
+                                            break;
+                                        }
+                                        pc[peer] += 1;
+                                        recv_done.insert((edge, mb, class));
+                                        steps += 1;
+                                    }
+                                    Some((edge, mb, class, false, peer)) => {
+                                        let key = (edge, mb, class);
+                                        if let Some(n) =
+                                            posted.get_mut(&key).filter(|n| **n > 0)
+                                        {
+                                            // An eager post satisfies the
+                                            // receive without rank sync.
+                                            *n -= 1;
+                                            recv_done.insert(key);
+                                            steps += 1;
+                                        } else if self.ranks[peer]
+                                            .get(pc[peer])
+                                            .and_then(Instr::msg_key)
+                                            == Some((edge, mb, class, true, a))
+                                        {
+                                            // Facing blocking send: complete
+                                            // both sides.
+                                            pc[peer] += 1;
+                                            recv_done.insert(key);
+                                            steps += 1;
+                                        } else {
+                                            break;
+                                        }
+                                    }
+                                },
+                            }
+                            pc[a] += 1;
+                            progressed = true;
+                        }
                     }
-                    let (edge, mb, class, is_send, peer) =
-                        self.ranks[a][pc[a]].msg_key().unwrap();
-                    if pc[peer] >= self.ranks[peer].len() {
-                        continue;
+                    if (0..p).all(|r| pc[r] >= self.ranks[r].len()) {
+                        return Ok(steps);
                     }
-                    let Some((e2, mb2, c2, send2, peer2)) =
-                        self.ranks[peer][pc[peer]].msg_key()
-                    else {
-                        continue;
-                    };
-                    if peer2 == a && e2 == edge && mb2 == mb && c2 == class && send2 != is_send
-                    {
-                        pc[a] += 1;
-                        pc[peer] += 1;
-                        skip(a, &mut pc);
-                        skip(peer, &mut pc);
-                        steps += 1;
-                        progressed = true;
+                    if !progressed {
+                        return Err((0..p).filter(|&r| pc[r] < self.ranks[r].len()).collect());
                     }
                 }
-                if (0..p).all(|r| pc[r] >= self.ranks[r].len()) {
-                    return Ok(steps);
-                }
-                if !progressed {
-                    return Err((0..p).filter(|&r| pc[r] < self.ranks[r].len()).collect());
-                }
-            },
+            }
             SendSemantics::Buffered => {
                 // sent[(edge, mb, class)] = completed sends not yet received.
+                // Eager posts behave exactly like blocking sends (both
+                // complete immediately) and waits never block.
                 let mut sent: HashMap<(usize, usize, u8), usize> = HashMap::new();
                 loop {
                     let mut progressed = false;
                     for a in 0..p {
-                        loop {
-                            skip(a, &mut pc);
-                            if pc[a] >= self.ranks[a].len() {
-                                break;
-                            }
-                            let (edge, mb, class, is_send, _peer) =
-                                self.ranks[a][pc[a]].msg_key().unwrap();
-                            if is_send {
-                                *sent.entry((edge, mb, class)).or_insert(0) += 1;
-                                pc[a] += 1;
-                                progressed = true;
-                            } else {
-                                let slot = sent.entry((edge, mb, class)).or_insert(0);
-                                if *slot > 0 {
+                        while pc[a] < self.ranks[a].len() {
+                            match self.ranks[a][pc[a]].msg_key() {
+                                None => {}
+                                Some((edge, mb, class, true, _peer)) => {
+                                    *sent.entry((edge, mb, class)).or_insert(0) += 1;
+                                }
+                                Some((edge, mb, class, false, _peer)) => {
+                                    let slot = sent.entry((edge, mb, class)).or_insert(0);
+                                    if *slot == 0 {
+                                        break; // blocked on a send not yet issued
+                                    }
                                     *slot -= 1;
-                                    pc[a] += 1;
                                     steps += 1;
-                                    progressed = true;
-                                } else {
-                                    break; // blocked on a send not yet issued
                                 }
                             }
+                            pc[a] += 1;
+                            progressed = true;
                         }
                     }
                     if (0..p).all(|r| pc[r] >= self.ranks[r].len()) {
@@ -571,6 +787,70 @@ impl Program {
             );
         }
         Ok(())
+    }
+
+    /// Machine-check exactly-once Post→Wait pairing per rank: every handle
+    /// is posted exactly once and waited exactly once, the wait comes after
+    /// its post, no wait names an unposted handle (orphan), and no handle
+    /// is waited twice. Blocking programs (no eager ops) pass trivially.
+    pub fn verify_eager_pairing(&self) -> anyhow::Result<()> {
+        for rank in 0..self.num_partitions {
+            // handle -> already waited?
+            let mut open: HashMap<usize, bool> = HashMap::new();
+            for i in &self.ranks[rank] {
+                match *i {
+                    Instr::PostSendActivation { handle, .. }
+                    | Instr::PostSendError { handle, .. } => {
+                        anyhow::ensure!(
+                            open.insert(handle, false).is_none(),
+                            "rank {rank}: handle {handle} posted twice"
+                        );
+                    }
+                    Instr::WaitSend { handle } => match open.get_mut(&handle) {
+                        None => anyhow::bail!(
+                            "rank {rank}: WaitSend on handle {handle} that was never posted \
+                             (orphan wait, or wait precedes its post)"
+                        ),
+                        Some(waited @ false) => *waited = true,
+                        Some(true) => {
+                            anyhow::bail!("rank {rank}: handle {handle} waited twice")
+                        }
+                    },
+                    _ => {}
+                }
+            }
+            for (handle, waited) in open {
+                anyhow::ensure!(
+                    waited,
+                    "rank {rank}: handle {handle} posted but never waited \
+                     (orphaned in-flight send buffer)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Peak number of eager sends simultaneously in flight (posted, not
+    /// yet waited) on `rank`. Zero for blocking programs. The engine's
+    /// `CommEngine` budget-checks this against the message-tag space.
+    pub fn peak_in_flight_sends(&self, rank: usize) -> usize {
+        let (mut live, mut peak) = (0usize, 0usize);
+        for i in &self.ranks[rank] {
+            match i {
+                Instr::PostSendActivation { .. } | Instr::PostSendError { .. } => {
+                    live += 1;
+                    peak = peak.max(live);
+                }
+                Instr::WaitSend { .. } => live = live.saturating_sub(1),
+                _ => {}
+            }
+        }
+        peak
+    }
+
+    /// Worst peak in-flight eager-send count across all ranks.
+    pub fn max_in_flight_sends(&self) -> usize {
+        (0..self.num_partitions).map(|p| self.peak_in_flight_sends(p)).max().unwrap_or(0)
     }
 }
 
@@ -740,12 +1020,142 @@ mod tests {
 
     #[test]
     fn one_f1b_needs_buffered_sends() {
-        // The documented limitation: 1F1B over >1 stage deadlocks under
-        // rendezvous semantics (facing sends), which is why pipelined
-        // systems use buffered/asynchronous communication. If this ever
-        // starts passing, the generator changed — revisit the module docs.
+        // The documented limitation: *blocking* 1F1B over >1 stage
+        // deadlocks under rendezvous semantics (facing sends), which is
+        // why pipelined systems use buffered/asynchronous communication.
+        // If this ever starts passing, the generator changed — revisit the
+        // module docs. The eager rewrite of the same program is the fix.
         let (_, prog) = program(3, 6, ScheduleKind::OneF1B);
         assert!(prog.check(SendSemantics::Rendezvous).is_err());
+        assert!(prog.clone().into_eager().check(SendSemantics::Rendezvous).is_ok());
+    }
+
+    #[test]
+    fn eager_programs_pass_both_semantics_for_all_kinds() {
+        for kind in [
+            ScheduleKind::GPipe,
+            ScheduleKind::OneF1B,
+            ScheduleKind::Interleaved1F1B { v: 2 },
+            ScheduleKind::ZbH1,
+        ] {
+            let g = zoo::resnet20_v1();
+            let pt = kind.partitioning(&g, 3).unwrap();
+            let prog = Program::compile_with(&g, &pt, 6, kind, SendMode::Eager);
+            assert_eq!(prog.send_mode, SendMode::Eager);
+            let r = prog
+                .check(SendSemantics::Rendezvous)
+                .unwrap_or_else(|stuck| panic!("{kind:?}: stuck ranks {stuck:?}"));
+            assert_eq!(prog.check(SendSemantics::Buffered).unwrap(), r);
+            prog.verify_message_pairing().unwrap();
+            prog.verify_eager_pairing().unwrap();
+        }
+    }
+
+    #[test]
+    fn eager_rewrite_replaces_every_blocking_send_and_pairs_waits() {
+        let (_, blocking) = program(4, 8, ScheduleKind::OneF1B);
+        let eager = blocking.clone().into_eager();
+        for rank in 0..4 {
+            assert!(
+                !eager.rank(rank).iter().any(|i| matches!(
+                    i,
+                    Instr::SendActivation { .. } | Instr::SendError { .. }
+                )),
+                "rank {rank}: blocking send survived the eager rewrite"
+            );
+            // Same messages, same per-channel order as the blocking stream.
+            let keys = |p: &Program| -> Vec<_> {
+                p.rank(rank).iter().filter_map(Instr::msg_key).collect()
+            };
+            assert_eq!(keys(&blocking), keys(&eager), "rank {rank}");
+            // Waits sit at the end of the payload's live interval: no eager
+            // handle may still be open after AllreduceGrads.
+            let ar = eager
+                .rank(rank)
+                .iter()
+                .position(|i| matches!(i, Instr::AllreduceGrads))
+                .unwrap();
+            let posts = eager.rank(rank)[..ar]
+                .iter()
+                .filter(|i| {
+                    matches!(i, Instr::PostSendActivation { .. } | Instr::PostSendError { .. })
+                })
+                .count();
+            let waits = eager.rank(rank)[..ar]
+                .iter()
+                .filter(|i| matches!(i, Instr::WaitSend { .. }))
+                .count();
+            assert_eq!(posts, waits, "rank {rank}: open handles past AllreduceGrads");
+        }
+        eager.verify_eager_pairing().unwrap();
+    }
+
+    #[test]
+    fn eager_pairing_verifier_catches_orphans_and_double_waits() {
+        let (_, prog) = program(2, 2, ScheduleKind::OneF1B);
+        let mut eager = prog.into_eager();
+        assert!(eager.verify_eager_pairing().is_ok());
+        // Orphan wait (handle never posted).
+        let mut broken = eager.clone();
+        broken.ranks[0].push(Instr::WaitSend { handle: 999 });
+        assert!(broken.verify_eager_pairing().is_err());
+        // Dropped wait (posted but never completed).
+        let wait_at =
+            eager.ranks[0].iter().position(|i| matches!(i, Instr::WaitSend { .. })).unwrap();
+        let dropped = eager.ranks[0].remove(wait_at);
+        assert!(eager.verify_eager_pairing().is_err());
+        // Double wait.
+        eager.ranks[0].insert(wait_at, dropped);
+        eager.ranks[0].push(dropped);
+        assert!(eager.verify_eager_pairing().is_err());
+    }
+
+    #[test]
+    fn in_flight_sends_are_bounded_and_nonzero_for_eager_pipelines() {
+        let (_, blocking) = program(4, 8, ScheduleKind::OneF1B);
+        assert_eq!(blocking.max_in_flight_sends(), 0);
+        let eager = blocking.into_eager();
+        let peak = eager.max_in_flight_sends();
+        assert!(peak >= 1, "a pipelined eager program keeps sends in flight");
+        // Each in-flight send occupies a distinct (edge, mb, class) tag, so
+        // the peak can never exceed the per-rank tag space.
+        for rank in 0..4 {
+            let channels: usize = {
+                use std::collections::HashSet;
+                eager
+                    .rank(rank)
+                    .iter()
+                    .filter_map(|i| {
+                        i.msg_key().filter(|&(_, _, _, s, _)| s).map(|(e, _, c, _, _)| (e, c))
+                    })
+                    .collect::<HashSet<_>>()
+                    .len()
+            };
+            assert!(
+                eager.peak_in_flight_sends(rank)
+                    <= channels * eager.peak_resident_microbatches(rank).max(1),
+                "rank {rank}"
+            );
+        }
+    }
+
+    #[test]
+    fn eager_error_buffers_count_toward_peak_memory() {
+        let g = zoo::resnet20_v1();
+        let pt = Partitioning::auto(&g, 3).unwrap();
+        let blocking = Program::compile(&g, &pt, 6, ScheduleKind::OneF1B);
+        let eager = blocking.clone().into_eager();
+        for rank in 0..3 {
+            let b = blocking.peak_activation_bytes(&g, &pt, rank, 4);
+            let e = eager.peak_activation_bytes(&g, &pt, rank, 4);
+            assert!(e >= b, "rank {rank}: eager accounting lost bytes ({e} < {b})");
+        }
+        // Some rank must actually pin an error buffer across a gap.
+        assert!(
+            (0..3).any(|r| eager.peak_activation_bytes(&g, &pt, r, 4)
+                > blocking.peak_activation_bytes(&g, &pt, r, 4)),
+            "no in-flight error buffer was ever counted"
+        );
     }
 
     #[test]
@@ -1106,7 +1516,7 @@ mod tests {
                     .map(|&n| g.nodes[n].out_shape.iter().product::<usize>() as u64 * 4 * mb)
                     .sum();
                 assert_eq!(
-                    prog.peak_activation_bytes(&g, rank, mb as usize),
+                    prog.peak_activation_bytes(&g, &pt, rank, mb as usize),
                     per_mb * prog.peak_resident_microbatches(rank) as u64,
                     "{kind:?} rank {rank}"
                 );

@@ -31,7 +31,7 @@ pub use pipeline::{simulate_program, simulate_step, SimBreakdown};
 
 use crate::graph::ModelGraph;
 use crate::partition::Partitioning;
-use crate::schedule::ScheduleKind;
+use crate::schedule::{ScheduleKind, SendMode, SendSemantics};
 
 /// Hardware profile for one cluster flavor.
 #[derive(Clone, Debug)]
@@ -154,6 +154,15 @@ pub struct SimConfig {
     pub overlap_allreduce: bool,
     /// Pipeline schedule to compile and replay (same IR the Trainer runs).
     pub schedule: ScheduleKind,
+    /// Send ops to compile: blocking `Send*` or eager `PostSend*`/`WaitSend`
+    /// pairs (MPI_Isend/MPI_Wait).
+    pub send_mode: SendMode,
+    /// Transport the DES models. `Buffered` matches the hfmpi fabric
+    /// (sends never block; posts complete at the wire); `Rendezvous`
+    /// models synchronous MPI sends, where a blocking send parks the
+    /// sender until the facing receive arrives and an eager post's
+    /// `WaitSend` parks until the receive completes.
+    pub transport: SendSemantics,
     pub cost: CostModel,
 }
 
@@ -170,6 +179,8 @@ impl SimConfig {
             num_microbatches: 4,
             overlap_allreduce: true,
             schedule: ScheduleKind::default(),
+            send_mode: SendMode::Blocking,
+            transport: SendSemantics::Buffered,
             cost,
         }
     }

@@ -3,8 +3,12 @@
 //! Trainer executes — same instruction streams, same message linearization
 //! — as a discrete-event simulation: compute ops advance a rank's clock by
 //! the cost-model time, sends publish message-availability times over
-//! alpha-beta links (buffered, like the hfmpi fabric), receives wait for
-//! them. The per-partition gradient allreduce across replicas is applied
+//! alpha-beta links, receives wait for them. The transport is selectable
+//! ([`SimConfig::transport`]): `Buffered` matches the hfmpi fabric (sends
+//! never block), `Rendezvous` models synchronous MPI sends where a
+//! transfer starts only when both sides are ready — under which blocking
+//! 1F1B-family programs deadlock and the eager `PostSend*`/`WaitSend`
+//! programs do not. The per-partition gradient allreduce across replicas is applied
 //! at the program's `AllreduceGrads` op — overlapped with other
 //! partitions' compute when `overlap_allreduce` is set (the paper's §5.3
 //! design).
@@ -17,7 +21,7 @@
 use super::SimConfig;
 use crate::graph::ModelGraph;
 use crate::partition::Partitioning;
-use crate::schedule::{Instr, Program};
+use crate::schedule::{Instr, Program, SendSemantics};
 use std::collections::HashMap;
 
 /// Where the simulated step time went.
@@ -78,12 +82,25 @@ pub fn simulate_program(
     let total_wire: f64 = edge_secs.iter().sum();
 
     // ---- event-driven replay of the per-rank instruction streams ----
-    // Sends are buffered (never block the sender); the payload becomes
-    // available to the receiver after the link time. Receives wait.
+    // Under the `Buffered` transport (the hfmpi fabric), sends never block
+    // the sender; the payload becomes available to the receiver after the
+    // link time, and `WaitSend` is trivially complete. Under `Rendezvous`
+    // (synchronous MPI sends), a transfer starts only when *both* sides
+    // are ready: a blocking send parks the sender until the facing receive
+    // arrives, an eager post returns immediately but its `WaitSend` parks
+    // until the receive completes. Receives wait in both models.
+    let rendezvous = matches!(cfg.transport, SendSemantics::Rendezvous);
+    let handle_keys: Vec<HashMap<usize, (usize, usize, u8)>> =
+        (0..p).map(|r| program.handle_keys(r)).collect();
     let mut pc = vec![0usize; p];
     let mut clock = vec![0.0f64; p];
-    // (edge, mb, class 0=act 1=err) -> availability time.
+    // (edge, mb, class 0=act 1=err) -> availability time at the receiver.
     let mut avail: HashMap<(usize, usize, u8), f64> = HashMap::new();
+    // Rendezvous handshake state: the time each side became ready, and
+    // when the receive completed (what `WaitSend` waits for).
+    let mut send_ready: HashMap<(usize, usize, u8), f64> = HashMap::new();
+    let mut recv_ready: HashMap<(usize, usize, u8), f64> = HashMap::new();
+    let mut recv_done: HashMap<(usize, usize, u8), f64> = HashMap::new();
     loop {
         let mut progressed = false;
         let mut done = true;
@@ -104,20 +121,95 @@ pub fn simulate_program(
                         clock[r] += cm.node_bwd_weight(g, node, cfg.microbatch, cores);
                     }
                     Instr::SendActivation { edge, mb, .. } => {
-                        avail.insert((edge, mb, 0), clock[r] + edge_secs[edge]);
+                        let key = (edge, mb, 0);
+                        if rendezvous {
+                            // Publish readiness; block until the facing
+                            // receive is posted, then ride the wire.
+                            if !send_ready.contains_key(&key) {
+                                send_ready.insert(key, clock[r]);
+                                progressed = true;
+                            }
+                            let Some(&rr) = recv_ready.get(&key) else { break };
+                            let end = send_ready[&key].max(rr) + edge_secs[edge];
+                            clock[r] = clock[r].max(end);
+                            avail.entry(key).or_insert(end);
+                        } else {
+                            avail.insert(key, clock[r] + edge_secs[edge]);
+                        }
                     }
                     Instr::SendError { edge, mb, .. } => {
                         // Error payloads retrace the edge in reverse; same
                         // bytes, same link class.
-                        avail.insert((edge, mb, 1), clock[r] + edge_secs[edge]);
+                        let key = (edge, mb, 1);
+                        if rendezvous {
+                            if !send_ready.contains_key(&key) {
+                                send_ready.insert(key, clock[r]);
+                                progressed = true;
+                            }
+                            let Some(&rr) = recv_ready.get(&key) else { break };
+                            let end = send_ready[&key].max(rr) + edge_secs[edge];
+                            clock[r] = clock[r].max(end);
+                            avail.entry(key).or_insert(end);
+                        } else {
+                            avail.insert(key, clock[r] + edge_secs[edge]);
+                        }
+                    }
+                    Instr::PostSendActivation { edge, mb, .. } => {
+                        // Nonblocking: publish and move on; the handshake
+                        // (if rendezvous) completes at the receive.
+                        if rendezvous {
+                            send_ready.entry((edge, mb, 0)).or_insert(clock[r]);
+                        } else {
+                            avail.insert((edge, mb, 0), clock[r] + edge_secs[edge]);
+                        }
+                    }
+                    Instr::PostSendError { edge, mb, .. } => {
+                        if rendezvous {
+                            send_ready.entry((edge, mb, 1)).or_insert(clock[r]);
+                        } else {
+                            avail.insert((edge, mb, 1), clock[r] + edge_secs[edge]);
+                        }
+                    }
+                    Instr::WaitSend { handle } => {
+                        if rendezvous {
+                            let key = handle_keys[r][&handle];
+                            let Some(&t) = recv_done.get(&key) else { break };
+                            clock[r] = clock[r].max(t);
+                        }
+                        // Buffered: the fabric took the payload at post
+                        // time; the wait is free.
                     }
                     Instr::RecvActivation { edge, mb, .. } => {
-                        let Some(&t) = avail.get(&(edge, mb, 0)) else { break };
+                        let key = (edge, mb, 0);
+                        if rendezvous {
+                            if !recv_ready.contains_key(&key) {
+                                recv_ready.insert(key, clock[r]);
+                                progressed = true;
+                            }
+                            if let Some(&sr) = send_ready.get(&key) {
+                                let end = sr.max(recv_ready[&key]) + edge_secs[edge];
+                                avail.entry(key).or_insert(end);
+                            }
+                        }
+                        let Some(&t) = avail.get(&key) else { break };
                         clock[r] = clock[r].max(t);
+                        recv_done.entry(key).or_insert(clock[r]);
                     }
                     Instr::RecvError { edge, mb, .. } => {
-                        let Some(&t) = avail.get(&(edge, mb, 1)) else { break };
+                        let key = (edge, mb, 1);
+                        if rendezvous {
+                            if !recv_ready.contains_key(&key) {
+                                recv_ready.insert(key, clock[r]);
+                                progressed = true;
+                            }
+                            if let Some(&sr) = send_ready.get(&key) {
+                                let end = sr.max(recv_ready[&key]) + edge_secs[edge];
+                                avail.entry(key).or_insert(end);
+                            }
+                        }
+                        let Some(&t) = avail.get(&key) else { break };
                         clock[r] = clock[r].max(t);
+                        recv_done.entry(key).or_insert(clock[r]);
                     }
                     Instr::DropStash { .. }
                     | Instr::AllreduceGrads
@@ -135,8 +227,11 @@ pub fn simulate_program(
         }
         assert!(
             progressed,
-            "schedule program stalled in simulation (receive without a \
-             reachable send) — the buffered-send checker should have caught this"
+            "schedule program stalled in simulation under {:?} transport — \
+             the conformance checker should have caught this (blocking-send \
+             programs deadlock on rendezvous links; compile with \
+             SendMode::Eager)",
+            cfg.transport
         );
     }
 
@@ -231,7 +326,8 @@ pub fn simulate_program(
 
 /// Compile the configured schedule and simulate one step.
 pub fn simulate_step(g: &ModelGraph, pt: &Partitioning, cfg: &SimConfig) -> SimBreakdown {
-    let program = Program::compile(g, pt, cfg.num_microbatches.max(1), cfg.schedule);
+    let program =
+        Program::compile_with(g, pt, cfg.num_microbatches.max(1), cfg.schedule, cfg.send_mode);
     simulate_program(g, pt, cfg, &program)
 }
 
@@ -363,6 +459,71 @@ mod tests {
             frac(&il),
             frac(&f1b)
         );
+    }
+
+    #[test]
+    fn eager_sends_are_free_on_the_buffered_transport() {
+        // Under the buffered fabric a post publishes at the same clock a
+        // blocking send would and the wait is free — timing results are
+        // identical, so every existing benchmark number survives the
+        // eager-send rewrite.
+        use crate::schedule::SendMode;
+        for kind in [ScheduleKind::GPipe, ScheduleKind::OneF1B, ScheduleKind::ZbH1] {
+            let (g, pt, mut cfg) = base(4, 8);
+            cfg.schedule = kind;
+            let blocking = simulate_step(&g, &pt, &cfg);
+            cfg.send_mode = SendMode::Eager;
+            let eager = simulate_step(&g, &pt, &cfg);
+            assert_eq!(
+                blocking.step_secs, eager.step_secs,
+                "{kind:?}: eager sends must not change buffered timing"
+            );
+        }
+    }
+
+    #[test]
+    fn eager_one_f1b_completes_on_a_rendezvous_link() {
+        // The tentpole: 1F1B's facing blocking sends deadlock on
+        // synchronous links, the eager rewrite does not. The DES asserts
+        // on stall, so completing at all is the property under test; the
+        // handshake can only delay transfers, never speed them up.
+        use crate::schedule::{SendMode, SendSemantics};
+        let (g, pt, mut cfg) = base(4, 8);
+        cfg.schedule = ScheduleKind::OneF1B;
+        let buffered = simulate_step(&g, &pt, &cfg);
+        cfg.send_mode = SendMode::Eager;
+        cfg.transport = SendSemantics::Rendezvous;
+        let rdv = simulate_step(&g, &pt, &cfg);
+        assert!(
+            rdv.step_secs >= buffered.step_secs,
+            "rendezvous handshakes cannot beat buffered sends: {:.6} vs {:.6}",
+            rdv.step_secs,
+            buffered.step_secs
+        );
+    }
+
+    #[test]
+    fn blocking_gpipe_completes_on_a_rendezvous_link() {
+        // GPipe's §6.3 message linearization is rendezvous-safe even with
+        // blocking sends — the forward wave never has facing sends.
+        use crate::schedule::SendSemantics;
+        let (g, pt, mut cfg) = base(4, 8);
+        cfg.schedule = ScheduleKind::GPipe;
+        cfg.transport = SendSemantics::Rendezvous;
+        let r = simulate_step(&g, &pt, &cfg);
+        assert!(r.step_secs >= r.compute_secs);
+    }
+
+    #[test]
+    #[should_panic(expected = "stalled in simulation")]
+    fn blocking_one_f1b_deadlocks_on_a_rendezvous_link() {
+        // The regression canary at the simulator layer: the pre-eager
+        // 1F1B program really does deadlock on a synchronous transport.
+        use crate::schedule::SendSemantics;
+        let (g, pt, mut cfg) = base(4, 8);
+        cfg.schedule = ScheduleKind::OneF1B;
+        cfg.transport = SendSemantics::Rendezvous;
+        simulate_step(&g, &pt, &cfg);
     }
 
     #[test]

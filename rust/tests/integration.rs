@@ -66,7 +66,7 @@ fn trainer_direct_api_single_rank() {
     let g = zoo::mlp(4, &[4], 3);
     let pt = Partitioning::auto(&g, 1).unwrap();
     World::run(1, |world| {
-        let ce = CommEngine::new(world, 1, 0, 1, usize::MAX, AllreduceAlgo::Auto);
+        let ce = CommEngine::new(world, 1, 0, 1, 0, usize::MAX, AllreduceAlgo::Auto);
         let rt = Runtime::open(artifacts()).unwrap();
         let data = SyntheticDataset::new(0, 3, &[4], 1.0);
         let cfg = EngineConfig { microbatch: 2, ..Default::default() };
@@ -86,7 +86,7 @@ fn eval_does_not_update_weights() {
     let g = zoo::mlp(4, &[4], 3);
     let pt = Partitioning::auto(&g, 1).unwrap();
     World::run(1, |world| {
-        let ce = CommEngine::new(world, 1, 0, 1, usize::MAX, AllreduceAlgo::Auto);
+        let ce = CommEngine::new(world, 1, 0, 1, 0, usize::MAX, AllreduceAlgo::Auto);
         let rt = Runtime::open(artifacts()).unwrap();
         let data = SyntheticDataset::new(0, 3, &[4], 1.0);
         let cfg = EngineConfig { microbatch: 2, ..Default::default() };

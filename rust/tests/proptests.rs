@@ -11,13 +11,17 @@
 //! 3. The auto load balancer never produces empty partitions and never
 //!    exceeds 2x the ideal bottleneck on random graphs.
 //! 4. hfmpi collectives agree with a scalar reference on random inputs.
+//! 5. Random (graph, partitioning, m) x all four generators, compiled
+//!    eager -> the program completes under BOTH buffered and rendezvous
+//!    send semantics and every PostSend is completed by exactly one
+//!    later WaitSend on the same rank.
 
 use hyparflow::api::{fit, Strategy, TrainConfig};
 use hyparflow::graph::{zoo, ModelGraph};
 use hyparflow::hfmpi::{AllreduceAlgo, World};
 use hyparflow::partition::{auto_lpp, MsgSchedule, Partitioning};
 use hyparflow::rng::Rng;
-use hyparflow::schedule::{Program, ScheduleKind, SendSemantics};
+use hyparflow::schedule::{Program, ScheduleKind, SendMode, SendSemantics};
 use hyparflow::tensor::{Shape, Tensor};
 
 /// Random conv/skip graph in the ResNet family: chains of conv-bn-relu with
@@ -183,6 +187,59 @@ fn prop_interleaved_and_zb_programs_conform_on_random_topologies() {
             assert_eq!(steps, pt.edges.len() * 2 * m, "seed {seed} zb m={m}: coverage");
             prog.verify_message_pairing()
                 .unwrap_or_else(|e| panic!("seed {seed} zb m={m}: pairing: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_eager_programs_rendezvous_safe_on_random_topologies() {
+    // Property 5: the eager (MPI_Isend-style) compile of *every* generator
+    // is transport-agnostic on random skip graphs. Blocking 1F1B-family
+    // programs need buffered sends (facing send pairs); rewriting their
+    // sends into PostSend/WaitSend pairs must make the same instruction
+    // order complete under rendezvous semantics too, with unchanged
+    // (cross-rank edge, microbatch) coverage, and with every posted send
+    // retired by exactly one later WaitSend on its own rank.
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed + 11_000);
+        let g = random_skip_graph(&mut rng);
+        let n = g.num_nodes();
+        let ranks = 2 + rng.below(2); // 2..=3
+        let v = 2 + rng.below(2); // 2..=3
+        let kinds = [
+            ScheduleKind::GPipe,
+            ScheduleKind::OneF1B,
+            ScheduleKind::Interleaved1F1B { v },
+            ScheduleKind::ZbH1,
+        ];
+        for kind in kinds {
+            let parts = if matches!(kind, ScheduleKind::Interleaved1F1B { .. }) {
+                ranks * v
+            } else {
+                ranks
+            };
+            let lpp = random_lpp(&mut rng, n, parts);
+            let pt = Partitioning::from_lpp(&g, &lpp).unwrap();
+            let cross = pt
+                .edges
+                .iter()
+                .filter(|e| e.src_part % ranks != e.dst_part % ranks)
+                .count();
+            for m in [1usize, 3, 7] {
+                let prog = Program::compile_with(&g, &pt, m, kind, SendMode::Eager);
+                for sem in [SendSemantics::Buffered, SendSemantics::Rendezvous] {
+                    let steps = prog.check(sem).unwrap_or_else(|stuck| {
+                        panic!(
+                            "seed {seed} {kind:?} m={m} {sem:?}: stuck={stuck:?} lpp={lpp:?}"
+                        )
+                    });
+                    assert_eq!(steps, cross * 2 * m, "seed {seed} {kind:?} m={m}: coverage");
+                }
+                prog.verify_message_pairing()
+                    .unwrap_or_else(|e| panic!("seed {seed} {kind:?} m={m}: pairing: {e}"));
+                prog.verify_eager_pairing()
+                    .unwrap_or_else(|e| panic!("seed {seed} {kind:?} m={m}: post/wait: {e}"));
+            }
         }
     }
 }

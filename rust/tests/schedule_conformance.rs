@@ -1,30 +1,41 @@
 //! Schedule-conformance harness: for every [`ScheduleKind`], machine-check
 //! the compiled programs on random skip-topology graphs x microbatch
-//! counts, and the numerics end to end through the native executor.
+//! counts x **transport semantics**, and the numerics end to end through
+//! the native executor.
 //!
-//! (a) **Deadlock-freedom** — the program completes under the semantics
-//!     its generator documents: rendezvous (unbuffered synchronous) sends
-//!     for GPipe, buffered sends for the 1F1B family (what the hfmpi
-//!     fabric implements), with full `(cross-rank edge, microbatch)`
-//!     coverage.
+//! (a) **Deadlock-freedom** — blocking programs complete under the
+//!     semantics their generator documents: rendezvous (unbuffered
+//!     synchronous) sends for GPipe, buffered sends for the 1F1B family
+//!     (what the hfmpi fabric implements). *Eager* programs
+//!     (`SendMode::Eager`, MPI_Isend-style `PostSend*`/`WaitSend` pairs)
+//!     must complete under BOTH semantics for every kind — full
+//!     `(cross-rank edge, microbatch)` coverage either way. The blocking
+//!     1F1B rendezvous deadlock is pinned as a regression canary: if it
+//!     ever stops deadlocking, the generator changed.
 //! (b) **Residency** — per-rank peak stash residency never exceeds the
 //!     documented bound: `m` for GPipe, `min(P - rank, m)` for 1F1B and
-//!     ZB-H1, `min(2P, m)` for interleaved.
+//!     ZB-H1, `min(2P, m)` for interleaved. Eager programs additionally
+//!     keep in-flight send buffers within `channels x resident
+//!     microbatches` (waits sit at the end of each payload's live
+//!     interval).
 //! (c) **Pairing** — every send/recv is exactly-once, faces the right
 //!     peer, never targets its own rank, and both endpoints of each
-//!     `(edge, class)` channel see the microbatches in the same order.
+//!     `(edge, class)` channel see the microbatches in the same order;
+//!     eager programs additionally pair every post with exactly one
+//!     later wait.
 //! (d) **Numerics** — model-parallel training under each schedule is
 //!     bitwise equal (loss history and every parameter) to the sequential
-//!     run under the same schedule.
+//!     run under the same schedule, with blocking *and* eager sends (the
+//!     rewrite moves completion points, never payloads).
 //!
-//! Plus the golden-snapshot regression of the 1F1B program listing
-//! (`rust/tests/golden/one_f1b_mlp_4x8.txt`).
+//! Plus golden-snapshot regressions of the 1F1B (blocking + eager),
+//! interleaved-1F1B and ZB-H1 program listings under `rust/tests/golden/`.
 
 use hyparflow::api::{fit, FitResult, Strategy, TrainConfig};
 use hyparflow::graph::{zoo, ModelGraph};
 use hyparflow::partition::Partitioning;
 use hyparflow::rng::Rng;
-use hyparflow::schedule::{Instr, Program, ScheduleKind, SendSemantics};
+use hyparflow::schedule::{Instr, Program, ScheduleKind, SendMode, SendSemantics};
 
 fn all_kinds() -> [ScheduleKind; 4] {
     [
@@ -125,6 +136,131 @@ fn programs_complete_under_documented_semantics_on_random_topologies() {
                 prog.verify_message_pairing().unwrap_or_else(|e| {
                     panic!("seed {seed} {} m={m}: pairing: {e}", kind.label())
                 });
+            }
+        }
+    }
+}
+
+#[test]
+fn eager_programs_complete_under_both_semantics_on_random_topologies() {
+    // The tentpole property: the eager rewrite makes EVERY kind
+    // deadlock-free under rendezvous semantics (not just buffered), with
+    // the same full (edge, mb) message coverage, on random skip
+    // topologies.
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed + 13_000);
+        let g = random_skip_graph(&mut rng);
+        let n = g.num_nodes();
+        let ranks = 2 + rng.below(2); // 2..=3
+        for kind in all_kinds() {
+            let stages = ranks * kind.virtual_stages();
+            let lpp = random_lpp(&mut rng, n, stages);
+            let pt = Partitioning::from_lpp(&g, &lpp).unwrap();
+            for m in [1usize, 2, 6] {
+                let prog = Program::compile_with(&g, &pt, m, kind, SendMode::Eager);
+                assert_eq!(prog.send_mode, SendMode::Eager);
+                let want = cross_rank_edges(&pt, ranks) * 2 * m;
+                for sem in [SendSemantics::Rendezvous, SendSemantics::Buffered] {
+                    let steps = prog.check(sem).unwrap_or_else(|stuck| {
+                        panic!(
+                            "seed {seed} {} R={ranks} m={m} {sem:?}: deadlock, \
+                             stuck ranks {stuck:?}, lpp={lpp:?}",
+                            kind.label()
+                        )
+                    });
+                    assert_eq!(
+                        steps,
+                        want,
+                        "seed {seed} {} m={m} {sem:?}: (edge, mb) coverage",
+                        kind.label()
+                    );
+                }
+                prog.verify_message_pairing().unwrap();
+                prog.verify_eager_pairing().unwrap_or_else(|e| {
+                    panic!("seed {seed} {} m={m}: eager pairing: {e}", kind.label())
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn blocking_one_f1b_deadlocks_under_rendezvous_and_eager_fixes_it() {
+    // Regression canary for the documented facing-send deadlock. On a
+    // chain at m >= 2 the blocking 1F1B steady state puts two sends head
+    // to head (stage i's forward send of microbatch k+1 against stage
+    // i+1's error send of microbatch k), so the rendezvous checker must
+    // reject it — if it ever starts passing, the generator changed and
+    // the module docs are stale. The eager rewrite of the *same* program
+    // must pass with identical message coverage.
+    let g = zoo::mlp(8, &[8, 8, 8], 4);
+    for (lpp, ranks) in [(vec![2usize, 2, 2], 3usize), (vec![2, 2, 1, 1], 4)] {
+        let pt = Partitioning::from_lpp(&g, &lpp).unwrap();
+        for m in [2usize, 6] {
+            let prog = Program::compile(&g, &pt, m, ScheduleKind::OneF1B);
+            assert!(
+                prog.check(SendSemantics::Rendezvous).is_err(),
+                "P={ranks} m={m}: blocking 1F1B stopped deadlocking under \
+                 rendezvous — generator changed?"
+            );
+            let buffered = prog.check(SendSemantics::Buffered).unwrap();
+            let eager = prog.into_eager();
+            let rdv = eager.check(SendSemantics::Rendezvous).unwrap_or_else(|stuck| {
+                panic!("P={ranks} m={m}: eager 1F1B stuck ranks {stuck:?}")
+            });
+            assert_eq!(rdv, buffered, "P={ranks} m={m}: same message coverage");
+        }
+        // m=1 is warmup-only (GPipe-shaped) and rendezvous-safe even
+        // blocking — the deadlock needs a steady state to exist.
+        let prog = Program::compile(&g, &pt, 1, ScheduleKind::OneF1B);
+        assert!(prog.check(SendSemantics::Rendezvous).is_ok(), "P={ranks} m=1");
+    }
+}
+
+#[test]
+fn eager_in_flight_sends_stay_within_residency_bounds() {
+    // (b) for send buffers: waits sit before the owning microbatch's
+    // DropStash, so a rank can never hold more in-flight sends than
+    // (distinct send channels) x (resident microbatches). This is the
+    // bound that sizes the CommEngine's in-flight budget.
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(seed + 19_000);
+        let g = random_skip_graph(&mut rng);
+        let ranks = 2 + rng.below(3); // 2..=4
+        for kind in all_kinds() {
+            let stages = ranks * kind.virtual_stages();
+            let lpp = random_lpp(&mut rng, g.num_nodes(), stages);
+            let pt = Partitioning::from_lpp(&g, &lpp).unwrap();
+            for m in [1usize, 3, 9] {
+                let prog = Program::compile_with(&g, &pt, m, kind, SendMode::Eager);
+                for r in 0..ranks {
+                    let channels: std::collections::HashSet<(usize, u8)> = prog
+                        .rank(r)
+                        .iter()
+                        .filter_map(|i| match *i {
+                            Instr::PostSendActivation { edge, .. } => Some((edge, 0)),
+                            Instr::PostSendError { edge, .. } => Some((edge, 1)),
+                            _ => None,
+                        })
+                        .collect();
+                    let bound =
+                        channels.len() * prog.peak_resident_microbatches(r).max(1);
+                    let got = prog.peak_in_flight_sends(r);
+                    assert!(
+                        got <= bound,
+                        "seed {seed} {} R={ranks} m={m} rank {r}: {got} in-flight \
+                         sends exceed {} channels x residency bound {bound}",
+                        kind.label(),
+                        channels.len()
+                    );
+                }
+                // And the worldwide peak respects the tag-space pigeonhole
+                // budget the CommEngine enforces at construction.
+                assert!(
+                    prog.max_in_flight_sends() <= 2 * pt.edges.len() * m.max(1),
+                    "seed {seed} {} m={m}: tag budget",
+                    kind.label()
+                );
             }
         }
     }
@@ -240,8 +376,47 @@ fn training_is_bitwise_equal_to_sequential_resnet() {
     }
 }
 
+#[test]
+fn eager_sends_train_bitwise_equal_to_blocking_mlp() {
+    // (d) on the transport axis: the eager rewrite moves send *completion
+    // points*, never payloads or arithmetic order, so training with
+    // eager sends must be bitwise identical to blocking sends — and both
+    // to the sequential run — for every kind.
+    let seq = fit(&mlp_cfg(Strategy::Sequential)).unwrap();
+    for kind in all_kinds() {
+        let p = if kind.virtual_stages() > 1 { 3 } else { 4 };
+        let base = mlp_cfg(Strategy::Model).partitions(p).schedule(kind);
+        let blocking = fit(&base.clone().eager_sends(false)).unwrap();
+        let eager = fit(&base.eager_sends(true)).unwrap();
+        assert_eq!(
+            loss_history(&blocking),
+            loss_history(&eager),
+            "{} P={p}: eager vs blocking loss history",
+            kind.label()
+        );
+        let d = max_param_diff(&blocking, &eager);
+        assert_eq!(d, 0.0, "{} P={p}: eager vs blocking params", kind.label());
+        assert_eq!(loss_history(&seq), loss_history(&eager), "{} vs sequential", kind.label());
+    }
+}
+
+#[test]
+fn eager_sends_train_bitwise_equal_to_blocking_resnet() {
+    // Same property through conv + BN + cross-rank skip edges, where
+    // eager error posts pin real gradient payloads in flight.
+    let kind = ScheduleKind::OneF1B;
+    let base = resnet_cfg(Strategy::Model).partitions(4).schedule(kind);
+    let blocking = fit(&base.clone().eager_sends(false)).unwrap();
+    let eager = fit(&base.eager_sends(true)).unwrap();
+    assert_eq!(loss_history(&blocking), loss_history(&eager), "loss history");
+    assert_eq!(max_param_diff(&blocking, &eager), 0.0, "params");
+}
+
 // ---------------------------------------------------------------------------
-// Golden snapshot: the 1F1B program listing for a 4-rank / 8-microbatch MLP.
+// Golden snapshots: program listings for a 4-stage MLP under 1F1B
+// (blocking + eager), interleaved-1F1B and ZB-H1. Any change to a
+// generator's op order — or to the eager rewrite's Post/Wait placement —
+// shows up as a diff of these listings.
 // ---------------------------------------------------------------------------
 
 fn render_instr(i: &Instr) -> String {
@@ -254,15 +429,22 @@ fn render_instr(i: &Instr) -> String {
         Instr::RecvActivation { edge, peer, mb } => format!("RA e{edge}<-r{peer} mb{mb}"),
         Instr::SendError { edge, peer, mb } => format!("SE e{edge}->r{peer} mb{mb}"),
         Instr::RecvError { edge, peer, mb } => format!("RE e{edge}<-r{peer} mb{mb}"),
+        Instr::PostSendActivation { edge, peer, mb, handle } => {
+            format!("PSA e{edge}->r{peer} mb{mb} h{handle}")
+        }
+        Instr::PostSendError { edge, peer, mb, handle } => {
+            format!("PSE e{edge}->r{peer} mb{mb} h{handle}")
+        }
+        Instr::WaitSend { handle } => format!("WS h{handle}"),
         Instr::DropStash { mb } => format!("DROP mb{mb}"),
         Instr::AllreduceGrads => "ALLREDUCE".to_string(),
         Instr::OptStep => "OPT".to_string(),
     }
 }
 
-fn render_program(prog: &Program) -> String {
+fn render_program(prog: &Program, header: &str) -> String {
     let mut out = String::new();
-    out.push_str("# one_f1b program listing: mlp(8, [8, 8, 8], 4), lpp [2, 2, 1, 1], m=8\n");
+    out.push_str(&format!("# {header}\n"));
     out.push_str(
         "# Golden snapshot; regenerate with \
          HF_BLESS_GOLDEN=1 cargo test --test schedule_conformance\n",
@@ -276,15 +458,8 @@ fn render_program(prog: &Program) -> String {
     out
 }
 
-#[test]
-fn one_f1b_golden_program_listing() {
-    // Any change to the 1F1B generator's op order shows up as a diff of
-    // this listing — the scheduling analogue of a model-output snapshot.
-    let g = zoo::mlp(8, &[8, 8, 8], 4);
-    let pt = Partitioning::from_lpp(&g, &[2, 2, 1, 1]).unwrap();
-    let prog = Program::compile(&g, &pt, 8, ScheduleKind::OneF1B);
-    let got = render_program(&prog);
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/one_f1b_mlp_4x8.txt");
+fn golden_check(prog: &Program, header: &str, path: &str) {
+    let got = render_program(prog, header);
     if std::env::var("HF_BLESS_GOLDEN").is_ok() {
         std::fs::write(path, &got).unwrap();
         return;
@@ -293,7 +468,71 @@ fn one_f1b_golden_program_listing() {
         .unwrap_or_else(|e| panic!("missing golden file {path}: {e}"));
     assert_eq!(
         got, want,
-        "one_f1b program listing changed; if intended, bless with \
+        "program listing diverged from {path}; if intended, bless with \
          HF_BLESS_GOLDEN=1 cargo test --test schedule_conformance"
+    );
+}
+
+fn golden_mlp() -> ModelGraph {
+    zoo::mlp(8, &[8, 8, 8], 4)
+}
+
+#[test]
+fn one_f1b_golden_program_listing() {
+    let g = golden_mlp();
+    let pt = Partitioning::from_lpp(&g, &[2, 2, 1, 1]).unwrap();
+    let prog = Program::compile(&g, &pt, 8, ScheduleKind::OneF1B);
+    golden_check(
+        &prog,
+        "one_f1b program listing: mlp(8, [8, 8, 8], 4), lpp [2, 2, 1, 1], m=8",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/one_f1b_mlp_4x8.txt"),
+    );
+}
+
+#[test]
+fn eager_one_f1b_golden_program_listing() {
+    // The eager rewrite of the listing above: every SA/SE becomes a
+    // PSA/PSE with a fresh per-rank handle, and the paired WS sits
+    // immediately before the owning microbatch's DROP.
+    let g = golden_mlp();
+    let pt = Partitioning::from_lpp(&g, &[2, 2, 1, 1]).unwrap();
+    let prog = Program::compile_with(&g, &pt, 8, ScheduleKind::OneF1B, SendMode::Eager);
+    golden_check(
+        &prog,
+        "one_f1b eager program listing: mlp(8, [8, 8, 8], 4), lpp [2, 2, 1, 1], \
+         m=8, SendMode::Eager",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/eager_one_f1b_mlp_4x8.txt"),
+    );
+}
+
+#[test]
+fn interleaved_1f1b_golden_program_listing() {
+    // 2 ranks x v=2 chunks over the same 4-stage cut: rank 0 owns stages
+    // {0, 2}, rank 1 owns {1, 3}.
+    let g = golden_mlp();
+    let pt = Partitioning::from_lpp(&g, &[2, 2, 1, 1]).unwrap();
+    let prog = Program::compile(&g, &pt, 4, ScheduleKind::Interleaved1F1B { v: 2 });
+    golden_check(
+        &prog,
+        "interleaved_1f1b:v=2 program listing: mlp(8, [8, 8, 8], 4), \
+         lpp [2, 2, 1, 1], m=4",
+        concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/rust/tests/golden/interleaved_1f1b_v2_mlp_2x4.txt"
+        ),
+    );
+}
+
+#[test]
+fn zb_h1_golden_program_listing() {
+    // The split-backward schedule: BI on the critical path, each BW
+    // deferred by the rank's warmup depth into the drain bubble.
+    let g = golden_mlp();
+    let pt = Partitioning::from_lpp(&g, &[2, 2, 1, 1]).unwrap();
+    let prog = Program::compile(&g, &pt, 8, ScheduleKind::ZbH1);
+    golden_check(
+        &prog,
+        "zb_h1 program listing: mlp(8, [8, 8, 8], 4), lpp [2, 2, 1, 1], m=8",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/zb_h1_mlp_4x8.txt"),
     );
 }
