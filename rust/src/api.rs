@@ -157,6 +157,15 @@ impl TrainConfig {
         self
     }
 
+    /// Record a per-rank hftrace of the run (schedule-IR spans, comm
+    /// sub-spans, kernel spans) into [`FitResult::trace`]. Observation
+    /// only: the trained model is bitwise identical either way.
+    /// Default: off unless `HF_TRACE=1`.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.engine.trace = on;
+        self
+    }
+
     pub fn seed(mut self, s: u64) -> Self {
         self.engine.seed = s;
         self
@@ -216,6 +225,9 @@ pub struct FitResult {
     pub wall_secs: f64,
     /// Throughput in the paper's metric.
     pub img_per_sec: f64,
+    /// Merged per-rank hftrace (world-rank order), when
+    /// [`TrainConfig::trace`] was enabled.
+    pub trace: Option<crate::trace::Trace>,
 }
 
 impl FitResult {
@@ -235,6 +247,7 @@ struct RankOutput {
     history: Vec<StepMetrics>,
     eval: Option<StepMetrics>,
     params: Vec<((NodeId, usize), Tensor)>,
+    trace: Option<crate::trace::RankTrace>,
 }
 
 /// Train. Spawns `partitions x replicas` ranks on the hfmpi fabric, each
@@ -296,6 +309,7 @@ pub fn fit(cfg: &TrainConfig) -> anyhow::Result<FitResult> {
     let mut history = vec![];
     let mut eval = None;
     let mut params = vec![];
+    let mut rank_traces = vec![];
     for (rank, out) in outputs.into_iter().enumerate() {
         let out = out.map_err(|e| anyhow::anyhow!("rank {rank}: {e}"))?;
         let partition = rank % p;
@@ -307,8 +321,18 @@ pub fn fit(cfg: &TrainConfig) -> anyhow::Result<FitResult> {
         if replica == 0 {
             params.extend(out.params);
         }
+        if let Some(tr) = out.trace {
+            rank_traces.push(tr);
+        }
     }
     params.sort_by_key(|((n, s), _)| (*n, *s));
+    let trace = if rank_traces.is_empty() {
+        None
+    } else {
+        // World::run returns outputs in rank order, so the merged trace's
+        // index i is world rank i.
+        Some(crate::trace::Trace { ranks: rank_traces })
+    };
     let total_samples = cfg.steps * cfg.engine.microbatch * cfg.engine.num_microbatches * r;
     Ok(FitResult {
         history,
@@ -316,6 +340,7 @@ pub fn fit(cfg: &TrainConfig) -> anyhow::Result<FitResult> {
         params,
         wall_secs: wall,
         img_per_sec: total_samples as f64 / wall,
+        trace,
     })
 }
 
@@ -353,6 +378,19 @@ fn run_rank(
     let names = trainer.artifact_names();
     rt.warmup(names.iter().map(|s| s.as_str()))?;
 
+    // Attach one hftrace handle per rank, after warmup so compile-time
+    // plan caching never shows up as kernel spans. All three layers share
+    // the same buffer: comm sub-spans and kernel spans nest inside the
+    // Trainer's schedule-IR spans on the timeline.
+    let tracer = if cfg.engine.trace {
+        crate::trace::Tracer::on(world.rank())
+    } else {
+        crate::trace::Tracer::off()
+    };
+    ce.attach_tracer(tracer.clone());
+    rt.attach_tracer(tracer.clone());
+    trainer.set_tracer(tracer.clone());
+
     let is_reporter = ce.partition == partitions - 1 && ce.replica_id == 0;
     let mut history = Vec::with_capacity(cfg.steps);
     for step in 0..cfg.steps {
@@ -374,7 +412,8 @@ fn run_rank(
     } else {
         None
     };
-    Ok(RankOutput { history, eval, params: trainer.export_params() })
+    let trace = tracer.take();
+    Ok(RankOutput { history, eval, params: trainer.export_params(), trace })
 }
 
 fn num_classes(g: &ModelGraph) -> usize {

@@ -16,6 +16,7 @@
 
 use crate::hfmpi::{tags, AllreduceAlgo, Comm, FusionBuffer, SendReq};
 use crate::tensor::Tensor;
+use crate::trace::{Event, EventKind, Tracer};
 use std::cell::RefCell;
 use std::collections::HashMap;
 
@@ -57,6 +58,8 @@ pub struct CommEngine {
     /// Live eager sends by (class, edge, mb) tag — each tag may carry at
     /// most one in-flight message at a time, or payloads would alias.
     in_flight: RefCell<HashMap<(u8, usize, usize), ()>>,
+    /// hftrace handle recording `comm.*` sub-spans (off by default).
+    tracer: RefCell<Tracer>,
 }
 
 impl CommEngine {
@@ -122,7 +125,14 @@ impl CommEngine {
             fusion: FusionBuffer::new(fusion_threshold, algo),
             max_in_flight,
             in_flight: RefCell::new(HashMap::new()),
+            tracer: RefCell::new(Tracer::off()),
         }
+    }
+
+    /// Attach an hftrace handle: transport-level send/recv/wait/allreduce
+    /// sub-spans will be recorded (nested inside the Trainer's IR spans).
+    pub fn attach_tracer(&self, tracer: Tracer) {
+        *self.tracer.borrow_mut() = tracer;
     }
 
     fn act_tag(edge: usize, mb: usize) -> u64 {
@@ -139,21 +149,47 @@ impl CommEngine {
     /// `mb` to partition `dst`.
     pub fn send_activation(&self, t: &Tensor, dst: usize, edge: usize, mb: usize) {
         debug_assert!((mb as u64) < MAX_MB);
+        let tr = self.tracer.borrow();
+        let span = tr.start();
         self.pipeline.send(t, dst, Self::act_tag(edge, mb));
+        let bytes = t.size_bytes() as u64;
+        tr.record(span, || {
+            Event::span(EventKind::CommSend).label("act").edge(edge).peer(dst).mb(mb).bytes(bytes)
+        });
     }
 
     pub fn recv_activation(&self, src: usize, edge: usize, mb: usize) -> Tensor {
-        self.pipeline.recv(src, Self::act_tag(edge, mb))
+        let tr = self.tracer.borrow();
+        let span = tr.start();
+        let t = self.pipeline.recv(src, Self::act_tag(edge, mb));
+        let bytes = t.size_bytes() as u64;
+        tr.record(span, || {
+            Event::span(EventKind::CommRecv).label("act").edge(edge).peer(src).mb(mb).bytes(bytes)
+        });
+        t
     }
 
     /// Backward: ship a partial error (the paper's grad-layer payload,
     /// Eq. 6) back along cross edge `edge`.
     pub fn send_error(&self, t: &Tensor, dst: usize, edge: usize, mb: usize) {
+        let tr = self.tracer.borrow();
+        let span = tr.start();
         self.pipeline.send(t, dst, Self::err_tag(edge, mb));
+        let bytes = t.size_bytes() as u64;
+        tr.record(span, || {
+            Event::span(EventKind::CommSend).label("err").edge(edge).peer(dst).mb(mb).bytes(bytes)
+        });
     }
 
     pub fn recv_error(&self, src: usize, edge: usize, mb: usize) -> Tensor {
-        self.pipeline.recv(src, Self::err_tag(edge, mb))
+        let tr = self.tracer.borrow();
+        let span = tr.start();
+        let t = self.pipeline.recv(src, Self::err_tag(edge, mb));
+        let bytes = t.size_bytes() as u64;
+        tr.record(span, || {
+            Event::span(EventKind::CommRecv).label("err").edge(edge).peer(src).mb(mb).bytes(bytes)
+        });
+        t
     }
 
     /// Eager activation send (MPI_Isend): post the transfer and return
@@ -167,8 +203,19 @@ impl CommEngine {
         mb: usize,
     ) -> SendHandle {
         debug_assert!((mb as u64) < MAX_MB);
+        let tr = self.tracer.borrow();
+        let span = tr.start();
         self.note_posted(0, edge, mb);
         let req = self.pipeline.isend(t, dst, Self::act_tag(edge, mb));
+        let bytes = t.size_bytes() as u64;
+        tr.record(span, || {
+            Event::span(EventKind::CommSend)
+                .label("post act")
+                .edge(edge)
+                .peer(dst)
+                .mb(mb)
+                .bytes(bytes)
+        });
         SendHandle { class: 0, edge, mb, _buf: None, req }
     }
 
@@ -176,8 +223,19 @@ impl CommEngine {
     /// pins it until the wait (errors have no stash home to alias).
     pub fn post_send_error(&self, t: Tensor, dst: usize, edge: usize, mb: usize) -> SendHandle {
         debug_assert!((mb as u64) < MAX_MB);
+        let tr = self.tracer.borrow();
+        let span = tr.start();
         self.note_posted(1, edge, mb);
         let req = self.pipeline.isend(&t, dst, Self::err_tag(edge, mb));
+        let bytes = t.size_bytes() as u64;
+        tr.record(span, || {
+            Event::span(EventKind::CommSend)
+                .label("post err")
+                .edge(edge)
+                .peer(dst)
+                .mb(mb)
+                .bytes(bytes)
+        });
         SendHandle { class: 1, edge, mb, _buf: Some(t), req }
     }
 
@@ -185,9 +243,19 @@ impl CommEngine {
     /// on the buffered fabric), releases the pinned payload, and retires
     /// the tag from the in-flight accounting.
     pub fn wait_send(&self, h: SendHandle) {
-        self.pipeline.wait(h.req);
-        self.in_flight.borrow_mut().remove(&(h.class, h.edge, h.mb));
-        // h._buf drops here — the send buffer is released.
+        let tr = self.tracer.borrow();
+        let span = tr.start();
+        let SendHandle { class, edge, mb, _buf, req } = h;
+        let bytes = self.pipeline.wait(req);
+        self.in_flight.borrow_mut().remove(&(class, edge, mb));
+        tr.record(span, || {
+            Event::span(EventKind::CommWait)
+                .label(if class == 0 { "act" } else { "err" })
+                .edge(edge)
+                .mb(mb)
+                .bytes(bytes)
+        });
+        // _buf drops here — the send buffer is released.
     }
 
     /// Current number of eager sends in flight on this rank.
@@ -217,7 +285,12 @@ impl CommEngine {
         if self.replica.size() == 1 {
             return Ok(0);
         }
-        self.fusion.allreduce_mean(&self.replica, grads)
+        let tr = self.tracer.borrow();
+        let span = tr.start();
+        let bytes: u64 = grads.iter().map(|t| t.size_bytes() as u64).sum();
+        let n = self.fusion.allreduce_mean(&self.replica, grads)?;
+        tr.record(span, || Event::span(EventKind::CommAllreduce).label("grads").bytes(bytes));
+        Ok(n)
     }
 
     /// Broadcast initial weights from replica 0 (paper's CE `broadcast`).
@@ -226,7 +299,11 @@ impl CommEngine {
             return;
         }
         let _ = param_id; // id kept for trace symmetry with MPI_Bcast tags
+        let tr = self.tracer.borrow();
+        let span = tr.start();
         self.replica.bcast(t, 0);
+        let bytes = t.size_bytes() as u64;
+        tr.record(span, || Event::span(EventKind::CommBcast).label("param").bytes(bytes));
     }
 
     /// Mean-reduce a metrics vector across replicas (loss/accuracy logging).
@@ -234,7 +311,12 @@ impl CommEngine {
         if self.replica.size() == 1 {
             return Ok(());
         }
-        self.replica.allreduce_mean(t)
+        let tr = self.tracer.borrow();
+        let span = tr.start();
+        let bytes = t.size_bytes() as u64;
+        self.replica.allreduce_mean(t)?;
+        tr.record(span, || Event::span(EventKind::CommAllreduce).label("metrics").bytes(bytes));
+        Ok(())
     }
 }
 

@@ -83,6 +83,12 @@ pub struct EngineConfig {
     /// transports. Default: on (`HF_EAGER_SENDS=0` disables, which is how
     /// CI exercises the blocking/buffered row of the transport matrix).
     pub eager_sends: bool,
+    /// Record an hftrace timeline of every interpreted instruction (plus
+    /// comm/kernel sub-spans) per rank. Observation-only: payloads,
+    /// ordering and arithmetic are bitwise identical either way, and the
+    /// disabled path takes no timestamps at all. Default: off
+    /// (`HF_TRACE=1` enables).
+    pub trace: bool,
 }
 
 impl Default for EngineConfig {
@@ -96,16 +102,22 @@ impl Default for EngineConfig {
             seed: 42,
             lr_schedule: None,
             eager_sends: eager_sends_from_env(),
+            trace: trace_from_env(),
         }
     }
 }
 
 /// `HF_EAGER_SENDS=0|false|off` opts the engine back into blocking sends.
+/// Unrecognized values hard-error (mirroring `ScheduleKind::parse`) instead
+/// of silently training on the default transport.
 fn eager_sends_from_env() -> bool {
-    !matches!(
-        std::env::var("HF_EAGER_SENDS").as_deref(),
-        Ok("0") | Ok("false") | Ok("off")
-    )
+    crate::util::env_flag("HF_EAGER_SENDS", true).unwrap_or_else(|e| panic!("{e:#}"))
+}
+
+/// `HF_TRACE=1|true|on` turns tracing on by default; unrecognized values
+/// hard-error just like `HF_EAGER_SENDS`.
+fn trace_from_env() -> bool {
+    crate::util::env_flag("HF_TRACE", false).unwrap_or_else(|e| panic!("{e:#}"))
 }
 
 /// Metrics of one training (or eval) step, reported by the last partition.
@@ -141,6 +153,10 @@ pub struct Trainer<'a> {
     /// Nodes this rank executes — the union of its stages' partitions
     /// (one stage for flat schedules, `v` chunks under interleaved).
     my_nodes: Vec<NodeId>,
+    /// hftrace recording handle (off unless `fit` attaches one).
+    tracer: crate::trace::Tracer,
+    /// Resident parameter bytes on this rank (tags allreduce/opt spans).
+    param_bytes: u64,
 }
 
 impl<'a> Trainer<'a> {
@@ -214,6 +230,10 @@ impl<'a> Trainer<'a> {
             ce.bcast_param(t, i);
         }
         let opt = SgdMomentum::new(cfg.lr, cfg.momentum, &param_order, &params);
+        let param_bytes: u64 = param_order
+            .iter()
+            .map(|(n, si)| params[n][*si].size_bytes() as u64)
+            .sum();
         Ok(Trainer {
             g,
             pt,
@@ -227,7 +247,16 @@ impl<'a> Trainer<'a> {
             eval_program,
             param_order,
             my_nodes,
+            tracer: crate::trace::Tracer::off(),
+            param_bytes,
         })
+    }
+
+    /// Attach an hftrace recording handle: every interpreted instruction in
+    /// subsequent `train_step` calls becomes a typed span. Strictly
+    /// observation-only.
+    pub fn set_tracer(&mut self, tracer: crate::trace::Tracer) {
+        self.tracer = tracer;
     }
 
     /// The compiled schedule program (shared shape with sim/mem consumers).
@@ -497,6 +526,7 @@ impl<'a> Trainer<'a> {
         let part = self.ce.partition;
         for i in 0..self.program.rank(part).len() {
             let instr = self.program.rank(part)[i];
+            let span = self.tracer.start();
             match instr {
                 Instr::FwdCompute { node, mb, .. } => {
                     if let Some(h) = self.exec_fwd_node(step, mb, false, node, &mut stashes[mb])? {
@@ -602,6 +632,10 @@ impl<'a> Trainer<'a> {
                     self.opt.step(&self.param_order, &mut self.params, &grads);
                 }
             }
+            let mb_size = self.cfg.microbatch;
+            self.tracer.record(span, || {
+                crate::trace::instr_event(self.g, self.pt, mb_size, &instr, self.param_bytes)
+            });
         }
         debug_assert!(
             in_flight.is_empty(),

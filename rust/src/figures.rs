@@ -18,7 +18,7 @@ use crate::mem;
 use crate::partition::Partitioning;
 use crate::rng::Rng;
 use crate::runtime::{kernels, pool};
-use crate::schedule::ScheduleKind;
+use crate::schedule::{ScheduleKind, SendMode};
 use crate::sim::{simulate, simulate_sequential, Platform, SimConfig, SimResult};
 use crate::util::{json_array, JsonObj, Table};
 
@@ -294,6 +294,13 @@ pub struct SchedPoint {
     pub bubble_frac: f64,
     pub peak_mem_bytes: u64,
     pub resident_microbatches: usize,
+    /// Total post->wait send-window time across ranks (eager transport;
+    /// 0 for a program with no `PostSend*`/`WaitSend` pairs).
+    pub window_secs: f64,
+    /// Window time overlapped with compute, absolute and as a fraction of
+    /// the window total — the "communication hidden behind compute" metric.
+    pub overlap_secs: f64,
+    pub overlap_frac: f64,
 }
 
 /// Step time, bubble and peak memory for the same `(model, P, mb, m)` under
@@ -330,6 +337,14 @@ pub fn sched_compare_data(
         // the residency column, so the row cannot mix two compilations.
         let prog = crate::schedule::Program::compile(g, &pt, num_mb, sched);
         let b = crate::sim::simulate_program(g, &pt, &cfg, &prog);
+        // Overlap comes from the traced replay of the *eager* form of the
+        // same program: post->wait windows intersected with compute (the
+        // buffered transport makes the step timing identical either way,
+        // so these columns describe the same row).
+        let eager =
+            crate::schedule::Program::compile_with(g, &pt, num_mb, sched, SendMode::Eager);
+        let (_, trace) = crate::sim::simulate_program_traced(g, &pt, &cfg, &eager);
+        let rep = crate::trace::report::TraceReport::from_trace(&trace);
         points.push(SchedPoint {
             schedule: sched.label(),
             img_per_sec: cfg.effective_batch() as f64 / b.step_secs,
@@ -338,6 +353,9 @@ pub fn sched_compare_data(
             bubble_frac: b.bubble_secs / b.step_secs.max(1e-30),
             peak_mem_bytes: b.mem_bytes,
             resident_microbatches: prog.max_peak_resident_microbatches(),
+            window_secs: rep.window_secs,
+            overlap_secs: rep.overlap_secs,
+            overlap_frac: rep.overlap_frac,
         });
     }
     points
@@ -347,6 +365,7 @@ pub fn sched_compare_data(
 pub fn sched_table(points: &[SchedPoint]) -> Table {
     let mut t = Table::new(&[
         "schedule", "img/s", "step (s)", "bubble (s)", "peak mem", "resident mb",
+        "bubble frac", "overlap frac",
     ]);
     for p in points {
         t.row(&[
@@ -356,6 +375,8 @@ pub fn sched_table(points: &[SchedPoint]) -> Table {
             format!("{:.4}", p.bubble_secs),
             crate::util::fmt_bytes(p.peak_mem_bytes),
             p.resident_microbatches.to_string(),
+            format!("{:.3}", p.bubble_frac),
+            format!("{:.3}", p.overlap_frac),
         ]);
     }
     t
@@ -389,6 +410,9 @@ pub fn sched_compare_json(
             .num("bubble_frac", p.bubble_frac)
             .int("peak_mem_bytes", p.peak_mem_bytes)
             .int("resident_microbatches", p.resident_microbatches as u64)
+            .num("window_secs", p.window_secs)
+            .num("overlap_secs", p.overlap_secs)
+            .num("overlap_frac", p.overlap_frac)
             .build()
     }));
     JsonObj::new()
@@ -748,9 +772,46 @@ mod tests {
             "\"bubble_frac\"",
             "\"peak_mem_bytes\"",
             "\"resident_microbatches\"",
+            "\"window_secs\"",
+            "\"overlap_secs\"",
+            "\"overlap_frac\"",
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
+    }
+
+    #[test]
+    fn sched_overlap_columns_come_from_eager_send_windows() {
+        // The overlap metric measures post->wait windows intersected with
+        // compute: every schedule row (traced in eager form) must report
+        // open window time and nonzero overlap on the figure scenario,
+        // while a blocking-form replay has no windows at all.
+        let g = zoo::resnet110_v1();
+        let pts = sched_compare_data(&g, &Platform::skylake48(), 4, 4, 16);
+        for p in &pts {
+            assert!(p.window_secs > 0.0, "{}: no send windows", p.schedule);
+            assert!(p.overlap_secs > 0.0, "{}: no overlap", p.schedule);
+            assert!(
+                (0.0..=1.0).contains(&p.overlap_frac),
+                "{}: overlap_frac {} out of range",
+                p.schedule,
+                p.overlap_frac
+            );
+        }
+        // Blocking replay of the same scenario: no post/wait pairs, so the
+        // report shows zero window time and a well-defined zero overlap.
+        let pt = Partitioning::auto(&g, 4).unwrap();
+        let mut cfg = SimConfig::new(Platform::skylake48(), 4, 1);
+        cfg.ppn = 4;
+        cfg.microbatch = 4;
+        cfg.num_microbatches = 16;
+        cfg.schedule = ScheduleKind::GPipe;
+        let prog = crate::schedule::Program::compile(&g, &pt, 16, ScheduleKind::GPipe);
+        let (_, trace) = crate::sim::simulate_program_traced(&g, &pt, &cfg, &prog);
+        let rep = crate::trace::report::TraceReport::from_trace(&trace);
+        assert_eq!(rep.window_secs, 0.0);
+        assert_eq!(rep.overlap_secs, 0.0);
+        assert_eq!(rep.overlap_frac, 0.0);
     }
 
     #[test]

@@ -104,6 +104,13 @@ impl Fabric {
 pub struct CommStats {
     pub sends: u64,
     pub recvs: u64,
+    /// Nonblocking sends posted ([`Comm::isend`]); each also counts in
+    /// `sends` on this buffered fabric.
+    pub isends: u64,
+    /// Nonblocking sends completed ([`Comm::wait`]). `isends == waits`
+    /// after a drained step — the pairing invariant hftrace windows and
+    /// the conformance tests check.
+    pub waits: u64,
     pub bytes_sent: u64,
     pub bytes_recv: u64,
     pub allreduces: u64,
@@ -206,11 +213,13 @@ impl Comm {
     pub fn isend(&self, t: &Tensor, dst: usize, tag: u64) -> SendReq {
         let bytes = t.size_bytes() as u64;
         self.send(t, dst, tag);
+        self.stats.borrow_mut().isends += 1;
         SendReq { bytes }
     }
 
     /// Complete a nonblocking send. Returns the payload size in bytes.
     pub fn wait(&self, req: SendReq) -> u64 {
+        self.stats.borrow_mut().waits += 1;
         req.bytes
     }
 

@@ -229,6 +229,26 @@ fn stats_count_traffic() {
 }
 
 #[test]
+fn stats_count_isend_wait_pairing() {
+    World::run(2, |c| {
+        if c.rank() == 0 {
+            let r1 = c.isend(&Tensor::full(&[10], 1.0), 1, 1);
+            let r2 = c.isend(&Tensor::full(&[5], 2.0), 1, 2);
+            assert_eq!(c.wait(r1), 40);
+            let s = c.stats();
+            assert_eq!((s.isends, s.waits), (2, 1), "one send still posted");
+            assert_eq!(s.sends, 2, "buffered isend enqueues at post time");
+            assert_eq!(c.wait(r2), 20);
+            let s = c.stats();
+            assert_eq!((s.isends, s.waits), (2, 2), "drained: posts == waits");
+        } else {
+            c.recv(0, 1);
+            c.recv(0, 2);
+        }
+    });
+}
+
+#[test]
 fn fusion_buffer_fuses_and_matches_unfused() {
     World::run(4, |c| {
         let mut a = Tensor::full(&[100], c.rank() as f32);

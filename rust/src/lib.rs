@@ -77,10 +77,23 @@
 //! - [`data`], [`mem`], [`sim`], [`figures`] — synthetic CIFAR-like
 //!   dataset, memory model, calibrated cluster simulator, and the paper's
 //!   figure/table regeneration.
+//! - [`trace`] — hftrace, the observability layer: per-rank append-only
+//!   buffers of typed spans keyed to the schedule IR (kind + rank/stage/
+//!   microbatch/bytes tags, monotonic wall clock, logical sequence
+//!   numbers). The Trainer, CommEngine and Runtime record through one
+//!   [`trace::Tracer`] handle (strictly zero-cost when disabled — no clock
+//!   reads, no allocation), and the simulator emits the *same* schema from
+//!   its DES clock, so simulated and measured timelines cross-validate.
+//!   Exports: merged multi-rank Chrome trace-event JSON
+//!   ([`trace::chrome`], pid = rank, Perfetto-loadable), an aggregate
+//!   report ([`trace::report`]: per-kind totals, measured bubble fraction,
+//!   post→wait overlap ratio), and a structural validator
+//!   ([`trace::validate`]) the conformance CI runs against real exports.
 //!
 //! Entry points: [`api::TrainConfig`] / [`api::fit`] (the `hf.fit()`
 //! equivalent — strategy, partitions, replicas, schedule), or the
-//! `hyparflow` CLI (`train`, `inspect`, `sim`, `mem`, `calibrate`).
+//! `hyparflow` CLI (`train`, `inspect`, `sim`, `mem`, `calibrate`;
+//! `train --trace out.json` / `sim --trace out.json` capture timelines).
 
 pub mod api;
 pub mod comm;
@@ -96,4 +109,5 @@ pub mod runtime;
 pub mod schedule;
 pub mod sim;
 pub mod tensor;
+pub mod trace;
 pub mod util;

@@ -55,10 +55,11 @@ fn print_usage() {
          \x20         --sched gpipe|1f1b|interleaved_1f1b[:v=N]|zb_h1\n\
          \x20         --lr F --seed S --log-every N --eval N --lpp a,b,c\n\
          \x20         --threads T (kernel worker threads; HF_NATIVE_THREADS)\n\
+         \x20         --trace OUT.json (per-rank hftrace -> Chrome JSON; HF_TRACE=1)\n\
          inspect:  --model M [--partitions P] [--emit-registry] [--mb B]\n\
          sim:      --model M --nodes N --ppn P --partitions K --replicas R\n\
          \x20         --mb B --num-mb K --sched gpipe|1f1b|interleaved_1f1b[:v=N]|zb_h1\n\
-         \x20         --platform skylake|epyc [--calib FILE]\n\
+         \x20         --platform skylake|epyc [--calib FILE] [--trace OUT.json]\n\
          \x20         [--calibrate [--calib-out FILE]]  (measure, then simulate;\n\
          \x20          a .json calib-out round-trips the full cost table)\n\
          calibrate: [--out FILE] [--mb B]\n\
@@ -126,6 +127,25 @@ fn sched_flag(f: &Flags) -> anyhow::Result<hyparflow::schedule::ScheduleKind> {
     hyparflow::schedule::ScheduleKind::parse(&f.str("sched", "gpipe"))
 }
 
+/// Parse `--trace OUT.json`. Like `--sched`, a bare `--trace` must not
+/// silently drop the export.
+fn trace_flag(f: &Flags) -> anyhow::Result<Option<String>> {
+    anyhow::ensure!(
+        !f.has("trace"),
+        "--trace requires an output path (e.g. --trace trace.json)"
+    );
+    Ok(f.kv.get("trace").cloned())
+}
+
+/// Export a finished trace: Chrome JSON to `path` plus the aggregate
+/// report on stdout.
+fn write_trace(trace: &hyparflow::trace::Trace, path: &str) -> anyhow::Result<()> {
+    std::fs::write(path, hyparflow::trace::chrome::chrome_trace_json(trace))?;
+    print!("{}", hyparflow::trace::report::TraceReport::from_trace(trace).render());
+    println!("wrote {path} (load in Perfetto or chrome://tracing)");
+    Ok(())
+}
+
 fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     let f = Flags::parse(args)?;
     let model = zoo::by_name(&f.str("model", "resnet20"))?;
@@ -141,6 +161,10 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         .seed(f.get("seed", 42)?)
         .eval_batches(f.get("eval", 0)?)
         .log_every(f.get("log-every", 1)?);
+    let trace_out = trace_flag(&f)?;
+    if trace_out.is_some() {
+        cfg = cfg.trace(true);
+    }
     if let Some(lpp) = f.kv.get("lpp") {
         let v: Vec<usize> = lpp
             .split(',')
@@ -172,6 +196,13 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
     );
     if let Some(e) = res.eval {
         println!("eval: loss={:.4} acc={:.3}", e.loss, e.accuracy);
+    }
+    if let Some(path) = trace_out {
+        let trace = res
+            .trace
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("--trace was set but no trace was recorded"))?;
+        write_trace(trace, &path)?;
     }
     Ok(())
 }
@@ -259,7 +290,7 @@ fn cmd_inspect(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
-    use hyparflow::sim::{simulate, Platform, SimConfig};
+    use hyparflow::sim::{simulate, simulate_traced, Platform, SimConfig};
     let f = Flags::parse(args)?;
     let g = zoo::by_name(&f.str("model", "resnet110"))?;
     let platform = Platform::by_name(&f.str("platform", "skylake"))?;
@@ -297,7 +328,14 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
         let text = std::fs::read_to_string(path)?;
         cfg.cost.apply_calibration(&text)?;
     }
-    let r = simulate(&g, &pt, &cfg);
+    let trace_out = trace_flag(&f)?;
+    let r = if let Some(path) = &trace_out {
+        let (r, trace) = simulate_traced(&g, &pt, &cfg);
+        write_trace(&trace, path)?;
+        r
+    } else {
+        simulate(&g, &pt, &cfg)
+    };
     println!(
         "sim {} on {} | nodes={nodes} ppn={} P={partitions} R={replicas} \
          mb={}x{} (EBS {}) sched={}",

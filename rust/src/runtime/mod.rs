@@ -53,6 +53,8 @@ pub struct Runtime {
     manifest: Manifest,
     cache: RefCell<HashMap<String, native::Plan>>,
     stats: RefCell<RuntimeStats>,
+    /// hftrace handle recording per-kernel `exec` spans (off by default).
+    tracer: RefCell<crate::trace::Tracer>,
 }
 
 impl Runtime {
@@ -72,7 +74,15 @@ impl Runtime {
             manifest,
             cache: RefCell::new(HashMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
+            tracer: RefCell::new(crate::trace::Tracer::off()),
         })
+    }
+
+    /// Attach an hftrace handle: each `exec` call records a kernel span
+    /// (artifact name + output bytes), nested inside the Trainer's compute
+    /// IR spans.
+    pub fn attach_tracer(&self, tracer: crate::trace::Tracer) {
+        *self.tracer.borrow_mut() = tracer;
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -144,7 +154,14 @@ impl Runtime {
             );
         }
         let t0 = std::time::Instant::now();
+        let tr = self.tracer.borrow();
+        let span = tr.start();
         let outs = native::execute(&plan, args);
+        let out_bytes = outs.iter().map(|t| t.size_bytes() as u64).sum::<u64>();
+        tr.record(span, || {
+            crate::trace::Event::span(crate::trace::EventKind::Exec).label(name).bytes(out_bytes)
+        });
+        drop(tr);
         anyhow::ensure!(
             outs.len() == meta.out_shapes.len(),
             "{name}: got {} outputs, manifest says {}",

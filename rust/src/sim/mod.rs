@@ -27,7 +27,9 @@ mod cost;
 mod pipeline;
 
 pub use cost::{CostModel, PRIM_DISPATCH_DEFAULT};
-pub use pipeline::{simulate_program, simulate_step, SimBreakdown};
+pub use pipeline::{
+    simulate_program, simulate_program_traced, simulate_step, simulate_step_traced, SimBreakdown,
+};
 
 use crate::graph::ModelGraph;
 use crate::partition::Partitioning;
@@ -230,6 +232,27 @@ pub fn simulate(g: &ModelGraph, pt: &Partitioning, cfg: &SimConfig) -> SimResult
         img_per_sec: cfg.effective_batch() as f64 / step,
         breakdown: b,
     }
+}
+
+/// Simulate one step and also return the DES-clock hftrace — the same
+/// event schema the instrumented engine records (`crate::trace`), so the
+/// timeline can be exported to Chrome JSON or compared against a measured
+/// run (`sim --trace out.json` / the cross-validation tests).
+pub fn simulate_traced(
+    g: &ModelGraph,
+    pt: &Partitioning,
+    cfg: &SimConfig,
+) -> (SimResult, crate::trace::Trace) {
+    let (b, trace) = simulate_step_traced(g, pt, cfg);
+    let step = b.step_secs;
+    (
+        SimResult {
+            step_secs: step,
+            img_per_sec: cfg.effective_batch() as f64 / step,
+            breakdown: b,
+        },
+        trace,
+    )
 }
 
 /// Convenience: simulate the sequential baseline (1 rank, all cores,

@@ -22,6 +22,7 @@ use super::SimConfig;
 use crate::graph::ModelGraph;
 use crate::partition::Partitioning;
 use crate::schedule::{Instr, Program, SendSemantics};
+use crate::trace::{RankTrace, Trace};
 use std::collections::HashMap;
 
 /// Where the simulated step time went.
@@ -48,6 +49,32 @@ pub fn simulate_program(
     pt: &Partitioning,
     cfg: &SimConfig,
     program: &Program,
+) -> SimBreakdown {
+    sim_impl(g, pt, cfg, program, None)
+}
+
+/// Like [`simulate_program`], but also emits an hftrace timeline from the
+/// DES clock — the same event schema the instrumented engine records
+/// (built by `crate::trace::instr_event` on both sides), so simulated and
+/// measured traces feed the same exporters and reports.
+pub fn simulate_program_traced(
+    g: &ModelGraph,
+    pt: &Partitioning,
+    cfg: &SimConfig,
+    program: &Program,
+) -> (SimBreakdown, Trace) {
+    let mut trace =
+        Trace { ranks: (0..program.num_partitions).map(RankTrace::new).collect() };
+    let b = sim_impl(g, pt, cfg, program, Some(&mut trace));
+    (b, trace)
+}
+
+fn sim_impl(
+    g: &ModelGraph,
+    pt: &Partitioning,
+    cfg: &SimConfig,
+    program: &Program,
+    mut trace: Option<&mut Trace>,
 ) -> SimBreakdown {
     // Ranks (processes), not stages: under interleaved schedules the
     // partitioning is stage-level (`program.num_stages` chunks) while the
@@ -81,6 +108,39 @@ pub fn simulate_program(
         .collect();
     let total_wire: f64 = edge_secs.iter().sum();
 
+    // ---- gradient allreduce across replicas ----
+    // One communicator per partition (paper §5.3); inter-node when a
+    // partition's replicas span nodes. Computed up front so the DES can
+    // stamp `AllreduceGrads` trace spans with their modeled duration.
+    let mut ar = vec![0.0f64; p];
+    if cfg.replicas > 1 {
+        for i in 0..p {
+            let inter = (0..cfg.replicas)
+                .map(|r| cfg.node_of(r, i))
+                .collect::<std::collections::BTreeSet<_>>()
+                .len()
+                > 1;
+            // A rank allreduces the parameters of all its stages.
+            let bytes: f64 = program
+                .stages_of(i)
+                .iter()
+                .map(|&s| (pt.params_of(g, s) * 4) as f64)
+                .sum();
+            ar[i] = cfg.platform.allreduce(bytes, cfg.replicas, inter);
+        }
+    }
+    // Resident parameter bytes per rank (tags allreduce/opt trace spans;
+    // same quantity the engine computes from its parameter tensors).
+    let rank_param_bytes: Vec<u64> = (0..p)
+        .map(|r| {
+            program
+                .stages_of(r)
+                .iter()
+                .map(|&s| (pt.params_of(g, s) * 4) as u64)
+                .sum()
+        })
+        .collect();
+
     // ---- event-driven replay of the per-rank instruction streams ----
     // Under the `Buffered` transport (the hfmpi fabric), sends never block
     // the sender; the payload becomes available to the receiver after the
@@ -107,7 +167,12 @@ pub fn simulate_program(
         for r in 0..p {
             let prog = program.rank(r);
             while pc[r] < prog.len() {
-                match prog[pc[r]] {
+                let instr = prog[pc[r]];
+                // Blocked ops `break` without advancing the clock, so on
+                // the attempt that finally succeeds this is still the time
+                // the rank first reached the instruction — the span start.
+                let t_in = clock[r];
+                match instr {
                     Instr::FwdCompute { node, .. } => {
                         clock[r] += cm.node_fwd(g, node, cfg.microbatch, cores);
                     }
@@ -215,6 +280,20 @@ pub fn simulate_program(
                     | Instr::AllreduceGrads
                     | Instr::OptStep => {}
                 }
+                if let Some(tr) = trace.as_deref_mut() {
+                    let pbytes = rank_param_bytes[r];
+                    let mut ev = crate::trace::instr_event(g, pt, cfg.microbatch, &instr, pbytes);
+                    ev.t0 = t_in;
+                    // The per-rank allreduce runs off the DES clock (it only
+                    // shifts the final step time), so its span gets the
+                    // modeled duration without advancing `clock`.
+                    ev.t1 = if matches!(instr, Instr::AllreduceGrads) {
+                        t_in + ar[r]
+                    } else {
+                        clock[r]
+                    };
+                    tr.ranks[r].push(ev);
+                }
                 pc[r] += 1;
                 progressed = true;
             }
@@ -233,27 +312,6 @@ pub fn simulate_program(
              SendMode::Eager)",
             cfg.transport
         );
-    }
-
-    // ---- gradient allreduce across replicas ----
-    // One communicator per partition (paper §5.3); inter-node when a
-    // partition's replicas span nodes.
-    let mut ar = vec![0.0f64; p];
-    if cfg.replicas > 1 {
-        for i in 0..p {
-            let inter = (0..cfg.replicas)
-                .map(|r| cfg.node_of(r, i))
-                .collect::<std::collections::BTreeSet<_>>()
-                .len()
-                > 1;
-            // A rank allreduces the parameters of all its stages.
-            let bytes: f64 = program
-                .stages_of(i)
-                .iter()
-                .map(|&s| (pt.params_of(g, s) * 4) as f64)
-                .sum();
-            ar[i] = cfg.platform.allreduce(bytes, cfg.replicas, inter);
-        }
     }
 
     let step = if cfg.overlap_allreduce {
@@ -329,6 +387,18 @@ pub fn simulate_step(g: &ModelGraph, pt: &Partitioning, cfg: &SimConfig) -> SimB
     let program =
         Program::compile_with(g, pt, cfg.num_microbatches.max(1), cfg.schedule, cfg.send_mode);
     simulate_program(g, pt, cfg, &program)
+}
+
+/// Compile the configured schedule and simulate one step, returning the
+/// DES-clock hftrace alongside the breakdown.
+pub fn simulate_step_traced(
+    g: &ModelGraph,
+    pt: &Partitioning,
+    cfg: &SimConfig,
+) -> (SimBreakdown, Trace) {
+    let program =
+        Program::compile_with(g, pt, cfg.num_microbatches.max(1), cfg.schedule, cfg.send_mode);
+    simulate_program_traced(g, pt, cfg, &program)
 }
 
 #[cfg(test)]
@@ -524,6 +594,30 @@ mod tests {
         cfg.schedule = ScheduleKind::OneF1B;
         cfg.transport = SendSemantics::Rendezvous;
         simulate_step(&g, &pt, &cfg);
+    }
+
+    #[test]
+    fn traced_simulation_matches_untraced_and_covers_every_instr() {
+        use crate::schedule::SendMode;
+        let (g, pt, mut cfg) = base(4, 8);
+        cfg.schedule = ScheduleKind::OneF1B;
+        cfg.send_mode = SendMode::Eager;
+        let plain = simulate_step(&g, &pt, &cfg);
+        let (traced, tr) = simulate_step_traced(&g, &pt, &cfg);
+        assert_eq!(plain.step_secs, traced.step_secs, "tracing is observation-only");
+        // Every instruction of every rank became exactly one span, in
+        // program order with a consistent DES clock.
+        let program = Program::compile_with(&g, &pt, 8, cfg.schedule, cfg.send_mode);
+        assert_eq!(tr.ranks.len(), 4);
+        for (r, rank) in tr.ranks.iter().enumerate() {
+            assert_eq!(rank.events.len(), program.rank(r).len());
+            for w in rank.events.windows(2) {
+                assert!(w[1].t0 >= w[0].t0, "rank {r}: span starts out of order");
+            }
+            for ev in &rank.events {
+                assert!(ev.t1 >= ev.t0);
+            }
+        }
     }
 
     #[test]

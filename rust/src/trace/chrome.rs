@@ -1,0 +1,240 @@
+//! Chrome trace-event JSON export (Perfetto / `chrome://tracing`).
+//!
+//! One process per rank (`pid` = world rank, `tid` = 0). Closed spans become
+//! `B`/`E` duration-event pairs; eager post→wait send windows become async
+//! `b`/`e` pairs (category `send-window`, globally unique ids) so the overlap
+//! of in-flight sends with compute is visible as a separate track.
+//!
+//! Timestamps are microseconds relative to the earliest event in the trace,
+//! emitted as raw floats — fractional microseconds are legal in the format
+//! and keep distinct events from colliding on a tick.
+
+use super::{Event, EventKind, RankTrace, Trace};
+use crate::util::{json_array, json_num, JsonObj};
+use std::collections::HashMap;
+
+/// Serialize `trace` as a Chrome trace-event JSON document.
+pub fn chrome_trace_json(trace: &Trace) -> String {
+    let t_base = trace
+        .ranks
+        .iter()
+        .flat_map(|r| r.events.iter())
+        .map(|e| e.t0)
+        .fold(f64::INFINITY, f64::min);
+    let t_base = if t_base.is_finite() { t_base } else { 0.0 };
+
+    let mut out: Vec<String> = Vec::with_capacity(trace.num_events() * 2 + trace.ranks.len());
+    let mut next_window_id: u64 = 0;
+    for rank in &trace.ranks {
+        out.push(
+            JsonObj::new()
+                .str("name", "process_name")
+                .str("ph", "M")
+                .int("pid", rank.rank as u64)
+                .int("tid", 0)
+                .raw(
+                    "args",
+                    &JsonObj::new().str("name", &format!("rank {}", rank.rank)).build(),
+                )
+                .build(),
+        );
+        let mut events: Vec<(f64, String)> = sync_events(rank, t_base);
+        events.extend(window_events(rank, t_base, &mut next_window_id));
+        // Stable: keeps B-before-E (and b-before-e) at equal timestamps.
+        events.sort_by(|a, b| a.0.total_cmp(&b.0));
+        out.extend(events.into_iter().map(|(_, j)| j));
+    }
+    JsonObj::new()
+        .raw("traceEvents", &json_array(out))
+        .str("displayTimeUnit", "ms")
+        .build()
+}
+
+fn us(t: f64, t_base: f64) -> f64 {
+    (t - t_base) * 1e6
+}
+
+fn begin_event(rank: usize, ev: &Event, t_base: f64) -> (f64, String) {
+    let ts = us(ev.t0, t_base);
+    let mut args = JsonObj::new().int("seq", ev.seq);
+    if let Some(n) = ev.node {
+        args = args.int("node", n as u64);
+    }
+    if let Some(s) = ev.stage {
+        args = args.int("stage", s as u64);
+    }
+    if let Some(m) = ev.mb {
+        args = args.int("mb", m as u64);
+    }
+    if let Some(e) = ev.edge {
+        args = args.int("edge", e as u64);
+    }
+    if let Some(p) = ev.peer {
+        args = args.int("peer", p as u64);
+    }
+    if let Some(h) = ev.handle {
+        args = args.int("handle", h as u64);
+    }
+    if let Some(b) = ev.bytes {
+        args = args.int("bytes", b);
+    }
+    if let Some(l) = &ev.label {
+        args = args.str("label", l);
+    }
+    let json = JsonObj::new()
+        .str("name", ev.kind.name())
+        .str("cat", ev.kind.category())
+        .str("ph", "B")
+        .int("pid", rank as u64)
+        .int("tid", 0)
+        .raw("ts", &json_num(ts))
+        .raw("args", &args.build())
+        .build();
+    (ts, json)
+}
+
+fn end_event(rank: usize, ev: &Event, t_base: f64) -> (f64, String) {
+    let ts = us(ev.t1, t_base);
+    let json = JsonObj::new()
+        .str("name", ev.kind.name())
+        .str("ph", "E")
+        .int("pid", rank as u64)
+        .int("tid", 0)
+        .raw("ts", &json_num(ts))
+        .build();
+    (ts, json)
+}
+
+/// Emit `B`/`E` pairs for one rank's closed spans. Spans from a single-rank
+/// interpreter are properly nested (children close before parents), so
+/// sorting by `(t0 asc, t1 desc, seq asc)` and popping finished spans off a
+/// stack yields a nesting-correct, timestamp-ordered stream.
+fn sync_events(rank: &RankTrace, t_base: f64) -> Vec<(f64, String)> {
+    let mut idx: Vec<usize> = (0..rank.events.len()).collect();
+    idx.sort_by(|&a, &b| {
+        let (ea, eb) = (&rank.events[a], &rank.events[b]);
+        ea.t0
+            .total_cmp(&eb.t0)
+            .then(eb.t1.total_cmp(&ea.t1))
+            .then(ea.seq.cmp(&eb.seq))
+    });
+    let mut out = Vec::with_capacity(idx.len() * 2);
+    let mut stack: Vec<usize> = Vec::new();
+    for &i in &idx {
+        let ev = &rank.events[i];
+        while let Some(&top) = stack.last() {
+            if rank.events[top].t1 <= ev.t0 {
+                out.push(end_event(rank.rank, &rank.events[top], t_base));
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        out.push(begin_event(rank.rank, ev, t_base));
+        stack.push(i);
+    }
+    while let Some(top) = stack.pop() {
+        out.push(end_event(rank.rank, &rank.events[top], t_base));
+    }
+    out
+}
+
+/// Async `b`/`e` spans for eager post→wait send windows: a window opens at
+/// the `PostSend*` IR span's start and closes at the paired `WaitSend`'s end.
+/// Handles recycle across steps, so pairing walks the buffer in logical
+/// order; each completed window gets a fresh globally-unique id.
+fn window_events(rank: &RankTrace, t_base: f64, next_id: &mut u64) -> Vec<(f64, String)> {
+    let mut open: HashMap<usize, &Event> = HashMap::new();
+    let mut out = Vec::new();
+    for ev in &rank.events {
+        match ev.kind {
+            EventKind::PostSendActivation | EventKind::PostSendError => {
+                if let Some(h) = ev.handle {
+                    open.insert(h, ev);
+                }
+            }
+            EventKind::WaitSend => {
+                let Some(post) = ev.handle.and_then(|h| open.remove(&h)) else {
+                    continue;
+                };
+                let id = *next_id;
+                *next_id += 1;
+                let half = |ph: &str, t: f64, from: &Event| {
+                    let ts = us(t, t_base);
+                    let mut obj = JsonObj::new()
+                        .str("name", "send-window")
+                        .str("cat", "send-window")
+                        .str("ph", ph)
+                        .int("id", id)
+                        .int("pid", rank.rank as u64)
+                        .int("tid", 0)
+                        .raw("ts", &json_num(ts));
+                    if ph == "b" {
+                        let mut args = JsonObj::new().int("seq", from.seq);
+                        if let Some(e) = from.edge {
+                            args = args.int("edge", e as u64);
+                        }
+                        if let Some(m) = from.mb {
+                            args = args.int("mb", m as u64);
+                        }
+                        if let Some(h) = from.handle {
+                            args = args.int("handle", h as u64);
+                        }
+                        if let Some(b) = from.bytes {
+                            args = args.int("bytes", b);
+                        }
+                        obj = obj.raw("args", &args.build());
+                    }
+                    (ts, obj.build())
+                };
+                out.push(half("b", post.t0, post));
+                out.push(half("e", ev.t1, post));
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::RankTrace;
+
+    fn ev(kind: EventKind, t0: f64, t1: f64) -> Event {
+        let mut e = Event::span(kind);
+        e.t0 = t0;
+        e.t1 = t1;
+        e
+    }
+
+    #[test]
+    fn nested_spans_emit_balanced_ordered_pairs() {
+        let mut r = RankTrace::new(0);
+        // Interpreter order: children recorded before parents.
+        r.push(ev(EventKind::Exec, 1.0, 2.0));
+        r.push(ev(EventKind::FwdCompute, 0.5, 2.5));
+        r.push(ev(EventKind::OptStep, 3.0, 4.0));
+        let json = chrome_trace_json(&Trace { ranks: vec![r] });
+        let chk = super::super::validate::validate_chrome_trace(&json).unwrap();
+        assert_eq!(chk.ranks, 1);
+        assert_eq!(chk.spans, 3);
+        assert_eq!(chk.windows, 0);
+        // fwd opens before its nested exec.
+        let fwd = json.find("\"name\":\"fwd\"").unwrap();
+        let exec = json.find("\"name\":\"exec\"").unwrap();
+        assert!(fwd < exec);
+    }
+
+    #[test]
+    fn post_wait_pairs_become_async_windows() {
+        let mut r = RankTrace::new(2);
+        r.push(ev(EventKind::PostSendActivation, 0.0, 0.1).handle(0).edge(1).mb(0).bytes(64));
+        r.push(ev(EventKind::FwdCompute, 0.1, 0.9));
+        r.push(ev(EventKind::WaitSend, 0.9, 1.0).handle(0));
+        let json = chrome_trace_json(&Trace { ranks: vec![r] });
+        let chk = super::super::validate::validate_chrome_trace(&json).unwrap();
+        assert_eq!(chk.windows, 1);
+        assert!(json.contains("\"cat\":\"send-window\""));
+    }
+}

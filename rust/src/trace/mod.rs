@@ -1,0 +1,522 @@
+//! hftrace — per-rank structured runtime tracing.
+//!
+//! A trace is a per-rank, append-only buffer of typed spans keyed to the
+//! schedule IR: every interpreted [`Instr`](crate::schedule::Instr) becomes an
+//! [`Event`] tagged with rank, microbatch, stage and bytes, carrying monotonic
+//! wall-clock timestamps *plus* a timing-independent logical sequence number
+//! (the push index). Finer spans nest inside the IR spans: the communication
+//! engine records `comm.*` sub-spans (send/recv/wait/allreduce/bcast) and the
+//! runtime records `exec` kernel spans, all through the same [`Tracer`] handle.
+//!
+//! The simulator emits the **same schema** from its DES clock
+//! ([`crate::sim::simulate_program_traced`]), which is what makes simulated
+//! and measured timelines directly comparable — both sides build events with
+//! [`instr_event`], so kinds, tags and byte counts match field-for-field and
+//! only the clocks differ.
+//!
+//! Consumers:
+//! - [`chrome`] — merged multi-rank Chrome trace-event JSON (pid = world
+//!   rank), loadable in Perfetto / `chrome://tracing`. Post→wait send windows
+//!   become async spans.
+//! - [`report`] — aggregate per-kind totals, measured bubble fraction, and
+//!   the overlap ratio (post→wait window time overlapped with compute).
+//! - [`validate`] — structural checker for exported Chrome JSON (used by the
+//!   conformance tests and CI).
+//!
+//! Tracing is strictly observation-only and zero-cost when disabled: a
+//! disabled [`Tracer`] never reads the clock and never allocates
+//! ([`Tracer::start`] returns `None` and [`Tracer::record`] drops the closure
+//! unevaluated), and no payload, ordering or arithmetic depends on it.
+
+pub mod chrome;
+pub mod report;
+pub mod validate;
+
+use crate::graph::ModelGraph;
+use crate::partition::Partitioning;
+use crate::schedule::Instr;
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// What a span measures. IR kinds mirror [`Instr`]; `Comm*` and `Exec` are
+/// finer-grained spans nested inside them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    FwdCompute,
+    BwdCompute,
+    BwdInput,
+    BwdWeight,
+    SendActivation,
+    RecvActivation,
+    SendError,
+    RecvError,
+    PostSendActivation,
+    PostSendError,
+    WaitSend,
+    DropStash,
+    AllreduceGrads,
+    OptStep,
+    /// Blocking transport send inside a send/post-send IR span.
+    CommSend,
+    /// Blocking transport recv inside a recv IR span.
+    CommRecv,
+    /// Completion of a posted send inside a `WaitSend` IR span.
+    CommWait,
+    /// Fused allreduce (gradients or metrics). Only emitted with >1 replica.
+    CommAllreduce,
+    /// Parameter broadcast. Only emitted with >1 replica.
+    CommBcast,
+    /// One native kernel execution (artifact name in `label`).
+    Exec,
+}
+
+impl EventKind {
+    /// Stable lowercase name used in exports and golden listings.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::FwdCompute => "fwd",
+            EventKind::BwdCompute => "bwd",
+            EventKind::BwdInput => "bwd_input",
+            EventKind::BwdWeight => "bwd_weight",
+            EventKind::SendActivation => "send_act",
+            EventKind::RecvActivation => "recv_act",
+            EventKind::SendError => "send_err",
+            EventKind::RecvError => "recv_err",
+            EventKind::PostSendActivation => "post_send_act",
+            EventKind::PostSendError => "post_send_err",
+            EventKind::WaitSend => "wait_send",
+            EventKind::DropStash => "drop_stash",
+            EventKind::AllreduceGrads => "allreduce_grads",
+            EventKind::OptStep => "opt_step",
+            EventKind::CommSend => "comm.send",
+            EventKind::CommRecv => "comm.recv",
+            EventKind::CommWait => "comm.wait",
+            EventKind::CommAllreduce => "comm.allreduce",
+            EventKind::CommBcast => "comm.bcast",
+            EventKind::Exec => "exec",
+        }
+    }
+
+    /// IR compute spans. `Exec` spans nest *inside* these, so they are
+    /// excluded here to avoid double-counting compute time.
+    pub fn is_compute(self) -> bool {
+        matches!(
+            self,
+            EventKind::FwdCompute
+                | EventKind::BwdCompute
+                | EventKind::BwdInput
+                | EventKind::BwdWeight
+        )
+    }
+
+    /// Chrome trace category.
+    pub fn category(self) -> &'static str {
+        match self {
+            k if k.is_compute() => "compute",
+            EventKind::CommSend
+            | EventKind::CommRecv
+            | EventKind::CommWait
+            | EventKind::CommAllreduce
+            | EventKind::CommBcast => "comm",
+            EventKind::Exec => "runtime",
+            _ => "schedule",
+        }
+    }
+}
+
+/// One closed span on one rank's timeline. `t0`/`t1` are seconds since the
+/// process-global trace epoch; `seq` is the logical (timing-independent)
+/// position in the rank's buffer.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub kind: EventKind,
+    pub seq: u64,
+    pub t0: f64,
+    pub t1: f64,
+    pub node: Option<usize>,
+    pub stage: Option<usize>,
+    pub mb: Option<usize>,
+    pub edge: Option<usize>,
+    pub peer: Option<usize>,
+    pub handle: Option<usize>,
+    pub bytes: Option<u64>,
+    pub label: Option<String>,
+}
+
+impl Event {
+    /// A bare span of `kind`; tags are attached with the builder methods and
+    /// timestamps are filled in by [`Tracer::record`] (or the simulator).
+    pub fn span(kind: EventKind) -> Event {
+        Event {
+            kind,
+            seq: 0,
+            t0: 0.0,
+            t1: 0.0,
+            node: None,
+            stage: None,
+            mb: None,
+            edge: None,
+            peer: None,
+            handle: None,
+            bytes: None,
+            label: None,
+        }
+    }
+
+    pub fn node(mut self, n: usize) -> Self {
+        self.node = Some(n);
+        self
+    }
+    pub fn stage(mut self, s: usize) -> Self {
+        self.stage = Some(s);
+        self
+    }
+    pub fn mb(mut self, m: usize) -> Self {
+        self.mb = Some(m);
+        self
+    }
+    pub fn edge(mut self, e: usize) -> Self {
+        self.edge = Some(e);
+        self
+    }
+    pub fn peer(mut self, p: usize) -> Self {
+        self.peer = Some(p);
+        self
+    }
+    pub fn handle(mut self, h: usize) -> Self {
+        self.handle = Some(h);
+        self
+    }
+    pub fn bytes(mut self, b: u64) -> Self {
+        self.bytes = Some(b);
+        self
+    }
+    pub fn label(mut self, l: &str) -> Self {
+        self.label = Some(l.to_string());
+        self
+    }
+
+    /// Timestamp-free rendering for golden listings: kind plus tags in a
+    /// fixed order, mirroring the schedule IR's program notation.
+    pub fn logical_label(&self) -> String {
+        let mut s = self.kind.name().to_string();
+        if let Some(l) = &self.label {
+            s.push_str(&format!(" [{l}]"));
+        }
+        if let Some(n) = self.node {
+            s.push_str(&format!(" n{n}"));
+        }
+        if let Some(st) = self.stage {
+            s.push_str(&format!(" s{st}"));
+        }
+        if let Some(e) = self.edge {
+            s.push_str(&format!(" e{e}"));
+        }
+        if let Some(p) = self.peer {
+            s.push_str(&format!(" r{p}"));
+        }
+        if let Some(m) = self.mb {
+            s.push_str(&format!(" mb{m}"));
+        }
+        if let Some(h) = self.handle {
+            s.push_str(&format!(" h{h}"));
+        }
+        if let Some(b) = self.bytes {
+            s.push_str(&format!(" {b}B"));
+        }
+        s
+    }
+}
+
+/// One rank's append-only event buffer.
+#[derive(Clone, Debug, Default)]
+pub struct RankTrace {
+    pub rank: usize,
+    pub events: Vec<Event>,
+}
+
+impl RankTrace {
+    pub fn new(rank: usize) -> RankTrace {
+        RankTrace { rank, events: Vec::new() }
+    }
+
+    /// Append `ev`, assigning the next logical sequence number.
+    pub fn push(&mut self, mut ev: Event) {
+        ev.seq = self.events.len() as u64;
+        self.events.push(ev);
+    }
+}
+
+/// A merged multi-rank trace (ranks in world-rank order).
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub ranks: Vec<RankTrace>,
+}
+
+impl Trace {
+    pub fn num_events(&self) -> usize {
+        self.ranks.iter().map(|r| r.events.len()).sum()
+    }
+
+    /// Timestamp-free listing of every rank's logical event sequence — the
+    /// deterministic view blessed by the golden trace test.
+    pub fn logical_listing(&self) -> String {
+        let mut out = String::new();
+        for r in &self.ranks {
+            out.push_str(&format!("rank {}\n", r.rank));
+            for ev in &r.events {
+                out.push_str("  ");
+                out.push_str(&ev.logical_label());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Split a multi-step trace into per-step traces at `OptStep`
+    /// boundaries (each slice ends with its rank's `OptStep` event).
+    pub fn split_steps(&self) -> Vec<Trace> {
+        let steps = self
+            .ranks
+            .iter()
+            .map(|r| r.events.iter().filter(|e| e.kind == EventKind::OptStep).count())
+            .min()
+            .unwrap_or(0);
+        let mut out: Vec<Trace> = (0..steps)
+            .map(|_| Trace {
+                ranks: self.ranks.iter().map(|r| RankTrace::new(r.rank)).collect(),
+            })
+            .collect();
+        for (ri, r) in self.ranks.iter().enumerate() {
+            let mut k = 0;
+            for ev in &r.events {
+                if k < steps {
+                    out[k].ranks[ri].events.push(ev.clone());
+                }
+                if ev.kind == EventKind::OptStep {
+                    k += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// All rank threads live in one process, so one monotonic epoch serves every
+/// rank; timestamps from different ranks are directly comparable.
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn now() -> f64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Cheap cloneable recording handle. Disabled (`Tracer::off`) it is a `None`
+/// and costs nothing: no clock reads, no allocation, the event-building
+/// closure passed to [`Tracer::record`] is never evaluated.
+///
+/// Deliberately `!Send` (per-rank, like the `Runtime`); the finished
+/// [`RankTrace`] extracted by [`Tracer::take`] is plain data and crosses
+/// thread boundaries freely.
+#[derive(Clone, Default)]
+pub struct Tracer(Option<Rc<RefCell<RankTrace>>>);
+
+impl Tracer {
+    /// A disabled tracer.
+    pub fn off() -> Tracer {
+        Tracer(None)
+    }
+
+    /// An enabled tracer recording into a fresh buffer for `rank`.
+    pub fn on(rank: usize) -> Tracer {
+        EPOCH.get_or_init(Instant::now);
+        Tracer(Some(Rc::new(RefCell::new(RankTrace::new(rank)))))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Open a span: returns the start timestamp, or `None` (without touching
+    /// the clock) when disabled.
+    #[inline]
+    pub fn start(&self) -> Option<f64> {
+        self.0.as_ref().map(|_| now())
+    }
+
+    /// Close a span opened by [`start`](Tracer::start). `build` supplies the
+    /// kind/tags; it is only evaluated when tracing is enabled.
+    #[inline]
+    pub fn record(&self, t0: Option<f64>, build: impl FnOnce() -> Event) {
+        if let (Some(buf), Some(t0)) = (self.0.as_ref(), t0) {
+            let t1 = now();
+            let mut ev = build();
+            ev.t0 = t0;
+            ev.t1 = t1;
+            buf.borrow_mut().push(ev);
+        }
+    }
+
+    /// Extract the recorded buffer, leaving an empty one behind (other
+    /// clones of this tracer stay valid but start from empty).
+    pub fn take(&self) -> Option<RankTrace> {
+        self.0.as_ref().map(|buf| {
+            let rank = buf.borrow().rank;
+            std::mem::replace(&mut *buf.borrow_mut(), RankTrace::new(rank))
+        })
+    }
+}
+
+/// Payload bytes of one microbatch crossing `edge` (f32 activations).
+/// Matches both the simulator's wire model and the engine's
+/// `Tensor::size_bytes` for the same transfer.
+pub fn edge_bytes(g: &ModelGraph, pt: &Partitioning, edge: usize, microbatch: usize) -> u64 {
+    let e = &pt.edges[edge];
+    g.nodes[e.src_node].out_shape.iter().product::<usize>() as u64 * 4 * microbatch as u64
+}
+
+fn node_out_bytes(g: &ModelGraph, node: usize, microbatch: usize) -> u64 {
+    g.nodes[node].out_shape.iter().product::<usize>() as u64 * 4 * microbatch as u64
+}
+
+/// Build the schema event for one schedule-IR instruction. Both the engine
+/// (wall clock) and the simulator (DES clock) go through this constructor,
+/// which is what keeps measured and simulated traces field-compatible.
+/// `param_bytes` is the rank's resident parameter footprint (tagged onto
+/// `AllreduceGrads`/`OptStep`).
+pub fn instr_event(
+    g: &ModelGraph,
+    pt: &Partitioning,
+    microbatch: usize,
+    instr: &Instr,
+    param_bytes: u64,
+) -> Event {
+    use EventKind as K;
+    match *instr {
+        Instr::FwdCompute { node, stage, mb } => Event::span(K::FwdCompute)
+            .node(node)
+            .stage(stage)
+            .mb(mb)
+            .bytes(node_out_bytes(g, node, microbatch)),
+        Instr::BwdCompute { node, stage, mb } => Event::span(K::BwdCompute)
+            .node(node)
+            .stage(stage)
+            .mb(mb)
+            .bytes(node_out_bytes(g, node, microbatch)),
+        Instr::BwdInput { node, stage, mb } => Event::span(K::BwdInput)
+            .node(node)
+            .stage(stage)
+            .mb(mb)
+            .bytes(node_out_bytes(g, node, microbatch)),
+        Instr::BwdWeight { node, stage, mb } => Event::span(K::BwdWeight)
+            .node(node)
+            .stage(stage)
+            .mb(mb)
+            .bytes(node_out_bytes(g, node, microbatch)),
+        Instr::SendActivation { edge, peer, mb } => Event::span(K::SendActivation)
+            .edge(edge)
+            .peer(peer)
+            .mb(mb)
+            .bytes(edge_bytes(g, pt, edge, microbatch)),
+        Instr::RecvActivation { edge, peer, mb } => Event::span(K::RecvActivation)
+            .edge(edge)
+            .peer(peer)
+            .mb(mb)
+            .bytes(edge_bytes(g, pt, edge, microbatch)),
+        Instr::SendError { edge, peer, mb } => Event::span(K::SendError)
+            .edge(edge)
+            .peer(peer)
+            .mb(mb)
+            .bytes(edge_bytes(g, pt, edge, microbatch)),
+        Instr::RecvError { edge, peer, mb } => Event::span(K::RecvError)
+            .edge(edge)
+            .peer(peer)
+            .mb(mb)
+            .bytes(edge_bytes(g, pt, edge, microbatch)),
+        Instr::PostSendActivation { edge, peer, mb, handle } => Event::span(K::PostSendActivation)
+            .edge(edge)
+            .peer(peer)
+            .mb(mb)
+            .handle(handle)
+            .bytes(edge_bytes(g, pt, edge, microbatch)),
+        Instr::PostSendError { edge, peer, mb, handle } => Event::span(K::PostSendError)
+            .edge(edge)
+            .peer(peer)
+            .mb(mb)
+            .handle(handle)
+            .bytes(edge_bytes(g, pt, edge, microbatch)),
+        Instr::WaitSend { handle } => Event::span(K::WaitSend).handle(handle),
+        Instr::DropStash { mb } => Event::span(K::DropStash).mb(mb),
+        Instr::AllreduceGrads => Event::span(K::AllreduceGrads).bytes(param_bytes),
+        Instr::OptStep => Event::span(K::OptStep).bytes(param_bytes),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing_and_never_builds() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        let tt = t.start();
+        assert!(tt.is_none());
+        t.record(tt, || unreachable!("closure must not run when disabled"));
+        assert!(t.take().is_none());
+    }
+
+    #[test]
+    fn enabled_tracer_assigns_monotonic_times_and_seqs() {
+        let t = Tracer::on(3);
+        for i in 0..4 {
+            let tt = t.start();
+            t.record(tt, || Event::span(EventKind::FwdCompute).node(i).mb(i));
+        }
+        let buf = t.take().unwrap();
+        assert_eq!(buf.rank, 3);
+        assert_eq!(buf.events.len(), 4);
+        for (i, ev) in buf.events.iter().enumerate() {
+            assert_eq!(ev.seq, i as u64);
+            assert!(ev.t1 >= ev.t0);
+            if i > 0 {
+                assert!(ev.t0 >= buf.events[i - 1].t0);
+            }
+        }
+        // take() left an empty buffer behind; the tracer keeps working.
+        let tt = t.start();
+        t.record(tt, || Event::span(EventKind::OptStep));
+        assert_eq!(t.take().unwrap().events.len(), 1);
+    }
+
+    #[test]
+    fn split_steps_cuts_at_opt_step() {
+        let mut r0 = RankTrace::new(0);
+        for _ in 0..2 {
+            r0.push(Event::span(EventKind::FwdCompute).mb(0));
+            r0.push(Event::span(EventKind::AllreduceGrads));
+            r0.push(Event::span(EventKind::OptStep));
+        }
+        let tr = Trace { ranks: vec![r0] };
+        let steps = tr.split_steps();
+        assert_eq!(steps.len(), 2);
+        for s in &steps {
+            assert_eq!(s.ranks[0].events.len(), 3);
+            assert_eq!(s.ranks[0].events.last().unwrap().kind, EventKind::OptStep);
+        }
+    }
+
+    #[test]
+    fn logical_label_is_timestamp_free_and_tagged() {
+        let mut ev = Event::span(EventKind::PostSendActivation)
+            .edge(2)
+            .peer(1)
+            .mb(3)
+            .handle(7)
+            .bytes(128);
+        ev.t0 = 1.25;
+        ev.t1 = 2.5;
+        assert_eq!(ev.logical_label(), "post_send_act e2 r1 mb3 h7 128B");
+    }
+}

@@ -1,0 +1,398 @@
+//! Structural validator for exported Chrome trace-event JSON.
+//!
+//! Checks what the conformance tests and CI rely on: the document is
+//! well-formed JSON with a `traceEvents` array, per-rank (pid) timestamps
+//! are monotonically nondecreasing, `B`/`E` duration spans are properly
+//! nested (LIFO with matching names), and async `b`/`e` send-window pairs
+//! close exactly once. The offline build has no serde, so this carries its
+//! own minimal recursive-descent JSON parser.
+
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+
+/// Minimal JSON value (parse-side twin of the emitter in `util.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document (full standard grammar; enough for our exports).
+pub fn parse_json(s: &str) -> Result<Json> {
+    let mut p = Parser { b: s.as_bytes(), pos: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    ensure!(p.pos == p.b.len(), "trailing garbage at byte {}", p.pos);
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.pos < self.b.len() && self.b[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON at byte {}", self.pos))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        ensure!(self.peek()? == c, "expected {:?} at byte {}", c as char, self.pos);
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        ensure!(
+            self.b[self.pos..].starts_with(s.as_bytes()),
+            "bad literal at byte {}",
+            self.pos
+        );
+        self.pos += s.len();
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'n' => self.lit("null", Json::Null),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b'[' => self.array(),
+            b'{' => self.object(),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected {:?} at byte {}", c as char, self.pos),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            ensure!(self.pos + 4 <= self.b.len(), "truncated \\u escape");
+                            let hex = std::str::from_utf8(&self.b[self.pos..self.pos + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.pos += 4;
+                            // Surrogates are not emitted by our exporter;
+                            // map unpaired ones to the replacement char.
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("bad escape \\{} at byte {}", e as char, self.pos),
+                    }
+                }
+                _ => {
+                    // Re-scan from the byte we consumed so multi-byte UTF-8
+                    // sequences stay intact.
+                    self.pos -= 1;
+                    let rest = std::str::from_utf8(&self.b[self.pos..])?;
+                    let ch = rest.chars().next().unwrap();
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while self.pos < self.b.len()
+            && matches!(self.b[self.pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.pos])?;
+        Ok(Json::Num(text.parse::<f64>()?))
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => bail!("expected ',' or ']' at byte {}, got {:?}", self.pos, c as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let v = self.value()?;
+            fields.push((k, v));
+            self.ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                c => bail!("expected ',' or '}}' at byte {}, got {:?}", self.pos, c as char),
+            }
+        }
+    }
+}
+
+/// Counts from a successful validation run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCheck {
+    /// Distinct pids (ranks) seen.
+    pub ranks: usize,
+    /// Total trace events (including metadata).
+    pub events: usize,
+    /// Completed `B`/`E` duration spans.
+    pub spans: usize,
+    /// Completed async `b`/`e` send windows.
+    pub windows: usize,
+}
+
+/// Validate a Chrome trace-event JSON document structurally.
+pub fn validate_chrome_trace(doc: &str) -> Result<TraceCheck> {
+    let root = parse_json(doc)?;
+    let Some(Json::Arr(events)) = root.get("traceEvents") else {
+        bail!("document has no traceEvents array");
+    };
+    let mut check = TraceCheck { events: events.len(), ..Default::default() };
+    let mut last_ts: HashMap<u64, f64> = HashMap::new();
+    let mut stacks: HashMap<(u64, u64), Vec<String>> = HashMap::new();
+    // (pid, cat, id) -> Some(open b ts) / None once closed.
+    let mut windows: HashMap<(u64, String, String), Option<f64>> = HashMap::new();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("event {i} has no ph"))?
+            .to_string();
+        let pid = ev
+            .get("pid")
+            .and_then(Json::as_num)
+            .ok_or_else(|| anyhow::anyhow!("event {i} has no pid"))? as u64;
+        if !last_ts.contains_key(&pid) {
+            check.ranks += 1;
+            last_ts.insert(pid, f64::NEG_INFINITY);
+        }
+        if ph == "M" {
+            continue;
+        }
+        let ts = ev
+            .get("ts")
+            .and_then(Json::as_num)
+            .ok_or_else(|| anyhow::anyhow!("event {i} (ph {ph}) has no ts"))?;
+        let prev = last_ts[&pid];
+        ensure!(
+            ts >= prev,
+            "pid {pid}: ts went backwards at event {i} ({ts} < {prev})"
+        );
+        last_ts.insert(pid, ts);
+        let name = ev.get("name").and_then(Json::as_str).unwrap_or_default().to_string();
+        let tid = ev.get("tid").and_then(Json::as_num).unwrap_or(0.0) as u64;
+        match ph.as_str() {
+            "B" => stacks.entry((pid, tid)).or_default().push(name),
+            "E" => {
+                let top = stacks.entry((pid, tid)).or_default().pop();
+                match top {
+                    Some(open) => ensure!(
+                        open == name,
+                        "pid {pid}: E {:?} at event {i} closes open span {:?}",
+                        name,
+                        open
+                    ),
+                    None => bail!("pid {pid}: E {:?} at event {i} with empty span stack", name),
+                }
+                check.spans += 1;
+            }
+            "b" | "e" => {
+                let cat = ev.get("cat").and_then(Json::as_str).unwrap_or_default().to_string();
+                let id = match ev.get("id") {
+                    Some(Json::Num(n)) => format!("{n}"),
+                    Some(Json::Str(s)) => s.clone(),
+                    _ => bail!("async event {i} has no id"),
+                };
+                let key = (pid, cat, id);
+                if ph == "b" {
+                    match windows.entry(key) {
+                        std::collections::hash_map::Entry::Occupied(e) => {
+                            bail!("async window {:?} opened twice (event {i})", e.key())
+                        }
+                        std::collections::hash_map::Entry::Vacant(v) => {
+                            v.insert(Some(ts));
+                        }
+                    }
+                } else {
+                    match windows.get_mut(&key) {
+                        Some(slot) => match slot.take() {
+                            Some(t_open) => {
+                                ensure!(
+                                    ts >= t_open,
+                                    "async window {key:?} closes before it opens"
+                                );
+                                check.windows += 1;
+                            }
+                            None => bail!("async window {key:?} closed twice (event {i})"),
+                        },
+                        None => bail!("async window {key:?} closed without opening (event {i})"),
+                    }
+                }
+            }
+            other => bail!("event {i}: unsupported ph {other:?}"),
+        }
+    }
+    for ((pid, tid), stack) in &stacks {
+        ensure!(
+            stack.is_empty(),
+            "pid {pid} tid {tid}: {} span(s) left open: {:?}",
+            stack.len(),
+            stack
+        );
+    }
+    for (key, open) in &windows {
+        ensure!(open.is_none(), "async window {key:?} never closed");
+    }
+    Ok(check)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(events: &str) -> String {
+        format!("{{\"traceEvents\":[{events}]}}")
+    }
+
+    #[test]
+    fn accepts_a_well_formed_trace() {
+        let d = doc(
+            r#"{"name":"process_name","ph":"M","pid":0,"tid":0,"args":{"name":"rank 0"}},
+               {"name":"fwd","cat":"compute","ph":"B","pid":0,"tid":0,"ts":0.5,"args":{"seq":0}},
+               {"name":"exec","cat":"runtime","ph":"B","pid":0,"tid":0,"ts":1.0},
+               {"name":"exec","ph":"E","pid":0,"tid":0,"ts":2.0},
+               {"name":"fwd","ph":"E","pid":0,"tid":0,"ts":2.5},
+               {"name":"send-window","cat":"send-window","ph":"b","id":0,"pid":0,"tid":0,"ts":3.0},
+               {"name":"send-window","cat":"send-window","ph":"e","id":0,"pid":0,"tid":0,"ts":4.0}"#,
+        );
+        let c = validate_chrome_trace(&d).unwrap();
+        assert_eq!(c, TraceCheck { ranks: 1, events: 7, spans: 2, windows: 1 });
+    }
+
+    #[test]
+    fn rejects_nonmonotonic_timestamps() {
+        let d = doc(
+            r#"{"name":"a","ph":"B","pid":0,"tid":0,"ts":5.0},
+               {"name":"a","ph":"E","pid":0,"tid":0,"ts":4.0}"#,
+        );
+        let e = validate_chrome_trace(&d).unwrap_err().to_string();
+        assert!(e.contains("ts went backwards"), "{e}");
+    }
+
+    #[test]
+    fn rejects_mismatched_span_nesting() {
+        let d = doc(
+            r#"{"name":"a","ph":"B","pid":0,"tid":0,"ts":0},
+               {"name":"b","ph":"B","pid":0,"tid":0,"ts":1},
+               {"name":"a","ph":"E","pid":0,"tid":0,"ts":2}"#,
+        );
+        assert!(validate_chrome_trace(&d).is_err());
+        let d = doc(r#"{"name":"a","ph":"E","pid":0,"tid":0,"ts":0}"#);
+        assert!(validate_chrome_trace(&d).is_err());
+    }
+
+    #[test]
+    fn rejects_unbalanced_async_windows() {
+        let open_only =
+            doc(r#"{"name":"w","cat":"sw","ph":"b","id":1,"pid":0,"tid":0,"ts":0}"#);
+        assert!(validate_chrome_trace(&open_only).is_err());
+        let double_close = doc(
+            r#"{"name":"w","cat":"sw","ph":"b","id":1,"pid":0,"tid":0,"ts":0},
+               {"name":"w","cat":"sw","ph":"e","id":1,"pid":0,"tid":0,"ts":1},
+               {"name":"w","cat":"sw","ph":"e","id":1,"pid":0,"tid":0,"ts":2}"#,
+        );
+        assert!(validate_chrome_trace(&double_close).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_json() {
+        assert!(validate_chrome_trace("{\"traceEvents\":[").is_err());
+        assert!(validate_chrome_trace("[]").is_err());
+        assert!(parse_json("{\"a\":1,}").is_err());
+        // Escapes and nesting round-trip through the mini parser.
+        let v = parse_json(r#"{"s":"a\"bA","arr":[1,-2.5e3,true,null]}"#).unwrap();
+        assert_eq!(v.get("s").and_then(Json::as_str), Some("a\"bA"));
+    }
+}

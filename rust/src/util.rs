@@ -52,6 +52,26 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (r, t0.elapsed().as_secs_f64())
 }
 
+/// Parse a boolean environment flag strictly: `1|true|on` / `0|false|off`,
+/// absent means `default`. Anything else is a hard error naming the
+/// variable and the accepted spellings — mirroring `ScheduleKind::parse`, a
+/// typo'd flag must not silently select a default behavior.
+pub fn env_flag(name: &str, default: bool) -> anyhow::Result<bool> {
+    match std::env::var(name) {
+        Err(std::env::VarError::NotPresent) => Ok(default),
+        Err(std::env::VarError::NotUnicode(v)) => {
+            anyhow::bail!("{name}={v:?} is not unicode (valid values: 1|true|on|0|false|off)")
+        }
+        Ok(v) => match v.as_str() {
+            "1" | "true" | "on" => Ok(true),
+            "0" | "false" | "off" => Ok(false),
+            other => anyhow::bail!(
+                "{name}={other:?}: unrecognized flag value (valid values: 1|true|on|0|false|off)"
+            ),
+        },
+    }
+}
+
 /// Minimal fixed-width table printer for bench output.
 pub struct Table {
     headers: Vec<String>,
@@ -239,6 +259,22 @@ mod tests {
         assert_eq!(json_num(f64::NAN), "null");
         assert_eq!(json_num(f64::INFINITY), "null");
         assert_eq!(json_num(0.25), "0.25");
+    }
+
+    #[test]
+    fn env_flag_is_strict() {
+        // Distinct variable names per assertion: tests in this binary run
+        // concurrently and the environment is process-global.
+        assert!(env_flag("HF_TEST_FLAG_UNSET", true).unwrap());
+        assert!(!env_flag("HF_TEST_FLAG_UNSET", false).unwrap());
+        std::env::set_var("HF_TEST_FLAG_ON", "on");
+        assert!(env_flag("HF_TEST_FLAG_ON", false).unwrap());
+        std::env::set_var("HF_TEST_FLAG_OFF", "0");
+        assert!(!env_flag("HF_TEST_FLAG_OFF", true).unwrap());
+        std::env::set_var("HF_TEST_FLAG_BAD", "banana");
+        let err = env_flag("HF_TEST_FLAG_BAD", true).unwrap_err().to_string();
+        assert!(err.contains("HF_TEST_FLAG_BAD") && err.contains("banana"), "{err}");
+        assert!(err.contains("1|true|on|0|false|off"), "{err}");
     }
 
     #[test]

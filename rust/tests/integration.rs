@@ -283,6 +283,53 @@ fn cli_rejects_bad_or_bare_sched_flag() {
 }
 
 #[test]
+fn cli_rejects_malformed_env_flags() {
+    // Strict env parsing: a typo'd HF_EAGER_SENDS / HF_TRACE value must
+    // hard-error naming the variable, never silently pick a default
+    // transport or tracing mode.
+    use std::process::Command;
+    let bin = env!("CARGO_BIN_EXE_hyparflow");
+    for var in ["HF_EAGER_SENDS", "HF_TRACE"] {
+        let out = Command::new(bin)
+            .args(["train", "--model", "mlp", "--steps", "1"])
+            .env(var, "banana")
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "{var}=banana must fail the run");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains(var) && err.contains("banana"), "{var}: stderr: {err}");
+        assert!(err.contains("1|true|on|0|false|off"), "{var}: stderr: {err}");
+    }
+}
+
+#[test]
+fn cli_train_trace_writes_valid_chrome_json() {
+    use std::process::Command;
+    let bin = env!("CARGO_BIN_EXE_hyparflow");
+    let path = std::env::temp_dir().join(format!("hf_trace_{}.json", std::process::id()));
+    let out = Command::new(bin)
+        .args(["train", "--model", "mlp", "--strategy", "model", "--partitions", "2"])
+        .args(["--steps", "2", "--mb", "4", "--num-mb", "4", "--sched", "1f1b"])
+        .args(["--trace", path.to_str().unwrap()])
+        .env("HF_EAGER_SENDS", "1")
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "traced train run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("bubble"), "report summary missing from stdout: {stdout}");
+    let json = std::fs::read_to_string(&path).unwrap();
+    let check = hyparflow::trace::validate::validate_chrome_trace(&json).unwrap();
+    assert_eq!(check.ranks, 2, "expected one pid per rank");
+    assert!(check.spans > 0, "no complete spans in the exported trace");
+    assert!(check.windows > 0, "eager run exported no async send windows");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn throughput_metric_reported() {
     let cfg = TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), Strategy::Sequential)
         .microbatch(4)

@@ -1,0 +1,268 @@
+//! hftrace conformance: the runtime tracing subsystem against the same
+//! bar the schedule IR holds itself to.
+//!
+//! (a) **Golden logical trace** — a 2-rank 1F1B MLP run records a
+//!     deterministic per-rank event sequence (schedule-IR spans with
+//!     their comm sub-spans and kernel spans), blessed under
+//!     `rust/tests/golden/` via the same `HF_BLESS_GOLDEN` mechanism as
+//!     the program-listing goldens. The listing embeds runtime artifact
+//!     names and payload byte counts, so the file is *generated*: on a
+//!     checkout without it the test writes it (and the in-process
+//!     determinism assertion is what gives that blessing teeth).
+//! (b) **Chrome export structure** — the merged multi-rank export of a
+//!     real traced run passes the recursive-descent structural validator:
+//!     parseable JSON, per-pid monotone timestamps, balanced B/E span
+//!     stacks, every async send window opened exactly once and closed.
+//! (c) **Observation only** — enabling tracing changes nothing: loss
+//!     history and every parameter are bitwise identical to the
+//!     untraced run.
+//! (d) **Sim-vs-real cross-validation** — the pipeline-bubble fraction
+//!     measured from a traced native run agrees with the calibrated
+//!     simulator's prediction (the sim emits the same event schema, so
+//!     both numbers come from `TraceReport::from_trace`) within
+//!     `BUBBLE_TOLERANCE` for GPipe and 1F1B.
+//!
+//! Every test that calls `fit` serializes on `FIT_LOCK`: ranks are
+//! threads in this process and the kernel pool size is global state.
+
+use std::sync::{Mutex, MutexGuard};
+
+use hyparflow::api::{fit, FitResult, Strategy, TrainConfig};
+use hyparflow::graph::{zoo, ModelGraph};
+use hyparflow::partition::Partitioning;
+use hyparflow::schedule::{ScheduleKind, SendMode};
+use hyparflow::sim::{simulate_step_traced, Platform, SimConfig};
+use hyparflow::trace::chrome::chrome_trace_json;
+use hyparflow::trace::report::TraceReport;
+use hyparflow::trace::validate::validate_chrome_trace;
+
+/// `fit` spawns one thread per rank and sizes the global kernel pool, so
+/// concurrent fits in one test binary would race each other's timing and
+/// pool configuration. Timing-sensitive tests hold this for their whole
+/// body; a poisoned lock (a prior test's panic) is still a valid lock.
+static FIT_LOCK: Mutex<()> = Mutex::new(());
+
+fn fit_lock() -> MutexGuard<'static, ()> {
+    FIT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn loss_history(r: &FitResult) -> Vec<f32> {
+    r.history.iter().map(|m| m.loss).collect()
+}
+
+fn max_param_diff(a: &FitResult, b: &FitResult) -> f32 {
+    assert_eq!(a.params.len(), b.params.len(), "param sets differ");
+    let mut worst = 0.0f32;
+    for ((ka, ta), (kb, tb)) in a.params.iter().zip(b.params.iter()) {
+        assert_eq!(ka, kb, "param key order mismatch");
+        worst = worst.max(ta.max_abs_diff(tb));
+    }
+    worst
+}
+
+// ---------------------------------------------------------------------------
+// (a) Golden logical trace
+// ---------------------------------------------------------------------------
+
+/// The golden scenario: the same MLP the program-listing goldens use,
+/// model-parallel over 2 ranks under 1F1B with eager sends (pinned
+/// explicitly — the CI conformance matrix flips `HF_EAGER_SENDS`, and the
+/// logical sequence differs between transports by design). One step keeps
+/// the listing reviewable; `native_threads(1)` keeps the kernel pool out
+/// of the picture (the logical view is timestamp-free either way).
+fn golden_cfg() -> TrainConfig {
+    TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), Strategy::Model)
+        .partitions(2)
+        .schedule(ScheduleKind::OneF1B)
+        .microbatch(4)
+        .num_microbatches(4)
+        .steps(1)
+        .lr(0.05)
+        .seed(21)
+        .eager_sends(true)
+        .trace(true)
+        .native_threads(1)
+}
+
+fn logical(res: &FitResult) -> String {
+    res.trace.as_ref().expect("trace(true) run must return a trace").logical_listing()
+}
+
+#[test]
+fn golden_logical_trace_one_f1b_mlp() {
+    let _guard = fit_lock();
+    let listing = logical(&fit(&golden_cfg()).unwrap());
+    // Determinism first: an identical run must record the identical
+    // logical sequence (kinds, tags, payload bytes — no timestamps).
+    let again = logical(&fit(&golden_cfg()).unwrap());
+    assert_eq!(listing, again, "logical trace differs between identical runs");
+
+    let path =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/trace_one_f1b_mlp_2x4.txt");
+    let got = format!(
+        "hftrace logical listing: mlp(8, [8, 8, 8], 4), model-parallel P=2, one_f1b,\n\
+         eager sends, microbatch=4, m=4, 1 step. Bless with\n\
+         HF_BLESS_GOLDEN=1 cargo test --test trace_conformance\n{listing}"
+    );
+    if std::env::var("HF_BLESS_GOLDEN").is_ok() || !std::path::Path::new(path).exists() {
+        std::fs::write(path, &got).unwrap();
+        return;
+    }
+    let want = std::fs::read_to_string(path).unwrap();
+    assert_eq!(
+        got, want,
+        "logical trace diverged from {path}; if intended, bless with \
+         HF_BLESS_GOLDEN=1 cargo test --test trace_conformance"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// (b) Chrome export of a real run
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chrome_export_of_real_run_passes_structural_validation() {
+    let _guard = fit_lock();
+    // Two steps so the event stream crosses an OptStep boundary; eager
+    // sends so the export carries async ("b"/"e") send windows. Kernel
+    // threads follow HF_NATIVE_THREADS — the CI conformance matrix runs
+    // this at 1 and 4 worker threads.
+    let res = fit(
+        &TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), Strategy::Model)
+            .partitions(2)
+            .schedule(ScheduleKind::OneF1B)
+            .microbatch(4)
+            .num_microbatches(4)
+            .steps(2)
+            .seed(3)
+            .eager_sends(true)
+            .trace(true),
+    )
+    .unwrap();
+    let trace = res.trace.expect("traced run must return a trace");
+    assert_eq!(trace.ranks.len(), 2);
+    assert!(trace.num_events() > 0);
+
+    let json = chrome_trace_json(&trace);
+    let check = validate_chrome_trace(&json).expect("chrome export failed validation");
+    assert_eq!(check.ranks, 2, "export must carry one pid per rank");
+    assert!(check.spans > 0, "export has no complete B/E spans");
+    // 1F1B over 2 ranks posts one activation and one error gradient per
+    // microbatch per step across the stage boundary.
+    assert!(check.windows >= 16, "expected >= 16 send windows, got {}", check.windows);
+
+    // The traced run also aggregates: nonzero step time, nonzero compute,
+    // and (eager sends) nonzero posted-send window time.
+    let rep = TraceReport::from_trace(&trace);
+    assert!(rep.step_secs > 0.0 && rep.compute_secs > 0.0);
+    assert!(rep.window_secs > 0.0, "eager run recorded no send windows");
+    assert!((0.0..=1.0).contains(&rep.bubble_frac), "bubble {}", rep.bubble_frac);
+}
+
+// ---------------------------------------------------------------------------
+// (c) Tracing is observation-only
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tracing_is_observation_only() {
+    let _guard = fit_lock();
+    let cfg = || {
+        TrainConfig::new(zoo::mlp(8, &[8, 8, 8], 4), Strategy::Model)
+            .partitions(2)
+            .schedule(ScheduleKind::OneF1B)
+            .microbatch(4)
+            .num_microbatches(4)
+            .steps(3)
+            .lr(0.05)
+            .seed(21)
+    };
+    let off = fit(&cfg().trace(false)).unwrap();
+    let on = fit(&cfg().trace(true)).unwrap();
+    assert!(off.trace.is_none(), "untraced run must not carry a trace");
+    assert!(on.trace.is_some(), "traced run must carry a trace");
+    assert_eq!(loss_history(&off), loss_history(&on), "tracing changed the loss history");
+    assert_eq!(max_param_diff(&off, &on), 0.0, "tracing changed trained parameters");
+}
+
+// ---------------------------------------------------------------------------
+// (d) Sim-vs-real cross-validation
+// ---------------------------------------------------------------------------
+
+/// Documented tolerance for |measured - simulated| pipeline-bubble
+/// fraction. Deliberately coarse: the native run executes on a shared,
+/// noisy host and the cost model is first-order (dispatch floor + a
+/// saturating rate curve), so this cross-validates the *mechanism* —
+/// fill/drain bubbles of the right magnitude — not microsecond accuracy.
+/// For scale: P=2, m=8 gives a structural bubble of (P-1)/(m+P-1) ~ 0.11,
+/// while a pipeline that accidentally serialized its stages would measure
+/// ~0.5 and a broken trace ~1.0; both blow the tolerance.
+const BUBBLE_TOLERANCE: f64 = 0.20;
+
+/// Wide enough that per-kernel work dwarfs dispatch jitter on the
+/// measured side: each dense microbatch kernel is ~2 MFLOP.
+fn crossval_model() -> ModelGraph {
+    zoo::mlp(256, &[256, 256, 256], 10)
+}
+
+/// Min bubble fraction over the steady-state steps of a traced native
+/// run (step 0 is warmup — cold caches, first-touch allocation; the min
+/// is robust because transient stalls only ever inflate a step's bubble).
+fn measured_bubble(kind: ScheduleKind) -> f64 {
+    let res = fit(
+        &TrainConfig::new(crossval_model(), Strategy::Model)
+            .partitions(2)
+            .schedule(kind)
+            .microbatch(16)
+            .num_microbatches(8)
+            .steps(4)
+            .lr(0.01)
+            .seed(7)
+            .eager_sends(true)
+            .trace(true)
+            .native_threads(1),
+    )
+    .unwrap();
+    let trace = res.trace.expect("traced run must return a trace");
+    let steps = trace.split_steps();
+    assert_eq!(steps.len(), 4, "trace should split at every OptStep");
+    steps[1..]
+        .iter()
+        .map(|s| TraceReport::from_trace(s).bubble_frac)
+        .fold(f64::INFINITY, f64::min)
+}
+
+fn simulated_bubble(kind: ScheduleKind, calibration: &str) -> f64 {
+    let g = crossval_model();
+    // Same auto-partitioning `fit` resolves for Strategy::Model over 2
+    // ranks (both schedules here are single-chunk).
+    let pt = Partitioning::auto(&g, 2).unwrap();
+    let mut cfg = SimConfig::new(Platform::skylake48(), 2, 1);
+    cfg.ppn = Platform::skylake48().cores_per_node; // 1 core/rank = native_threads(1)
+    cfg.microbatch = 16;
+    cfg.num_microbatches = 8;
+    cfg.schedule = kind;
+    cfg.send_mode = SendMode::Eager;
+    cfg.cost.apply_calibration(calibration).unwrap();
+    let (_, trace) = simulate_step_traced(&g, &pt, &cfg);
+    TraceReport::from_trace(&trace).bubble_frac
+}
+
+#[test]
+fn measured_bubble_fraction_cross_validates_calibrated_simulator() {
+    let _guard = fit_lock();
+    // Calibrate the cost model on this host's kernels with the same
+    // 1-worker pool the measured runs use.
+    hyparflow::runtime::pool::set_num_threads(1);
+    let cal = hyparflow::figures::measure_calibration().unwrap();
+    for kind in [ScheduleKind::GPipe, ScheduleKind::OneF1B] {
+        let sim = simulated_bubble(kind, &cal);
+        let real = measured_bubble(kind);
+        assert!(sim > 0.0 && sim < 1.0, "{}: sim bubble {sim:.3}", kind.label());
+        assert!(
+            (real - sim).abs() <= BUBBLE_TOLERANCE,
+            "{}: measured bubble {real:.3} vs simulated {sim:.3} disagree beyond {}",
+            kind.label(),
+            BUBBLE_TOLERANCE,
+        );
+    }
+}
