@@ -21,7 +21,7 @@ use crate::comm::CommEngine;
 use crate::data::SyntheticDataset;
 use crate::engine::{EngineConfig, StepMetrics, Trainer};
 use crate::graph::{ModelGraph, NodeId};
-use crate::hfmpi::{AllreduceAlgo, World};
+use crate::hfmpi::{AllreduceAlgo, Transport, World};
 use crate::partition::Partitioning;
 use crate::runtime::Runtime;
 use crate::schedule::{Program, ScheduleKind, SendMode};
@@ -78,6 +78,15 @@ pub struct TrainConfig {
     /// `HF_NATIVE_THREADS`, else an equal share of the machine per rank).
     /// Kernels are bitwise deterministic in the thread count.
     pub native_threads: Option<usize>,
+    /// Point-to-point transport of the hfmpi fabric (default:
+    /// `HF_TRANSPORT`, else buffered). Bitwise-neutral whenever a run
+    /// completes — payloads and arithmetic are transport-independent —
+    /// but blocking 1F1B-family sends deadlock under rendezvous; eager
+    /// sends (the default) are safe on both.
+    pub transport: Transport,
+    /// Deadlock-watchdog timeout for the spawned world (None =
+    /// `HFMPI_TIMEOUT_SECS`, default 120s).
+    pub comm_timeout: Option<std::time::Duration>,
 }
 
 impl TrainConfig {
@@ -97,6 +106,8 @@ impl TrainConfig {
             log_every: 0,
             dataset: None,
             native_threads: None,
+            transport: Transport::from_env().unwrap_or_else(|e| panic!("{e:#}")),
+            comm_timeout: None,
         }
     }
 
@@ -191,6 +202,19 @@ impl TrainConfig {
     /// default). Results are bitwise identical at any thread count.
     pub fn native_threads(mut self, t: usize) -> Self {
         self.native_threads = Some(t);
+        self
+    }
+
+    /// Point-to-point transport for the run's hfmpi world (see the field
+    /// docs; `HF_TRANSPORT=buffered|rendezvous` sets the default).
+    pub fn transport(mut self, t: Transport) -> Self {
+        self.transport = t;
+        self
+    }
+
+    /// Deadlock-watchdog timeout override for the run's hfmpi world.
+    pub fn comm_timeout(mut self, d: std::time::Duration) -> Self {
+        self.comm_timeout = Some(d);
         self
     }
 
@@ -302,7 +326,9 @@ pub fn fit(cfg: &TrainConfig) -> anyhow::Result<FitResult> {
         });
     crate::runtime::pool::set_num_threads(threads);
     let outputs: Vec<anyhow::Result<RankOutput>> =
-        World::run(world_n, |world| run_rank(cfg, &pt, world, p, &dataset));
+        World::run_with(world_n, cfg.transport, cfg.comm_timeout, |world| {
+            run_rank(cfg, &pt, world, p, &dataset)
+        });
     let wall = t0.elapsed().as_secs_f64();
 
     // Merge rank outputs.

@@ -33,7 +33,9 @@ pub const MAX_EDGES: u64 = (tags::ERROR - tags::ACTIVATION) / MAX_MB;
 /// completed by [`CommEngine::wait_send`]. Error payloads are owned here
 /// until the wait — the MPI_Isend pinned-buffer contract — while
 /// activation payloads alias the trainer's stash (live until `DropStash`,
-/// which the schedule places after the wait).
+/// which the schedule places after the wait). Under the rendezvous
+/// transport the wait genuinely blocks until the receiver consumed the
+/// payload, so the pin spans the message's whole in-flight lifetime.
 #[must_use = "complete the send with CommEngine::wait_send"]
 pub struct SendHandle {
     class: u8,
@@ -239,9 +241,11 @@ impl CommEngine {
         SendHandle { class: 1, edge, mb, _buf: Some(t), req }
     }
 
-    /// Complete an eager send: blocks until the transfer is done (a no-op
-    /// on the buffered fabric), releases the pinned payload, and retires
-    /// the tag from the in-flight accounting.
+    /// Complete an eager send: blocks until the transfer is done (free on
+    /// the buffered transport, a real wait for the matching recv under
+    /// rendezvous — the recorded `CommWait` span measures it), releases
+    /// the pinned payload, and retires the tag from the in-flight
+    /// accounting.
     pub fn wait_send(&self, h: SendHandle) {
         let tr = self.tracer.borrow();
         let span = tr.start();
@@ -323,7 +327,7 @@ impl CommEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hfmpi::World;
+    use crate::hfmpi::{Transport, World};
 
     #[test]
     fn hybrid_layout_2x3() {
@@ -368,7 +372,9 @@ mod tests {
 
     #[test]
     fn errors_and_activations_do_not_collide() {
-        World::run(2, |world| {
+        // Facing *blocking* sends: buffered-only by design (this exact
+        // pattern is the rendezvous deadlock canary in the fabric tests).
+        World::run_with_transport(2, Transport::Buffered, |world| {
             let ce = CommEngine::new(world, 2, 8, 4, 0, usize::MAX, AllreduceAlgo::Auto);
             if ce.partition == 0 {
                 ce.send_activation(&Tensor::scalar(1.0), 1, 5, 3);
@@ -423,6 +429,27 @@ mod tests {
                 let h0 = ce.post_send_activation(&a, 1, 0, 0);
                 let h1 = ce.post_send_error(Tensor::full(&[2], 2.0), 1, 0, 1);
                 assert_eq!(ce.in_flight_sends(), 2);
+                ce.wait_send(h0);
+                ce.wait_send(h1);
+                assert_eq!(ce.in_flight_sends(), 0);
+            } else {
+                assert_eq!(ce.recv_activation(0, 0, 0).data, vec![1.0; 2]);
+                assert_eq!(ce.recv_error(0, 0, 1).data, vec![2.0; 2]);
+            }
+        });
+    }
+
+    #[test]
+    fn eager_post_wait_round_trips_under_rendezvous() {
+        // The engine's post/wait path on the live rendezvous fabric:
+        // posts must not block, waits complete once the receiver drains.
+        World::run_with_transport(2, Transport::Rendezvous, |world| {
+            let ce = CommEngine::new(world, 2, 8, 4, 4, usize::MAX, AllreduceAlgo::Auto);
+            if ce.partition == 0 {
+                let a = Tensor::full(&[2], 1.0);
+                let h0 = ce.post_send_activation(&a, 1, 0, 0);
+                let h1 = ce.post_send_error(Tensor::full(&[2], 2.0), 1, 0, 1);
+                assert_eq!(ce.in_flight_sends(), 2, "posts must not block under rendezvous");
                 ce.wait_send(h0);
                 ce.wait_send(h1);
                 assert_eq!(ce.in_flight_sends(), 0);

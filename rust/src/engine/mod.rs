@@ -80,8 +80,11 @@ pub struct EngineConfig {
     /// arithmetic and message order are identical — only the completion
     /// point moves — so training is bitwise-equal either way; eager
     /// programs are additionally deadlock-free on rendezvous-only
-    /// transports. Default: on (`HF_EAGER_SENDS=0` disables, which is how
-    /// CI exercises the blocking/buffered row of the transport matrix).
+    /// transports — including the live fabric's
+    /// [`crate::hfmpi::Transport::Rendezvous`] mode, where blocking
+    /// 1F1B-family programs deadlock on their facing send pairs. Default:
+    /// on (`HF_EAGER_SENDS=0` disables, which is how CI exercises the
+    /// blocking/buffered row of the transport matrix).
     pub eager_sends: bool,
     /// Record an hftrace timeline of every interpreted instruction (plus
     /// comm/kernel sub-spans) per rank. Observation-only: payloads,

@@ -2,6 +2,12 @@
 //! allgather and three allreduce implementations (naive star, ring,
 //! recursive doubling) with an auto-selection policy modeled on the choices
 //! production MPI libraries make by message size.
+//!
+//! Every exchange-shaped step (barrier, allgather, ring, recursive
+//! doubling) is written as a sendrecv — `isend` + `recv` + `wait` — never
+//! as a blocking send followed by a recv: facing blocking sends form a
+//! cycle that deadlocks on the rendezvous transport. The acyclic patterns
+//! (binomial-tree bcast, star-gather naive allreduce) keep blocking sends.
 
 use super::fabric::Comm;
 use super::tags::RESERVED_BASE;
@@ -40,14 +46,17 @@ impl Comm {
         while dist < n {
             let dst = (me + dist) % n;
             let src = (me + n - dist % n) % n;
-            self.send(&token, dst, RESERVED_BASE + 100 + round);
+            let req = self.isend(&token, dst, RESERVED_BASE + 100 + round);
             self.recv(src, RESERVED_BASE + 100 + round);
+            self.wait(req);
             dist *= 2;
             round += 1;
         }
     }
 
-    /// Broadcast `t` from `root` to all ranks (binomial tree).
+    /// Broadcast `t` from `root` to all ranks (binomial tree). Each rank
+    /// receives before it forwards, so the send graph is acyclic and the
+    /// blocking sends below are rendezvous-safe.
     pub fn bcast(&self, t: &mut Tensor, root: usize) {
         let n = self.size();
         if n == 1 {
@@ -91,8 +100,9 @@ impl Comm {
         let left = (me + n - 1) % n;
         let mut carry = t.clone();
         for step in 0..n.saturating_sub(1) {
-            self.send_owned(carry, right, tag + step as u64);
+            let req = self.isend_owned(carry, right, tag + step as u64);
             carry = self.recv(left, tag + step as u64);
+            self.wait(req);
             let origin = (me + n - 1 - step) % n;
             out[origin] = Some(carry.clone());
         }
@@ -152,6 +162,8 @@ impl Comm {
         let n = self.size();
         let me = self.rank();
         let tag = RESERVED_BASE + 400;
+        // Star into the root is acyclic: blocking sends are
+        // rendezvous-safe here (the root posts the matching recvs).
         if me == 0 {
             for src in 1..n {
                 let part = self.recv(src, tag);
@@ -182,8 +194,9 @@ impl Comm {
             let chunk =
                 Tensor::new(Shape::new(&[starts[send_c + 1] - starts[send_c]]),
                             t.data[starts[send_c]..starts[send_c + 1]].to_vec());
-            self.send_owned(chunk, right, tag + step as u64);
+            let req = self.isend_owned(chunk, right, tag + step as u64);
             let incoming = self.recv(left, tag + step as u64);
+            self.wait(req);
             let dst = &mut t.data[starts[recv_c]..starts[recv_c + 1]];
             debug_assert_eq!(dst.len(), incoming.data.len());
             for (d, s) in dst.iter_mut().zip(incoming.data.iter()) {
@@ -197,8 +210,9 @@ impl Comm {
             let chunk =
                 Tensor::new(Shape::new(&[starts[send_c + 1] - starts[send_c]]),
                             t.data[starts[send_c]..starts[send_c + 1]].to_vec());
-            self.send_owned(chunk, right, tag + 1000 + step as u64);
+            let req = self.isend_owned(chunk, right, tag + 1000 + step as u64);
             let incoming = self.recv(left, tag + 1000 + step as u64);
+            self.wait(req);
             let dst = &mut t.data[starts[recv_c]..starts[recv_c + 1]];
             dst.copy_from_slice(&incoming.data);
         }
@@ -213,8 +227,9 @@ impl Comm {
         let mut round = 0u64;
         while mask < n {
             let peer = me ^ mask;
-            self.send(t, peer, tag + round);
+            let req = self.isend(t, peer, tag + round);
             let other = self.recv(peer, tag + round);
+            self.wait(req);
             t.add_assign(&other);
             mask <<= 1;
             round += 1;

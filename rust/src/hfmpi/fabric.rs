@@ -1,11 +1,32 @@
-//! The fabric: per-rank mailboxes, tag-matched blocking send/recv, and the
+//! The fabric: per-rank mailboxes, tag-matched send/recv with two
+//! point-to-point transports (buffered and rendezvous), and the
 //! communicator machinery (world, dup, split) built on top.
+//!
+//! # Transports
+//!
+//! Every message takes the same path — the sender deposits the payload in
+//! the receiver's mailbox under a `(src, comm, tag)` key, the receiver
+//! pops it FIFO per key — but *when a send completes* differs:
+//!
+//! - [`Transport::Buffered`] (MPI_Bsend): `send` returns once the message
+//!   is enqueued, `isend` is complete at post time and `wait` is free.
+//! - [`Transport::Rendezvous`] (MPI_Ssend / the paper's §6.3 setting for
+//!   large messages): `send` blocks until the matching `recv` consumes
+//!   the payload; `isend` registers a pending entry (the payload is
+//!   pinned in the mailbox) and returns immediately; `wait` blocks until
+//!   the match completes. Facing blocking sends therefore deadlock —
+//!   which is exactly the 1F1B-family hazard `Program::check` analyses,
+//!   now executable against the live fabric.
+//!
+//! Payloads, arithmetic and per-key message order are identical under
+//! both transports, so training results are bitwise equal whenever a
+//! program completes on both.
 
 use crate::tensor::Tensor;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Global rank id (thread index in the world).
 pub type RankId = usize;
@@ -13,59 +34,186 @@ pub type RankId = usize;
 /// (source global rank, communicator id, tag) — the match key for recv.
 type Key = (RankId, u64, u64);
 
-/// Default deadlock watchdog: a blocking recv that waits longer than this
-/// panics with a diagnostic instead of hanging the test suite forever.
-/// Override with HFMPI_TIMEOUT_SECS.
+/// Default deadlock watchdog: a blocking recv/send/wait that waits longer
+/// than this panics with a diagnostic instead of hanging the test suite
+/// forever. Override with HFMPI_TIMEOUT_SECS.
 const DEFAULT_TIMEOUT_SECS: u64 = 120;
 
-fn recv_timeout() -> Duration {
-    let secs = std::env::var("HFMPI_TIMEOUT_SECS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(DEFAULT_TIMEOUT_SECS);
+/// Watchdog timeout from the environment. Strict per the repo's env
+/// policy: an unparseable `HFMPI_TIMEOUT_SECS` is a hard error naming the
+/// variable, never a silent fallback to the default.
+pub(crate) fn recv_timeout() -> Duration {
+    let secs = crate::util::env_parse("HFMPI_TIMEOUT_SECS", DEFAULT_TIMEOUT_SECS)
+        .unwrap_or_else(|e| panic!("{e:#}"));
     Duration::from_secs(secs)
 }
 
+/// Point-to-point send-completion semantics, selected per [`World`]
+/// (`HF_TRANSPORT` or [`World::run_with_transport`]). See the module docs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Transport {
+    /// Sends complete on enqueue; `wait` is free. The historical fabric
+    /// behavior and the default.
+    #[default]
+    Buffered,
+    /// Sends complete only against the matching posted receive; `wait`
+    /// blocks until then and measures real elapsed time.
+    Rendezvous,
+}
+
+impl Transport {
+    pub fn parse(s: &str) -> anyhow::Result<Transport> {
+        match s {
+            "buffered" => Ok(Transport::Buffered),
+            "rendezvous" => Ok(Transport::Rendezvous),
+            other => anyhow::bail!(
+                "unrecognized transport {other:?} (valid values: buffered|rendezvous)"
+            ),
+        }
+    }
+
+    /// Strict `HF_TRANSPORT` read: absent means buffered, anything
+    /// unrecognized is a hard error (same policy as `util::env_flag`).
+    pub fn from_env() -> anyhow::Result<Transport> {
+        match std::env::var("HF_TRANSPORT") {
+            Err(std::env::VarError::NotPresent) => Ok(Transport::default()),
+            Err(std::env::VarError::NotUnicode(v)) => {
+                anyhow::bail!("HF_TRANSPORT={v:?} is not unicode")
+            }
+            Ok(v) => Transport::parse(&v).map_err(|e| anyhow::anyhow!("HF_TRANSPORT: {e}")),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Transport::Buffered => "buffered",
+            Transport::Rendezvous => "rendezvous",
+        }
+    }
+}
+
+fn env_transport() -> Transport {
+    Transport::from_env().unwrap_or_else(|e| panic!("{e:#}"))
+}
+
+/// Poison-tolerant lock. A watchdog panic in one rank (possibly caught by
+/// a test) poisons the mutex it held, but every panic site leaves the
+/// guarded state fully consistent — so other ranks keep going instead of
+/// cascading poison panics.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant condvar wait (see [`lock_ignore_poison`]).
+fn wait_ignore_poison<'a, T>(
+    cv: &Condvar,
+    guard: std::sync::MutexGuard<'a, T>,
+    timeout: Duration,
+) -> std::sync::MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((g, _)) => g,
+        Err(e) => e.into_inner().0,
+    }
+}
+
+/// A message parked in a mailbox: the payload plus the fabric-wide send
+/// sequence id its sender may be blocked on (rendezvous completion).
+struct InFlight {
+    seq: u64,
+    payload: Tensor,
+}
+
+/// Mailbox contents, guarded by one mutex so matching and completion are
+/// a single state machine: `pending` holds posted-but-unreceived messages,
+/// `done` the sequence ids whose message a recv has consumed (rendezvous
+/// only — buffered sends never look, so tracking them would only leak).
+struct MailboxState {
+    pending: HashMap<Key, VecDeque<InFlight>>,
+    done: HashSet<u64>,
+}
+
 struct Mailbox {
-    queues: Mutex<HashMap<Key, VecDeque<Tensor>>>,
+    state: Mutex<MailboxState>,
     cv: Condvar,
     timeout: Duration,
+    transport: Transport,
 }
 
 impl Mailbox {
-    fn new(timeout: Duration) -> Self {
-        Mailbox { queues: Mutex::new(HashMap::new()), cv: Condvar::new(), timeout }
+    fn new(timeout: Duration, transport: Transport) -> Self {
+        Mailbox {
+            state: Mutex::new(MailboxState { pending: HashMap::new(), done: HashSet::new() }),
+            cv: Condvar::new(),
+            timeout,
+            transport,
+        }
     }
 
-    fn push(&self, key: Key, msg: Tensor) {
-        let mut q = self.queues.lock().unwrap();
-        q.entry(key).or_default().push_back(msg);
+    fn push(&self, key: Key, seq: u64, payload: Tensor) {
+        let mut st = lock_ignore_poison(&self.state);
+        st.pending.entry(key).or_default().push_back(InFlight { seq, payload });
         self.cv.notify_all();
     }
 
+    /// Blocking receive with an absolute-deadline watchdog: the deadline
+    /// is fixed on entry, so unrelated traffic waking the condvar cannot
+    /// postpone the panic. (The previous per-wakeup timeout restart meant
+    /// a starved rank in a busy world was never caught.)
     fn pop_blocking(&self, key: Key, me: RankId) -> Tensor {
-        let timeout = self.timeout;
-        let mut q = self.queues.lock().unwrap();
+        let deadline = Instant::now() + self.timeout;
+        let mut st = lock_ignore_poison(&self.state);
         loop {
-            if let Some(dq) = q.get_mut(&key) {
-                if let Some(msg) = dq.pop_front() {
-                    return msg;
+            if let Some(dq) = st.pending.get_mut(&key) {
+                if let Some(m) = dq.pop_front() {
+                    if dq.is_empty() {
+                        st.pending.remove(&key);
+                    }
+                    if self.transport == Transport::Rendezvous {
+                        // Complete the sender: it may be blocked in
+                        // send/wait on this seq.
+                        st.done.insert(m.seq);
+                        self.cv.notify_all();
+                    }
+                    return m.payload;
                 }
             }
-            let (guard, res) = self.cv.wait_timeout(q, timeout).unwrap();
-            q = guard;
-            if res.timed_out() {
-                let pending: Vec<Key> = q
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                let pending: Vec<Key> = st
+                    .pending
                     .iter()
                     .filter(|(_, v)| !v.is_empty())
                     .map(|(k, _)| *k)
                     .collect();
                 panic!(
-                    "hfmpi deadlock watchdog: rank {me} blocked >{timeout:?} on \
+                    "hfmpi deadlock watchdog: rank {me} blocked >{:?} on \
                      recv(src={}, comm={}, tag={}); pending keys in mailbox: {pending:?}",
-                    key.0, key.1, key.2
+                    self.timeout, key.0, key.1, key.2
                 );
             }
+            st = wait_ignore_poison(&self.cv, st, remaining);
+        }
+    }
+
+    /// Rendezvous completion: block until the receiver consumed send
+    /// `seq`. Same absolute-deadline watchdog as `pop_blocking`.
+    fn wait_done(&self, seq: u64, me: RankId, op: &str, dst: RankId, comm: u64, tag: u64) {
+        let deadline = Instant::now() + self.timeout;
+        let mut st = lock_ignore_poison(&self.state);
+        loop {
+            if st.done.remove(&seq) {
+                return;
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                panic!(
+                    "hfmpi deadlock watchdog: rank {me} blocked >{:?} in rendezvous \
+                     {op}(dst={dst}, comm={comm}, tag={tag}): the matching recv was \
+                     never posted",
+                    self.timeout
+                );
+            }
+            st = wait_ignore_poison(&self.cv, st, remaining);
         }
     }
 }
@@ -75,25 +223,34 @@ struct SplitSlot {
     entries: HashMap<RankId, (i64, i64)>, // rank -> (color, key)
     result: Option<HashMap<RankId, (u64, Vec<RankId>)>>, // rank -> (comm id, members)
     arrived: usize,
+    /// Ranks that have read their result; the last reader removes the
+    /// slot (a long-lived world splitting repeatedly must not grow the
+    /// map without bound).
+    read: usize,
 }
 
 /// Shared state for all ranks of a [`World`].
 pub(crate) struct Fabric {
     mailboxes: Vec<Mailbox>,
     next_comm_id: AtomicU64,
+    /// Fabric-wide send sequence ids (rendezvous completion tracking).
+    next_send_seq: AtomicU64,
     splits: Mutex<HashMap<(u64, u64), SplitSlot>>, // (parent comm, epoch) -> slot
     split_cv: Condvar,
     timeout: Duration,
+    transport: Transport,
 }
 
 impl Fabric {
-    fn new(n: usize, timeout: Duration) -> Self {
+    fn new(n: usize, timeout: Duration, transport: Transport) -> Self {
         Fabric {
-            mailboxes: (0..n).map(|_| Mailbox::new(timeout)).collect(),
+            mailboxes: (0..n).map(|_| Mailbox::new(timeout, transport)).collect(),
             next_comm_id: AtomicU64::new(1),
+            next_send_seq: AtomicU64::new(0),
             splits: Mutex::new(HashMap::new()),
             split_cv: Condvar::new(),
             timeout,
+            transport,
         }
     }
 }
@@ -102,10 +259,14 @@ impl Fabric {
 /// engine reads these to report communication overhead in benches.
 #[derive(Clone, Debug, Default)]
 pub struct CommStats {
+    /// Completed sends. Blocking sends count on return; `isend`s count at
+    /// post time on the buffered transport and at match time (inside
+    /// [`Comm::wait`]) under rendezvous — `bytes_sent` and `send_secs`
+    /// follow the same rule, so under rendezvous they measure real
+    /// transfer completion.
     pub sends: u64,
     pub recvs: u64,
-    /// Nonblocking sends posted ([`Comm::isend`]); each also counts in
-    /// `sends` on this buffered fabric.
+    /// Nonblocking sends posted ([`Comm::isend`]).
     pub isends: u64,
     /// Nonblocking sends completed ([`Comm::wait`]). `isends == waits`
     /// after a drained step — the pairing invariant hftrace windows and
@@ -120,13 +281,25 @@ pub struct CommStats {
     pub recv_secs: f64,
 }
 
+/// An unmatched rendezvous isend: what [`Comm::wait`] must block on.
+#[derive(Debug)]
+struct PendingSend {
+    /// Destination *global* rank — whose mailbox owns the match state.
+    dst: RankId,
+    seq: u64,
+    tag: u64,
+}
+
 /// A pending nonblocking send posted by [`Comm::isend`]; complete it with
 /// [`Comm::wait`]. Dropping it without waiting leaks the completion
-/// accounting, so it is `#[must_use]`.
+/// accounting (and, under rendezvous, abandons a sender-side completion
+/// that the transfer semantics require), so it is `#[must_use]`.
 #[must_use = "complete the send with Comm::wait"]
 #[derive(Debug)]
 pub struct SendReq {
     bytes: u64,
+    /// `Some` iff the send is not yet complete (rendezvous posts).
+    pending: Option<PendingSend>,
 }
 
 /// A communicator: an ordered group of global ranks plus this rank's index
@@ -164,6 +337,11 @@ impl Comm {
         self.members[idx]
     }
 
+    /// The world's point-to-point transport semantics.
+    pub fn transport(&self) -> Transport {
+        self.fabric.transport
+    }
+
     /// Snapshot of this communicator's traffic counters.
     pub fn stats(&self) -> CommStats {
         self.stats.borrow().clone()
@@ -173,29 +351,43 @@ impl Comm {
         *self.stats.borrow_mut() = CommStats::default();
     }
 
-    /// Blocking tagged send to communicator rank `dst`.
-    ///
-    /// Mailboxes are unbounded, so "blocking" matches MPI's buffered-send
-    /// semantics: the call returns once the message is enqueued. Ordering
-    /// between a (src, tag) pair is FIFO.
-    pub fn send(&self, t: &Tensor, dst: usize, tag: u64) {
-        let t0 = std::time::Instant::now();
+    /// Deposit a payload in `dst`'s mailbox; returns what completion
+    /// tracking needs. The common first half of every send flavor.
+    fn post(&self, t: Tensor, dst: usize, tag: u64) -> (RankId, u64, u64) {
+        let bytes = t.size_bytes() as u64;
         let dst_global = self.members[dst];
         let key = (self.global_rank(), self.id, tag);
-        self.fabric.mailboxes[dst_global].push(key, t.clone());
-        let mut s = self.stats.borrow_mut();
-        s.sends += 1;
-        s.bytes_sent += t.size_bytes() as u64;
-        s.send_secs += t0.elapsed().as_secs_f64();
+        let seq = self.fabric.next_send_seq.fetch_add(1, Ordering::Relaxed);
+        self.fabric.mailboxes[dst_global].push(key, seq, t);
+        (dst_global, seq, bytes)
+    }
+
+    /// Blocking tagged send to communicator rank `dst`.
+    ///
+    /// Buffered transport: mailboxes are unbounded, so the call returns
+    /// once the message is enqueued (MPI buffered-send semantics).
+    /// Rendezvous transport: blocks until the matching `recv` consumes
+    /// the payload (MPI synchronous-send semantics) — facing blocking
+    /// sends deadlock and the watchdog fires. Ordering between a
+    /// (src, tag) pair is FIFO under both.
+    pub fn send(&self, t: &Tensor, dst: usize, tag: u64) {
+        self.send_owned(t.clone(), dst, tag)
     }
 
     /// Move-variant of [`send`](Self::send): avoids cloning the payload.
     pub fn send_owned(&self, t: Tensor, dst: usize, tag: u64) {
-        let t0 = std::time::Instant::now();
-        let bytes = t.size_bytes() as u64;
-        let dst_global = self.members[dst];
-        let key = (self.global_rank(), self.id, tag);
-        self.fabric.mailboxes[dst_global].push(key, t);
+        let t0 = Instant::now();
+        let (dst_global, seq, bytes) = self.post(t, dst, tag);
+        if self.fabric.transport == Transport::Rendezvous {
+            self.fabric.mailboxes[dst_global].wait_done(
+                seq,
+                self.global_rank(),
+                "send",
+                dst_global,
+                self.id,
+                tag,
+            );
+        }
         let mut s = self.stats.borrow_mut();
         s.sends += 1;
         s.bytes_sent += bytes;
@@ -204,28 +396,64 @@ impl Comm {
 
     /// Nonblocking tagged send (MPI_Isend): initiate the transfer and
     /// return a request handle immediately; [`Comm::wait`] completes it.
-    /// On this buffered fabric the payload is enqueued at post time, so
-    /// the request is already complete when returned — `wait` exists for
-    /// the MPI contract and for symmetry with rendezvous transports, where
-    /// it would block until the matching receive is posted. Callers must
-    /// keep their payload buffer untouched until the wait (the engine pins
-    /// error payloads inside its `SendHandle` for exactly this reason).
+    /// The fabric pins a copy of the payload at post time, so the caller's
+    /// buffer is free to reuse — stronger than the MPI contract, which the
+    /// engine still honors by pinning payloads in its `SendHandle`.
+    ///
+    /// Buffered: the request is already complete when returned and `wait`
+    /// is free. Rendezvous: the request completes when the receiver's
+    /// `recv` consumes the payload; `wait` blocks until then and the
+    /// send's `CommStats` accounting happens at that match time.
     pub fn isend(&self, t: &Tensor, dst: usize, tag: u64) -> SendReq {
-        let bytes = t.size_bytes() as u64;
-        self.send(t, dst, tag);
-        self.stats.borrow_mut().isends += 1;
-        SendReq { bytes }
+        self.isend_owned(t.clone(), dst, tag)
     }
 
-    /// Complete a nonblocking send. Returns the payload size in bytes.
+    /// Move-variant of [`isend`](Self::isend): avoids cloning the payload.
+    pub fn isend_owned(&self, t: Tensor, dst: usize, tag: u64) -> SendReq {
+        let t0 = Instant::now();
+        let (dst_global, seq, bytes) = self.post(t, dst, tag);
+        let mut s = self.stats.borrow_mut();
+        s.isends += 1;
+        match self.fabric.transport {
+            Transport::Buffered => {
+                // Complete at post: count the send now.
+                s.sends += 1;
+                s.bytes_sent += bytes;
+                s.send_secs += t0.elapsed().as_secs_f64();
+                SendReq { bytes, pending: None }
+            }
+            Transport::Rendezvous => {
+                SendReq { bytes, pending: Some(PendingSend { dst: dst_global, seq, tag }) }
+            }
+        }
+    }
+
+    /// Complete a nonblocking send. Blocks until the match under
+    /// rendezvous (free on buffered). Returns the payload size in bytes.
     pub fn wait(&self, req: SendReq) -> u64 {
+        let t0 = Instant::now();
+        if let Some(p) = &req.pending {
+            self.fabric.mailboxes[p.dst].wait_done(
+                p.seq,
+                self.global_rank(),
+                "wait",
+                p.dst,
+                self.id,
+                p.tag,
+            );
+            // Match-time accounting: the transfer completed here.
+            let mut s = self.stats.borrow_mut();
+            s.sends += 1;
+            s.bytes_sent += req.bytes;
+            s.send_secs += t0.elapsed().as_secs_f64();
+        }
         self.stats.borrow_mut().waits += 1;
         req.bytes
     }
 
     /// Blocking tagged receive from communicator rank `src`.
     pub fn recv(&self, src: usize, tag: u64) -> Tensor {
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let me = self.global_rank();
         let src_global = self.members[src];
         let key = (src_global, self.id, tag);
@@ -252,12 +480,13 @@ impl Comm {
         let me = self.global_rank();
         let n = self.size();
 
-        let mut splits = self.fabric.splits.lock().unwrap();
+        let mut splits = lock_ignore_poison(&self.fabric.splits);
         {
             let slot = splits.entry(slot_key).or_insert_with(|| SplitSlot {
                 entries: HashMap::new(),
                 result: None,
                 arrived: 0,
+                read: 0,
             });
             slot.entries.insert(me, (color, key));
             slot.arrived += 1;
@@ -284,19 +513,32 @@ impl Comm {
                 self.fabric.split_cv.notify_all();
             }
         }
-        // Wait for the grouping to be published.
+        // Wait for the grouping to be published. Absolute deadline: every
+        // split completing anywhere on the fabric notifies this condvar,
+        // so a per-wakeup timeout restart would never catch a starved
+        // rank in a world that keeps splitting elsewhere.
+        let deadline = Instant::now() + self.fabric.timeout;
         let (id, members) = loop {
-            if let Some(slot) = splits.get(&slot_key) {
+            if let Some(slot) = splits.get_mut(&slot_key) {
                 if let Some(res) = &slot.result {
-                    break res[&me].clone();
+                    let mine = res[&me].clone();
+                    // Last reader garbage-collects the slot.
+                    slot.read += 1;
+                    if slot.read == n {
+                        splits.remove(&slot_key);
+                    }
+                    break mine;
                 }
             }
-            let timeout = self.fabric.timeout;
-            let (guard, res) = self.fabric.split_cv.wait_timeout(splits, timeout).unwrap();
-            splits = guard;
-            if res.timed_out() {
-                panic!("hfmpi: rank {me} timed out in split on comm {}", self.id);
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                panic!(
+                    "hfmpi deadlock watchdog: rank {me} blocked >{:?} in split on \
+                     comm {} (epoch {epoch}): not all members called split",
+                    self.fabric.timeout, self.id
+                );
             }
+            splits = wait_ignore_poison(&self.fabric.split_cv, splits, remaining);
         };
         let my_idx = members.iter().position(|&g| g == me).unwrap();
         Comm {
@@ -307,6 +549,13 @@ impl Comm {
             stats: Default::default(),
             my_split_epoch: std::cell::Cell::new(0),
         }
+    }
+
+    /// Number of live split-rendezvous slots on the fabric (test hook for
+    /// the slot garbage collection).
+    #[cfg(test)]
+    pub(crate) fn debug_split_slots(&self) -> usize {
+        lock_ignore_poison(&self.fabric.splits).len()
     }
 
     /// Record an allreduce in the stats (used by the collectives module).
@@ -324,13 +573,14 @@ pub struct World;
 impl World {
     /// Run `f` on `n` rank threads; returns each rank's result in rank order.
     /// Panics in any rank propagate (failing the test/run) once all threads
-    /// finish or the watchdog fires.
+    /// finish or the watchdog fires. Transport and watchdog timeout come
+    /// from the environment (`HF_TRANSPORT`, `HFMPI_TIMEOUT_SECS`).
     pub fn run<T, F>(n: usize, f: F) -> Vec<T>
     where
         T: Send,
         F: Fn(&Comm) -> T + Sync,
     {
-        Self::run_with_timeout(n, recv_timeout(), f)
+        Self::run_with(n, env_transport(), None, f)
     }
 
     /// [`run`](Self::run) with an explicit deadlock-watchdog timeout.
@@ -339,8 +589,28 @@ impl World {
         T: Send,
         F: Fn(&Comm) -> T + Sync,
     {
+        Self::run_with(n, env_transport(), Some(timeout), f)
+    }
+
+    /// [`run`](Self::run) with an explicit point-to-point transport.
+    pub fn run_with_transport<T, F>(n: usize, transport: Transport, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(&Comm) -> T + Sync,
+    {
+        Self::run_with(n, transport, None, f)
+    }
+
+    /// Full-control spawn: explicit transport and watchdog timeout
+    /// (`None` = `HFMPI_TIMEOUT_SECS`, default 120s).
+    pub fn run_with<T, F>(n: usize, transport: Transport, timeout: Option<Duration>, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(&Comm) -> T + Sync,
+    {
         assert!(n > 0, "world size must be positive");
-        let fabric = Arc::new(Fabric::new(n, timeout));
+        let timeout = timeout.unwrap_or_else(recv_timeout);
+        let fabric = Arc::new(Fabric::new(n, timeout, transport));
         let members: Vec<RankId> = (0..n).collect();
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(n);

@@ -15,6 +15,15 @@
 //! `isend`/`wait` (MPI_Isend/MPI_Wait) the eager-send schedule programs
 //! run on.
 //!
+//! Two point-to-point transports are implemented, selected per world
+//! ([`Transport`]; env `HF_TRANSPORT=buffered|rendezvous`): **buffered**
+//! (MPI_Bsend — sends complete on enqueue, waits are free) and
+//! **rendezvous** (MPI_Ssend — a send completes only against the posted
+//! matching receive; `isend` pins the payload and `wait` blocks until the
+//! match, measuring real elapsed time). Payloads and per-key ordering are
+//! identical, so any program that completes on both trains bitwise
+//! identically on both.
+//!
 //! ```no_run
 //! // (no_run: kept as documentation; the same code runs for real as
 //! // `hfmpi::tests::allreduce_*`.)
@@ -33,7 +42,7 @@ mod fabric;
 mod fusion;
 
 pub use collectives::AllreduceAlgo;
-pub use fabric::{Comm, CommStats, SendReq, World};
+pub use fabric::{Comm, CommStats, SendReq, Transport, World};
 pub use fusion::{FusionBuffer, DEFAULT_THRESHOLD_BYTES};
 
 /// Message tags used by the training engine. Kept here so every subsystem

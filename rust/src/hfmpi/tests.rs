@@ -1,44 +1,104 @@
-//! Unit tests for the hfmpi fabric: point-to-point semantics, communicator
-//! splitting, every collective algorithm, and the fusion buffer.
+//! Unit tests for the hfmpi fabric: point-to-point semantics under both
+//! transports, communicator splitting, every collective algorithm, the
+//! deadlock watchdog, and the fusion buffer.
+//!
+//! Tests that rely on buffered reordering (receiving in reverse post
+//! order while the sender has already moved on) pin
+//! `Transport::Buffered` explicitly — under rendezvous the same blocking
+//! sends would park the sender on the first unmatched message. Rendezvous
+//! twins use `isend` so multiple messages can be pending at once.
 
 use super::*;
 use crate::tensor::Tensor;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+const BOTH: [Transport; 2] = [Transport::Buffered, Transport::Rendezvous];
 
 #[test]
 fn send_recv_basic() {
-    World::run(2, |c| {
-        if c.rank() == 0 {
-            c.send(&Tensor::full(&[3], 7.0), 1, 42);
-        } else {
-            let t = c.recv(0, 42);
-            assert_eq!(t.data, vec![7.0; 3]);
-        }
-    });
+    for tr in BOTH {
+        World::run_with_transport(2, tr, |c| {
+            assert_eq!(c.transport(), tr);
+            if c.rank() == 0 {
+                c.send(&Tensor::full(&[3], 7.0), 1, 42);
+            } else {
+                let t = c.recv(0, 42);
+                assert_eq!(t.data, vec![7.0; 3]);
+            }
+        });
+    }
 }
 
 #[test]
 fn send_recv_fifo_order_per_tag() {
-    World::run(2, |c| {
-        if c.rank() == 0 {
-            for i in 0..10 {
-                c.send(&Tensor::scalar(i as f32), 1, 5);
+    // Blocking sends keep FIFO under both transports (under rendezvous
+    // each send simply parks until its in-order recv).
+    for tr in BOTH {
+        World::run_with_transport(2, tr, |c| {
+            if c.rank() == 0 {
+                for i in 0..10 {
+                    c.send(&Tensor::scalar(i as f32), 1, 5);
+                }
+            } else {
+                for i in 0..10 {
+                    assert_eq!(c.recv(0, 5).data[0], i as f32, "{tr:?}");
+                }
             }
-        } else {
-            for i in 0..10 {
-                assert_eq!(c.recv(0, 5).data[0], i as f32);
+        });
+    }
+}
+
+#[test]
+fn isend_fifo_order_per_tag() {
+    // Ten posts pending on one (src, tag) key at once: matching must pop
+    // the per-key queue FIFO under both transports.
+    for tr in BOTH {
+        World::run_with_transport(2, tr, |c| {
+            if c.rank() == 0 {
+                let reqs: Vec<SendReq> =
+                    (0..10).map(|i| c.isend(&Tensor::scalar(i as f32), 1, 5)).collect();
+                for r in reqs {
+                    c.wait(r);
+                }
+            } else {
+                for i in 0..10 {
+                    assert_eq!(c.recv(0, 5).data[0], i as f32, "{tr:?}");
+                }
             }
-        }
-    });
+        });
+    }
 }
 
 #[test]
 fn tags_do_not_cross_match() {
-    World::run(2, |c| {
+    // Reverse-order receive of two *blocking* sends relies on buffered
+    // completion (under rendezvous, send(tag 100) would park forever).
+    World::run_with_transport(2, Transport::Buffered, |c| {
         if c.rank() == 0 {
             c.send(&Tensor::scalar(1.0), 1, 100);
             c.send(&Tensor::scalar(2.0), 1, 200);
         } else {
             // Receive in reverse tag order: matching must be by tag.
+            assert_eq!(c.recv(0, 200).data[0], 2.0);
+            assert_eq!(c.recv(0, 100).data[0], 1.0);
+        }
+    });
+}
+
+#[test]
+fn tags_do_not_cross_match_among_pending_rendezvous_sends() {
+    // The rendezvous twin: both messages pending as isends, receiver
+    // consumes them in reverse post order — matching is by tag, and both
+    // waits then complete.
+    World::run_with_transport(2, Transport::Rendezvous, |c| {
+        if c.rank() == 0 {
+            let r1 = c.isend(&Tensor::scalar(1.0), 1, 100);
+            let r2 = c.isend(&Tensor::scalar(2.0), 1, 200);
+            c.wait(r1);
+            c.wait(r2);
+        } else {
             assert_eq!(c.recv(0, 200).data[0], 2.0);
             assert_eq!(c.recv(0, 100).data[0], 1.0);
         }
@@ -61,58 +121,71 @@ fn sends_from_different_sources_do_not_cross_match() {
 
 #[test]
 fn barrier_all_sizes() {
-    for n in [1, 2, 3, 4, 7, 8] {
-        World::run(n, |c| {
-            for _ in 0..3 {
-                c.barrier();
-            }
-        });
-    }
-}
-
-#[test]
-fn bcast_from_each_root() {
-    for n in [1, 2, 3, 5, 8] {
-        for root in 0..n {
-            World::run(n, move |c| {
-                let mut t = if c.rank() == root {
-                    Tensor::full(&[4], 3.5)
-                } else {
-                    Tensor::zeros(&[4])
-                };
-                c.bcast(&mut t, root);
-                assert_eq!(t.data, vec![3.5; 4], "n={n} root={root} rank={}", c.rank());
+    for tr in BOTH {
+        for n in [1, 2, 3, 4, 7, 8] {
+            World::run_with_transport(n, tr, |c| {
+                for _ in 0..3 {
+                    c.barrier();
+                }
             });
         }
     }
 }
 
 #[test]
+fn bcast_from_each_root() {
+    for tr in BOTH {
+        for n in [1, 2, 3, 5, 8] {
+            for root in 0..n {
+                World::run_with_transport(n, tr, move |c| {
+                    let mut t = if c.rank() == root {
+                        Tensor::full(&[4], 3.5)
+                    } else {
+                        Tensor::zeros(&[4])
+                    };
+                    c.bcast(&mut t, root);
+                    assert_eq!(t.data, vec![3.5; 4], "n={n} root={root} rank={}", c.rank());
+                });
+            }
+        }
+    }
+}
+
+#[test]
 fn allgather_rank_order() {
-    for n in [1, 2, 3, 6] {
-        World::run(n, |c| {
-            let mine = Tensor::scalar(c.rank() as f32);
-            let all = c.allgather(&mine);
-            let got: Vec<f32> = all.iter().map(|t| t.data[0]).collect();
-            let want: Vec<f32> = (0..n).map(|r| r as f32).collect();
-            assert_eq!(got, want);
-        });
+    for tr in BOTH {
+        for n in [1, 2, 3, 6] {
+            World::run_with_transport(n, tr, |c| {
+                let mine = Tensor::scalar(c.rank() as f32);
+                let all = c.allgather(&mine);
+                let got: Vec<f32> = all.iter().map(|t| t.data[0]).collect();
+                let want: Vec<f32> = (0..n).map(|r| r as f32).collect();
+                assert_eq!(got, want);
+            });
+        }
     }
 }
 
 fn check_allreduce(n: usize, len: usize, algo: AllreduceAlgo) {
-    World::run(n, move |c| {
-        let mut t = Tensor::new(
-            crate::tensor::Shape::new(&[len]),
-            (0..len).map(|i| (c.rank() + 1) as f32 * (i + 1) as f32).collect(),
-        );
-        c.allreduce_sum_with(&mut t, algo).unwrap();
-        let rank_sum: f32 = (1..=n).sum::<usize>() as f32;
-        for (i, v) in t.data.iter().enumerate() {
-            let want = rank_sum * (i + 1) as f32;
-            assert!((v - want).abs() < 1e-3, "n={n} len={len} algo={algo:?} i={i}: {v} != {want}");
-        }
-    });
+    // Every algorithm must complete (and agree) on both transports: the
+    // exchange-shaped steps are written sendrecv-style for exactly this.
+    for tr in BOTH {
+        World::run_with_transport(n, tr, move |c| {
+            let mut t = Tensor::new(
+                crate::tensor::Shape::new(&[len]),
+                (0..len).map(|i| (c.rank() + 1) as f32 * (i + 1) as f32).collect(),
+            );
+            c.allreduce_sum_with(&mut t, algo).unwrap();
+            let rank_sum: f32 = (1..=n).sum::<usize>() as f32;
+            for (i, v) in t.data.iter().enumerate() {
+                let want = rank_sum * (i + 1) as f32;
+                assert!(
+                    (v - want).abs() < 1e-3,
+                    "n={n} len={len} algo={algo:?} {tr:?} i={i}: {v} != {want}"
+                );
+            }
+        });
+    }
 }
 
 #[test]
@@ -198,13 +271,31 @@ fn repeated_splits_are_independent() {
 
 #[test]
 fn dup_gives_isolated_tag_space() {
-    World::run(2, |c| {
+    // Reverse-comm-order receive of blocking sends: buffered-only (see
+    // tags_do_not_cross_match); the rendezvous twin below uses isend.
+    World::run_with_transport(2, Transport::Buffered, |c| {
         let d = c.dup();
         if c.rank() == 0 {
             c.send(&Tensor::scalar(1.0), 1, 9);
             d.send(&Tensor::scalar(2.0), 1, 9);
         } else {
             // Same (src, tag) but different comm: no cross-matching.
+            assert_eq!(d.recv(0, 9).data[0], 2.0);
+            assert_eq!(c.recv(0, 9).data[0], 1.0);
+        }
+    });
+}
+
+#[test]
+fn dup_gives_isolated_tag_space_under_rendezvous() {
+    World::run_with_transport(2, Transport::Rendezvous, |c| {
+        let d = c.dup();
+        if c.rank() == 0 {
+            let r1 = c.isend(&Tensor::scalar(1.0), 1, 9);
+            let r2 = d.isend(&Tensor::scalar(2.0), 1, 9);
+            c.wait(r1);
+            d.wait(r2);
+        } else {
             assert_eq!(d.recv(0, 9).data[0], 2.0);
             assert_eq!(c.recv(0, 9).data[0], 1.0);
         }
@@ -230,7 +321,8 @@ fn stats_count_traffic() {
 
 #[test]
 fn stats_count_isend_wait_pairing() {
-    World::run(2, |c| {
+    // Buffered accounting: isends complete (and count as sends) at post.
+    World::run_with_transport(2, Transport::Buffered, |c| {
         if c.rank() == 0 {
             let r1 = c.isend(&Tensor::full(&[10], 1.0), 1, 1);
             let r2 = c.isend(&Tensor::full(&[5], 2.0), 1, 2);
@@ -241,6 +333,31 @@ fn stats_count_isend_wait_pairing() {
             assert_eq!(c.wait(r2), 20);
             let s = c.stats();
             assert_eq!((s.isends, s.waits), (2, 2), "drained: posts == waits");
+        } else {
+            c.recv(0, 1);
+            c.recv(0, 2);
+        }
+    });
+}
+
+#[test]
+fn stats_count_isend_wait_pairing_under_rendezvous() {
+    // Rendezvous accounting: posting only counts the isend; the send (and
+    // its bytes/secs) are credited at match time, inside the wait.
+    World::run_with_transport(2, Transport::Rendezvous, |c| {
+        if c.rank() == 0 {
+            let r1 = c.isend(&Tensor::full(&[10], 1.0), 1, 1);
+            let r2 = c.isend(&Tensor::full(&[5], 2.0), 1, 2);
+            let s = c.stats();
+            assert_eq!((s.isends, s.waits), (2, 0));
+            assert_eq!((s.sends, s.bytes_sent), (0, 0), "no send completed before the match");
+            assert_eq!(c.wait(r1), 40);
+            let s = c.stats();
+            assert_eq!((s.sends, s.bytes_sent), (1, 40), "send credited at match time");
+            assert_eq!(c.wait(r2), 20);
+            let s = c.stats();
+            assert_eq!((s.isends, s.waits), (2, 2), "drained: posts == waits");
+            assert_eq!((s.sends, s.bytes_sent), (2, 60));
         } else {
             c.recv(0, 1);
             c.recv(0, 2);
@@ -291,9 +408,233 @@ fn world_returns_rank_ordered_results() {
 #[test]
 #[should_panic(expected = "deadlock watchdog")]
 fn watchdog_fires_on_missing_message() {
-    World::run_with_timeout(2, std::time::Duration::from_secs(1), |c| {
+    World::run_with_timeout(2, Duration::from_secs(1), |c| {
         if c.rank() == 1 {
             c.recv(0, 999); // nobody sends
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// Rendezvous transport semantics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rendezvous_send_blocks_until_recv_is_posted() {
+    World::run_with_transport(2, Transport::Rendezvous, |c| {
+        if c.rank() == 0 {
+            let t0 = Instant::now();
+            c.send(&Tensor::scalar(1.0), 1, 7);
+            assert!(
+                t0.elapsed() >= Duration::from_millis(80),
+                "rendezvous send returned before the matching recv was posted"
+            );
+        } else {
+            std::thread::sleep(Duration::from_millis(100));
+            assert_eq!(c.recv(0, 7).data[0], 1.0);
+        }
+    });
+}
+
+#[test]
+fn rendezvous_wait_blocks_until_match() {
+    World::run_with_transport(2, Transport::Rendezvous, |c| {
+        if c.rank() == 0 {
+            let req = c.isend(&Tensor::scalar(2.0), 1, 7);
+            let t0 = Instant::now();
+            c.wait(req);
+            assert!(
+                t0.elapsed() >= Duration::from_millis(80),
+                "rendezvous wait returned before the matching recv was posted"
+            );
+        } else {
+            std::thread::sleep(Duration::from_millis(100));
+            assert_eq!(c.recv(0, 7).data[0], 2.0);
+        }
+    });
+}
+
+#[test]
+fn isend_payload_is_pinned_at_post_time() {
+    // The fabric pins a copy at post, so mutating the caller's buffer
+    // between post and match must not leak into the delivered payload.
+    for tr in BOTH {
+        World::run_with_transport(2, tr, |c| {
+            if c.rank() == 0 {
+                let mut t = Tensor::scalar(5.0);
+                let req = c.isend(&t, 1, 3);
+                t.data[0] = 99.0; // caller reuses the buffer immediately
+                c.wait(req);
+            } else {
+                // Ensure the match happens after the mutation.
+                std::thread::sleep(Duration::from_millis(50));
+                assert_eq!(c.recv(0, 3).data[0], 5.0, "{tr:?}");
+            }
+        });
+    }
+}
+
+#[test]
+fn facing_blocking_sends_complete_under_buffered() {
+    World::run_with_transport(2, Transport::Buffered, |c| {
+        let peer = 1 - c.rank();
+        c.send(&Tensor::scalar(c.rank() as f32), peer, 1);
+        assert_eq!(c.recv(peer, 1).data[0], peer as f32);
+    });
+}
+
+#[test]
+#[should_panic(expected = "deadlock watchdog")]
+fn facing_blocking_sends_deadlock_under_rendezvous() {
+    // The head-to-head pattern at the core of the 1F1B blocking-send
+    // hazard, now reproducible on the live fabric.
+    World::run_with(2, Transport::Rendezvous, Some(Duration::from_millis(300)), |c| {
+        let peer = 1 - c.rank();
+        c.send(&Tensor::scalar(0.0), peer, 1);
+        c.recv(peer, 1);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Watchdog deadline regressions (timeout must not reset on wakeups)
+// ---------------------------------------------------------------------------
+
+/// Extract the panic message out of a caught rank panic.
+fn panic_msg(e: Box<dyn std::any::Any + Send>) -> String {
+    e.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
+#[test]
+fn watchdog_deadline_survives_busy_traffic() {
+    // Regression: the old watchdog restarted its timeout on every condvar
+    // wakeup, so a starved rank in a busy world was never caught. Rank 0
+    // streams unrelated messages into rank 2's mailbox (each push wakes
+    // rank 2's condvar) while rank 2 blocks on a message that never
+    // comes: the panic must still land at ~the configured timeout.
+    let timeout = Duration::from_millis(500);
+    let stop = AtomicBool::new(false);
+    let elapsed = World::run_with(3, Transport::Buffered, Some(timeout), |c| match c.rank() {
+        0 => {
+            let t0 = Instant::now();
+            while !stop.load(Ordering::Relaxed) && t0.elapsed() < 10 * timeout {
+                c.send(&Tensor::scalar(0.0), 2, 1); // never received
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            0.0
+        }
+        2 => {
+            let t0 = Instant::now();
+            let r = catch_unwind(AssertUnwindSafe(|| c.recv(0, 999)));
+            let secs = t0.elapsed().as_secs_f64();
+            stop.store(true, Ordering::Relaxed);
+            let msg = panic_msg(r.expect_err("starved recv must panic"));
+            assert!(msg.contains("deadlock watchdog"), "unexpected panic: {msg}");
+            secs
+        }
+        _ => 0.0,
+    })[2];
+    assert!(
+        elapsed >= 0.4,
+        "watchdog fired after {elapsed:.2}s, before the 0.5s deadline"
+    );
+    assert!(
+        elapsed < 2.5,
+        "watchdog took {elapsed:.2}s — the busy mailbox postponed the 0.5s deadline"
+    );
+}
+
+#[test]
+fn split_watchdog_deadline_survives_busy_splits() {
+    // Same regression for the split wait loop: every completed split
+    // anywhere on the fabric notifies the shared split condvar, so ranks
+    // 1-3 churning dups on their own sub-communicator used to postpone a
+    // starved rank 0 forever.
+    let timeout = Duration::from_millis(500);
+    let stop = AtomicBool::new(false);
+    let elapsed = World::run_with(4, Transport::Buffered, Some(timeout), |c| {
+        let sub = c.split(if c.rank() == 0 { 0 } else { 1 }, c.rank() as i64);
+        if c.rank() == 0 {
+            let t0 = Instant::now();
+            // This world-level split is collective over all 4 ranks, but
+            // ranks 1-3 never join it.
+            let r = catch_unwind(AssertUnwindSafe(|| c.split(0, 0)));
+            let secs = t0.elapsed().as_secs_f64();
+            stop.store(true, Ordering::Relaxed);
+            let msg = panic_msg(r.expect_err("starved split must panic"));
+            assert!(msg.contains("deadlock watchdog"), "unexpected panic: {msg}");
+            secs
+        } else {
+            let t0 = Instant::now();
+            loop {
+                // Vote collectively on exiting so no member enters a dup
+                // the others skipped.
+                let quit = stop.load(Ordering::Relaxed) || t0.elapsed() >= 10 * timeout;
+                let votes = sub.allgather(&Tensor::scalar(if quit { 1.0 } else { 0.0 }));
+                if votes.iter().any(|v| v.data[0] > 0.0) {
+                    break;
+                }
+                let _ = sub.dup();
+            }
+            0.0
+        }
+    })[0];
+    assert!(elapsed >= 0.4, "split watchdog fired after {elapsed:.2}s, before the deadline");
+    assert!(
+        elapsed < 2.5,
+        "split watchdog took {elapsed:.2}s — busy splits postponed the 0.5s deadline"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Split-slot garbage collection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn split_slots_are_garbage_collected() {
+    for tr in BOTH {
+        World::run_with_transport(4, tr, |c| {
+            let mut comms = Vec::new();
+            for _ in 0..25 {
+                comms.push(c.dup());
+            }
+            for i in 0..8 {
+                let _ = c.split((c.rank() % 2) as i64, i);
+            }
+            // After the barrier every rank has returned from every split,
+            // i.e. every slot has been read by all members and the last
+            // reader removed it.
+            c.barrier();
+            assert_eq!(c.debug_split_slots(), 0, "completed split slots must be GC'd ({tr:?})");
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strict environment parsing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hfmpi_timeout_secs_parses_strictly() {
+    // Tested at the value level: setting the real HFMPI_TIMEOUT_SECS in
+    // the process environment would race the other tests in this binary,
+    // all of which read it when spawning worlds.
+    let err = crate::util::parse_env_value::<u64>("HFMPI_TIMEOUT_SECS", "soon")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("HFMPI_TIMEOUT_SECS") && err.contains("soon"), "{err}");
+    assert_eq!(crate::util::parse_env_value::<u64>("HFMPI_TIMEOUT_SECS", "45").unwrap(), 45);
+}
+
+#[test]
+fn transport_parses_strictly() {
+    assert_eq!(Transport::parse("buffered").unwrap(), Transport::Buffered);
+    assert_eq!(Transport::parse("rendezvous").unwrap(), Transport::Rendezvous);
+    let err = Transport::parse("carrier-pigeon").unwrap_err().to_string();
+    assert!(err.contains("carrier-pigeon") && err.contains("buffered|rendezvous"), "{err}");
+    assert_eq!(Transport::default(), Transport::Buffered);
+    assert_eq!(Transport::Buffered.label(), "buffered");
+    assert_eq!(Transport::Rendezvous.label(), "rendezvous");
 }

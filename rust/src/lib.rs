@@ -54,12 +54,17 @@
 //!   skips, Fig 6), and the rendezvous deadlock checker for the §6.3
 //!   message order.
 //! - [`comm`] / [`hfmpi`] — the Communication Engine over an in-process
-//!   MPI fabric (threads as ranks, buffered sends plus MPI_Isend-style
-//!   `post_send_*`/`wait_send` for the eager IR ops, communicator-per-
-//!   partition layout, Horovod-style tensor fusion). Tag space for
-//!   (edge x microbatch) message identities — including the worst-case
-//!   *concurrently* in-flight eager sends, a static property of the
-//!   compiled program — is budget-checked at `CommEngine` construction.
+//!   MPI fabric (threads as ranks, MPI_Isend-style `post_send_*`/
+//!   `wait_send` for the eager IR ops, communicator-per-partition
+//!   layout, Horovod-style tensor fusion). The fabric implements both
+//!   p2p transports ([`hfmpi::Transport`], env `HF_TRANSPORT`):
+//!   **buffered** (MPI_Bsend — sends complete on enqueue, waits are
+//!   free) and **rendezvous** (MPI_Ssend — sends complete only against
+//!   the posted matching receive, so `wait_send` measures real
+//!   synchronization time). Tag space for (edge x microbatch) message
+//!   identities — including the worst-case *concurrently* in-flight
+//!   eager sends, a static property of the compiled program — is
+//!   budget-checked at `CommEngine` construction.
 //! - [`runtime`] — the primitive executor. The AOT/PJRT path (HLO
 //!   artifacts compiled by `python/compile/aot.py` from the JAX/Pallas
 //!   primitives in `python/compile/`) is replaced in the offline build by

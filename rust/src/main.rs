@@ -55,6 +55,8 @@ fn print_usage() {
          \x20         --sched gpipe|1f1b|interleaved_1f1b[:v=N]|zb_h1\n\
          \x20         --lr F --seed S --log-every N --eval N --lpp a,b,c\n\
          \x20         --threads T (kernel worker threads; HF_NATIVE_THREADS)\n\
+         \x20         --transport buffered|rendezvous (fabric p2p semantics;\n\
+         \x20          HF_TRANSPORT)\n\
          \x20         --trace OUT.json (per-rank hftrace -> Chrome JSON; HF_TRACE=1)\n\
          inspect:  --model M [--partitions P] [--emit-registry] [--mb B]\n\
          sim:      --model M --nodes N --ppn P --partitions K --replicas R\n\
@@ -137,6 +139,21 @@ fn trace_flag(f: &Flags) -> anyhow::Result<Option<String>> {
     Ok(f.kv.get("trace").cloned())
 }
 
+/// Parse `--transport`. Same strictness as `--sched`: a bare `--transport`
+/// hard-errors instead of silently training on the default fabric, and
+/// unknown values hard-error in `Transport::parse`. Unflagged runs fall
+/// back to `HF_TRANSPORT` (then buffered), matching `TrainConfig::new`.
+fn transport_flag(f: &Flags) -> anyhow::Result<hyparflow::hfmpi::Transport> {
+    anyhow::ensure!(
+        !f.has("transport"),
+        "--transport requires a value (buffered|rendezvous)"
+    );
+    match f.kv.get("transport") {
+        Some(v) => hyparflow::hfmpi::Transport::parse(v),
+        None => hyparflow::hfmpi::Transport::from_env(),
+    }
+}
+
 /// Export a finished trace: Chrome JSON to `path` plus the aggregate
 /// report on stdout.
 fn write_trace(trace: &hyparflow::trace::Trace, path: &str) -> anyhow::Result<()> {
@@ -157,6 +174,7 @@ fn cmd_train(args: &[String]) -> anyhow::Result<()> {
         .microbatch(f.get("mb", 8)?)
         .num_microbatches(f.get("num-mb", 1)?)
         .schedule(sched_flag(&f)?)
+        .transport(transport_flag(&f)?)
         .lr(f.get("lr", 0.05)?)
         .seed(f.get("seed", 42)?)
         .eval_batches(f.get("eval", 0)?)

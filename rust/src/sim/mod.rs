@@ -159,8 +159,9 @@ pub struct SimConfig {
     /// Send ops to compile: blocking `Send*` or eager `PostSend*`/`WaitSend`
     /// pairs (MPI_Isend/MPI_Wait).
     pub send_mode: SendMode,
-    /// Transport the DES models. `Buffered` matches the hfmpi fabric
-    /// (sends never block; posts complete at the wire); `Rendezvous`
+    /// Transport the DES models, mirroring the live fabric's
+    /// [`crate::hfmpi::Transport`]. `Buffered` (hfmpi's default) has
+    /// sends never block and posts complete at the wire; `Rendezvous`
     /// models synchronous MPI sends, where a blocking send parks the
     /// sender until the facing receive arrives and an eager post's
     /// `WaitSend` parks until the receive completes.

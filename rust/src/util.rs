@@ -72,6 +72,32 @@ pub fn env_flag(name: &str, default: bool) -> anyhow::Result<bool> {
     }
 }
 
+/// Parse an environment variable through `FromStr`, strictly: absent means
+/// `default`, present-but-unparseable is a hard error naming the variable
+/// and value — same policy as [`env_flag`], a typo'd setting must not
+/// silently select a default.
+pub fn env_parse<T: std::str::FromStr>(name: &str, default: T) -> anyhow::Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    match std::env::var(name) {
+        Err(std::env::VarError::NotPresent) => Ok(default),
+        Err(std::env::VarError::NotUnicode(v)) => anyhow::bail!("{name}={v:?} is not unicode"),
+        Ok(v) => parse_env_value(name, &v),
+    }
+}
+
+/// The value-level half of [`env_parse`], split out so strictness is unit
+/// testable for variables (like `HFMPI_TIMEOUT_SECS`) that concurrently
+/// running tests in the same binary read from the real, process-global
+/// environment.
+pub fn parse_env_value<T: std::str::FromStr>(name: &str, value: &str) -> anyhow::Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    value.parse().map_err(|e| anyhow::anyhow!("{name}={value:?}: {e}"))
+}
+
 /// Minimal fixed-width table printer for bench output.
 pub struct Table {
     headers: Vec<String>,
@@ -275,6 +301,17 @@ mod tests {
         let err = env_flag("HF_TEST_FLAG_BAD", true).unwrap_err().to_string();
         assert!(err.contains("HF_TEST_FLAG_BAD") && err.contains("banana"), "{err}");
         assert!(err.contains("1|true|on|0|false|off"), "{err}");
+    }
+
+    #[test]
+    fn env_parse_is_strict() {
+        // Distinct variable names per assertion (see env_flag_is_strict).
+        assert_eq!(env_parse("HF_TEST_PARSE_UNSET", 120u64).unwrap(), 120);
+        std::env::set_var("HF_TEST_PARSE_SET", "45");
+        assert_eq!(env_parse("HF_TEST_PARSE_SET", 120u64).unwrap(), 45);
+        std::env::set_var("HF_TEST_PARSE_BAD", "soon");
+        let err = env_parse("HF_TEST_PARSE_BAD", 120u64).unwrap_err().to_string();
+        assert!(err.contains("HF_TEST_PARSE_BAD") && err.contains("soon"), "{err}");
     }
 
     #[test]

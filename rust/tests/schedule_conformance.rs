@@ -33,6 +33,7 @@
 
 use hyparflow::api::{fit, FitResult, Strategy, TrainConfig};
 use hyparflow::graph::{zoo, ModelGraph};
+use hyparflow::hfmpi::Transport;
 use hyparflow::partition::Partitioning;
 use hyparflow::rng::Rng;
 use hyparflow::schedule::{Instr, Program, ScheduleKind, SendMode, SendSemantics};
@@ -386,7 +387,12 @@ fn eager_sends_train_bitwise_equal_to_blocking_mlp() {
     for kind in all_kinds() {
         let p = if kind.virtual_stages() > 1 { 3 } else { 4 };
         let base = mlp_cfg(Strategy::Model).partitions(p).schedule(kind);
-        let blocking = fit(&base.clone().eager_sends(false)).unwrap();
+        // The blocking legs are pinned to the buffered fabric: under
+        // `HF_TRANSPORT=rendezvous` (a CI matrix row) blocking 1F1B-family
+        // programs deadlock by design — that case is the live canary
+        // `blocking_one_f1b_deadlocks_on_the_live_rendezvous_fabric`.
+        let blocking =
+            fit(&base.clone().eager_sends(false).transport(Transport::Buffered)).unwrap();
         let eager = fit(&base.eager_sends(true)).unwrap();
         assert_eq!(
             loss_history(&blocking),
@@ -406,10 +412,51 @@ fn eager_sends_train_bitwise_equal_to_blocking_resnet() {
     // eager error posts pin real gradient payloads in flight.
     let kind = ScheduleKind::OneF1B;
     let base = resnet_cfg(Strategy::Model).partitions(4).schedule(kind);
-    let blocking = fit(&base.clone().eager_sends(false)).unwrap();
+    // Blocking leg pinned to buffered (see the mlp variant above).
+    let blocking =
+        fit(&base.clone().eager_sends(false).transport(Transport::Buffered)).unwrap();
     let eager = fit(&base.eager_sends(true)).unwrap();
     assert_eq!(loss_history(&blocking), loss_history(&eager), "loss history");
     assert_eq!(max_param_diff(&blocking, &eager), 0.0, "params");
+}
+
+#[test]
+fn eager_one_f1b_on_live_rendezvous_fabric_is_bitwise_identical_to_buffered() {
+    // (d) on the *live fabric's* transport axis: rendezvous moves send
+    // completion points to the matching receive — payloads, per-key
+    // ordering and arithmetic are untouched — so an eager program that
+    // completes on both transports trains bitwise identically on both.
+    let base = mlp_cfg(Strategy::Model)
+        .partitions(4)
+        .schedule(ScheduleKind::OneF1B)
+        .eager_sends(true);
+    let buffered = fit(&base.clone().transport(Transport::Buffered)).unwrap();
+    let rendezvous = fit(&base.transport(Transport::Rendezvous)).unwrap();
+    assert_eq!(
+        loss_history(&buffered),
+        loss_history(&rendezvous),
+        "buffered vs rendezvous loss history"
+    );
+    let d = max_param_diff(&buffered, &rendezvous);
+    assert_eq!(d, 0.0, "buffered vs rendezvous: max param diff {d}");
+}
+
+#[test]
+#[should_panic(expected = "deadlock watchdog")]
+fn blocking_one_f1b_deadlocks_on_the_live_rendezvous_fabric() {
+    // The checker-level canary above
+    // (`blocking_one_f1b_deadlocks_under_rendezvous_and_eager_fixes_it`)
+    // reproduced for real: on the rendezvous fabric the blocking 1F1B
+    // steady state puts two sends head to head and the fixed watchdog —
+    // not a hung test runner — reports the deadlock.
+    let cfg = mlp_cfg(Strategy::Model)
+        .partitions(3)
+        .lpp(vec![2, 2, 2])
+        .schedule(ScheduleKind::OneF1B)
+        .eager_sends(false)
+        .transport(Transport::Rendezvous)
+        .comm_timeout(std::time::Duration::from_secs(2));
+    let _ = fit(&cfg);
 }
 
 // ---------------------------------------------------------------------------

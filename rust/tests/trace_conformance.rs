@@ -29,8 +29,9 @@ use std::sync::{Mutex, MutexGuard};
 
 use hyparflow::api::{fit, FitResult, Strategy, TrainConfig};
 use hyparflow::graph::{zoo, ModelGraph};
+use hyparflow::hfmpi::Transport;
 use hyparflow::partition::Partitioning;
-use hyparflow::schedule::{ScheduleKind, SendMode};
+use hyparflow::schedule::{ScheduleKind, SendMode, SendSemantics};
 use hyparflow::sim::{simulate_step_traced, Platform, SimConfig};
 use hyparflow::trace::chrome::chrome_trace_json;
 use hyparflow::trace::report::TraceReport;
@@ -204,24 +205,28 @@ fn crossval_model() -> ModelGraph {
     zoo::mlp(256, &[256, 256, 256], 10)
 }
 
+/// The crossval fit configuration, parameterized by live-fabric
+/// transport (the sim side mirrors it as [`SendSemantics`]).
+fn crossval_cfg(kind: ScheduleKind, transport: Transport) -> TrainConfig {
+    TrainConfig::new(crossval_model(), Strategy::Model)
+        .partitions(2)
+        .schedule(kind)
+        .microbatch(16)
+        .num_microbatches(8)
+        .steps(4)
+        .lr(0.01)
+        .seed(7)
+        .eager_sends(true)
+        .trace(true)
+        .native_threads(1)
+        .transport(transport)
+}
+
 /// Min bubble fraction over the steady-state steps of a traced native
 /// run (step 0 is warmup — cold caches, first-touch allocation; the min
 /// is robust because transient stalls only ever inflate a step's bubble).
-fn measured_bubble(kind: ScheduleKind) -> f64 {
-    let res = fit(
-        &TrainConfig::new(crossval_model(), Strategy::Model)
-            .partitions(2)
-            .schedule(kind)
-            .microbatch(16)
-            .num_microbatches(8)
-            .steps(4)
-            .lr(0.01)
-            .seed(7)
-            .eager_sends(true)
-            .trace(true)
-            .native_threads(1),
-    )
-    .unwrap();
+fn measured_bubble(kind: ScheduleKind, transport: Transport) -> f64 {
+    let res = fit(&crossval_cfg(kind, transport)).unwrap();
     let trace = res.trace.expect("traced run must return a trace");
     let steps = trace.split_steps();
     assert_eq!(steps.len(), 4, "trace should split at every OptStep");
@@ -231,7 +236,7 @@ fn measured_bubble(kind: ScheduleKind) -> f64 {
         .fold(f64::INFINITY, f64::min)
 }
 
-fn simulated_bubble(kind: ScheduleKind, calibration: &str) -> f64 {
+fn simulated_bubble(kind: ScheduleKind, sem: SendSemantics, calibration: &str) -> f64 {
     let g = crossval_model();
     // Same auto-partitioning `fit` resolves for Strategy::Model over 2
     // ranks (both schedules here are single-chunk).
@@ -242,6 +247,7 @@ fn simulated_bubble(kind: ScheduleKind, calibration: &str) -> f64 {
     cfg.num_microbatches = 8;
     cfg.schedule = kind;
     cfg.send_mode = SendMode::Eager;
+    cfg.transport = sem;
     cfg.cost.apply_calibration(calibration).unwrap();
     let (_, trace) = simulate_step_traced(&g, &pt, &cfg);
     TraceReport::from_trace(&trace).bubble_frac
@@ -251,18 +257,59 @@ fn simulated_bubble(kind: ScheduleKind, calibration: &str) -> f64 {
 fn measured_bubble_fraction_cross_validates_calibrated_simulator() {
     let _guard = fit_lock();
     // Calibrate the cost model on this host's kernels with the same
-    // 1-worker pool the measured runs use.
+    // 1-worker pool the measured runs use. The third leg runs the live
+    // rendezvous fabric against the sim's rendezvous semantics: waits now
+    // measure real synchronization, and both sides must still agree.
     hyparflow::runtime::pool::set_num_threads(1);
     let cal = hyparflow::figures::measure_calibration().unwrap();
-    for kind in [ScheduleKind::GPipe, ScheduleKind::OneF1B] {
-        let sim = simulated_bubble(kind, &cal);
-        let real = measured_bubble(kind);
-        assert!(sim > 0.0 && sim < 1.0, "{}: sim bubble {sim:.3}", kind.label());
+    for (kind, transport, sem) in [
+        (ScheduleKind::GPipe, Transport::Buffered, SendSemantics::Buffered),
+        (ScheduleKind::OneF1B, Transport::Buffered, SendSemantics::Buffered),
+        (ScheduleKind::OneF1B, Transport::Rendezvous, SendSemantics::Rendezvous),
+    ] {
+        let sim = simulated_bubble(kind, sem, &cal);
+        let real = measured_bubble(kind, transport);
+        assert!(
+            sim > 0.0 && sim < 1.0,
+            "{} {}: sim bubble {sim:.3}",
+            kind.label(),
+            transport.label()
+        );
         assert!(
             (real - sim).abs() <= BUBBLE_TOLERANCE,
-            "{}: measured bubble {real:.3} vs simulated {sim:.3} disagree beyond {}",
+            "{} {}: measured bubble {real:.3} vs simulated {sim:.3} disagree beyond {}",
             kind.label(),
+            transport.label(),
             BUBBLE_TOLERANCE,
         );
     }
+}
+
+#[test]
+fn traced_rendezvous_run_reports_real_overlap() {
+    let _guard = fit_lock();
+    // Under the rendezvous fabric an eager post's wait parks until the
+    // matching receive, so the post→wait send windows cover real elapsed
+    // time — and 1F1B computes while sends are in flight, so some of that
+    // window time must overlap same-rank compute. (Under buffered both
+    // numbers exist too, but windows there only measure enqueue latency;
+    // rendezvous is where `overlap_secs` proves actual comm/compute
+    // overlap on the live fabric.)
+    hyparflow::runtime::pool::set_num_threads(1);
+    let res = fit(&crossval_cfg(ScheduleKind::OneF1B, Transport::Rendezvous)).unwrap();
+    let trace = res.trace.expect("traced run must return a trace");
+    let rep = TraceReport::from_trace(&trace);
+    assert!(rep.window_secs > 0.0, "rendezvous run recorded no send windows");
+    assert!(
+        rep.overlap_secs > 0.0,
+        "rendezvous eager run shows no comm/compute overlap \
+         (windows {:.6}s, overlap {:.6}s)",
+        rep.window_secs,
+        rep.overlap_secs
+    );
+    assert!(
+        (0.0..=1.0).contains(&rep.overlap_frac),
+        "overlap_frac {}",
+        rep.overlap_frac
+    );
 }
